@@ -1,0 +1,75 @@
+"""Shared benchmark plumbing: one trained system + CSV emission.
+
+``REPRO_BENCH_SCALE`` (0 < s ≤ 1) scales pool sizes and shuffle counts for
+quick runs; the full paper-scale settings are the default.
+"""
+from __future__ import annotations
+
+import functools
+import os
+import sys
+import time
+
+import numpy as np
+
+from repro.experiments.setup import (POOL_NAMES, POOL_SIZES, build_system,
+                                     failing_pool)
+
+print = functools.partial(print, flush=True)  # noqa: A001
+
+SCALE = float(os.environ.get("REPRO_BENCH_SCALE", "1.0"))
+N_SHUFFLES = max(1, int(round(5 * min(1.0, SCALE * 2))))
+N_STAGES = 5
+
+_SYSTEM = None
+_RAR_RUNS: dict = {}
+
+
+def get_system():
+    global _SYSTEM
+    if _SYSTEM is None:
+        t0 = time.time()
+        _SYSTEM = build_system(verbose=True)
+        print(f"[bench] system ready in {time.time() - t0:.0f}s",
+              file=sys.stderr)
+    return _SYSTEM
+
+
+def get_rar_runs(domain: int, n_shuffles: int, n_stages: int):
+    """Memoized RAR experiment runs (fig4/5/6 and fig7 share them)."""
+    from repro.experiments.stages import run_rar_experiment
+    key = (domain, n_shuffles, n_stages)
+    if key not in _RAR_RUNS:
+        system = get_system()
+        pool = get_pool(domain)
+        runs = []
+        for sh in range(n_shuffles):
+            t0 = time.time()
+            results, rar = run_rar_experiment(system, pool,
+                                              n_stages=n_stages, seed=sh)
+            runs.append(results)
+            print(f"#   shuffle {sh}: strong calls/stage "
+                  f"{[r.strong_calls for r in results]}, aligned "
+                  f"{[r.aligned for r in results]} "
+                  f"({time.time() - t0:.0f}s)")
+        _RAR_RUNS[key] = runs
+    return _RAR_RUNS[key]
+
+
+def get_pool(domain: int):
+    n = max(40, int(POOL_SIZES[domain] * SCALE))
+    return failing_pool(get_system(), domain, n=n)
+
+
+def pool_name(domain: int) -> str:
+    return POOL_NAMES[domain]
+
+
+def emit(rows: list[dict], header: list[str] | None = None) -> None:
+    """CSV to stdout (the benchmarks/run.py contract)."""
+    if not rows:
+        return
+    header = header or list(rows[0])
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(r.get(h, "")) for h in header))

@@ -1,0 +1,11 @@
+"""Fig. 5 — same protocol as Fig. 4 on the moral-scenarios analog pool
+(domain 2): the paper shows the trends are not domain-specific."""
+from benchmarks import fig4_rar_vs_baselines as fig4
+
+
+def main() -> None:
+    fig4.run(domain=2, tag="fig5")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Fig. 6 — same protocol as Fig. 4 on the high-school-psychology analog
+pool (domain 1)."""
+from benchmarks import fig4_rar_vs_baselines as fig4
+
+
+def main() -> None:
+    fig4.run(domain=1, tag="fig6")
+
+
+if __name__ == "__main__":
+    main()

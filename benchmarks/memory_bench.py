@@ -1,0 +1,44 @@
+"""Memory-retrieval microbenchmark: the RAR data plane (fused cosine top-1)
+vs. store capacity — us/query on this host (jnp reference path) plus the
+derived TPU roofline of the Pallas kernel (bytes-bound).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, print
+from repro.kernels import ref
+from repro.launch.mesh import HBM_BW
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    rows = []
+    for C in (1024, 4096, 16384, 65536):
+        E = 384
+        mem = rng.normal(size=(C, E)).astype(np.float32)
+        mem /= np.linalg.norm(mem, axis=1, keepdims=True)
+        q = mem[3]
+        mask = np.ones(C, bool)
+        memj, qj, maskj = map(jnp.asarray, (mem, q, mask))
+        fn = jax.jit(ref.memory_top1)
+        fn(memj, qj, maskj)[0].block_until_ready()
+        t0 = time.perf_counter()
+        iters = 50
+        for _ in range(iters):
+            s, i = fn(memj, qj, maskj)
+        s.block_until_ready()
+        us = (time.perf_counter() - t0) / iters * 1e6
+        # TPU kernel is HBM-bound: one pass over the store
+        tpu_us = (C * E * 4) / HBM_BW * 1e6
+        rows.append({"capacity": C, "us_per_query_cpu": round(us, 1),
+                     "tpu_roofline_us": round(tpu_us, 2)})
+    emit(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""§Roofline — render the per-(arch × shape × mesh) roofline table from the
+dry-run sweep results (experiments/dryrun_results.json).
+
+Run the sweep first:
+    PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from benchmarks.common import emit, print
+
+RESULTS = os.environ.get("REPRO_DRYRUN_RESULTS",
+                         "experiments/dryrun_results.json")
+
+
+def load() -> list[dict]:
+    if not os.path.exists(RESULTS):
+        print(f"# roofline: no dry-run results at {RESULTS}; run "
+              f"python -m repro.launch.dryrun --all --both-meshes first",
+              file=sys.stderr)
+        return []
+    with open(RESULTS) as f:
+        return json.load(f)
+
+
+def main() -> None:
+    rows = []
+    for rec in sorted(load(), key=lambda r: (r["arch"], r["shape"],
+                                             r["multi_pod"],
+                                             r.get("variant", "baseline"))):
+        base = {"arch": rec["arch"], "shape": rec["shape"],
+                "mesh": "2x16x16" if rec["multi_pod"] else "16x16",
+                "variant": rec.get("variant", "baseline")}
+        if rec["status"] == "skipped":
+            rows.append(dict(base, status="skipped"))
+            continue
+        if rec["status"] != "ok":
+            rows.append(dict(base, status="FAILED"))
+            continue
+        roof = rec["roofline"]
+        rows.append({
+            **base,
+            "status": "ok",
+            "compute_ms": round(roof["compute_s"] * 1e3, 4),
+            "memory_ms": round(roof["memory_s"] * 1e3, 4),
+            "collective_ms": round(roof["collective_s"] * 1e3, 4),
+            "dominant": roof["dominant"],
+            "useful_flops_ratio":
+                round(rec.get("useful_flops_ratio") or 0.0, 4),
+            "hbm_gb_per_device":
+                round((rec["memory"].get("argument_bytes") or 0) / 2 ** 30
+                      + (rec["memory"].get("temp_bytes") or 0) / 2 ** 30, 2),
+        })
+    emit(rows, ["arch", "shape", "mesh", "variant", "status", "compute_ms",
+                "memory_ms", "collective_ms", "dominant",
+                "useful_flops_ratio", "hbm_gb_per_device"])
+
+
+if __name__ == "__main__":
+    main()

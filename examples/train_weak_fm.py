@@ -1,0 +1,28 @@
+"""Train a zoo architecture (reduced config) with the framework's training
+substrate — the '~100M-model for a few hundred steps' driver, sized to
+this CPU host. Pick any of the 10 assigned architectures.
+
+    PYTHONPATH=src python examples/train_weak_fm.py --arch olmo-1b \
+        --steps 200 --batch 8 --seq 64
+"""
+import argparse
+
+from repro.launch.train import train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt", default=".cache/example_weak_fm.npz")
+    args = ap.parse_args()
+    metrics = train(args.arch, smoke=True, steps=args.steps,
+                    batch=args.batch, seq=args.seq, lr=1e-3, ckpt=args.ckpt)
+    print(f"final metrics: {metrics}")
+    assert metrics["loss"] < 4.0, "loss should have dropped well below init"
+
+
+if __name__ == "__main__":
+    main()

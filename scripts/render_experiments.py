@@ -1,0 +1,61 @@
+"""Render EXPERIMENTS.md sections from artifacts:
+
+* §Dry-run / §Roofline tables from experiments/dryrun_results.json
+* §Claims summary from bench_output.txt (if present)
+
+Usage: PYTHONPATH=src python scripts/render_experiments.py > /tmp/sections.md
+"""
+import json
+import os
+import sys
+
+RESULTS = "experiments/dryrun_results.json"
+
+
+def fmt_bytes(n):
+    if n is None:
+        return "-"
+    return f"{n / 2**30:.2f}"
+
+
+def main() -> None:
+    with open(RESULTS) as f:
+        recs = json.load(f)
+    recs.sort(key=lambda r: (r.get("variant", "baseline") != "baseline",
+                             r["arch"], r["shape"], r["multi_pod"]))
+
+    print("### Dry-run + roofline table\n")
+    print("| arch | shape | mesh | variant | status | compile s | "
+          "args GiB/dev | temp GiB/dev | compute ms | memory ms | "
+          "collective ms | dominant | useful-FLOPs |")
+    print("|" + "---|" * 13)
+    for r in recs:
+        mesh = "2x16x16" if r["multi_pod"] else "16x16"
+        var = r.get("variant", "baseline")
+        if r["status"] != "ok":
+            print(f"| {r['arch']} | {r['shape']} | {mesh} | {var} | "
+                  f"{r['status']} | - | - | - | - | - | - | - | - |")
+            continue
+        roof = r["roofline"]
+        mem = r["memory"]
+        print(f"| {r['arch']} | {r['shape']} | {mesh} | {var} | ok | "
+              f"{r['compile_s']} | {fmt_bytes(mem['argument_bytes'])} | "
+              f"{fmt_bytes(mem['temp_bytes'])} | "
+              f"{roof['compute_s'] * 1e3:.3f} | "
+              f"{roof['memory_s'] * 1e3:.3f} | "
+              f"{roof['collective_s'] * 1e3:.3f} | {roof['dominant']} | "
+              f"{(r.get('useful_flops_ratio') or 0):.3f} |")
+
+    # dominant-term stats
+    doms = {}
+    for r in recs:
+        if r["status"] == "ok" and r.get("variant", "baseline") == "baseline":
+            doms.setdefault(r["roofline"]["dominant"], []).append(
+                (r["arch"], r["shape"], "mp" if r["multi_pod"] else "sp"))
+    print("\n### Dominant-term distribution (baseline)\n")
+    for k, v in sorted(doms.items()):
+        print(f"* **{k}**: {len(v)} pairs")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""The RAR evaluation system configs — the paper's own experiment models.
+
+Analog mapping (paper → this framework):
+
+* Mistral-7B-instruct (weak FM)  → ``WEAK``: 3-layer dense transformer
+  trained on a *subset* of skills unaided + guide-following in-context.
+* GPT-4o / Llama-3-70B (strong)  → ``STRONG``: 6-layer dense transformer
+  trained on all skills + guide generation.
+* all-MiniLM-L12-v2 (embedder)   → ``EMBEDDER``: 4-layer contrastive
+  encoder, 384-d output, cosine indexing.
+
+The cost asymmetry the router exploits is real: STRONG is ~9× the FLOPs
+of WEAK per token. At production scale any zoo architecture
+(``repro.configs.get(...)``) slots into either tier; these tiny instances
+exist so the full e2e evaluation runs on CPU.
+"""
+import dataclasses
+
+from repro.core.embedder import EmbedderConfig
+from repro.data.tokenizer import Vocab
+from repro.models.config import ModelConfig
+
+_VOCAB = Vocab(n_domains=3)
+
+WEAK = ModelConfig(
+    name="rar-weak",
+    family="dense",
+    num_layers=3,
+    d_model=128,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=32,
+    d_ff=384,
+    vocab_size=_VOCAB.size,
+    rope_theta=10_000.0,
+    tie_embeddings=False,
+    remat=False,
+    param_dtype="float32",
+    source="paper-analog: Mistral-7B (weak tier)",
+)
+
+STRONG = ModelConfig(
+    name="rar-strong",
+    family="dense",
+    num_layers=4,
+    d_model=192,
+    num_heads=6,
+    num_kv_heads=6,
+    head_dim=32,
+    d_ff=576,
+    vocab_size=_VOCAB.size,
+    rope_theta=10_000.0,
+    tie_embeddings=False,
+    remat=False,
+    param_dtype="float32",
+    source="paper-analog: gpt-4o / Llama-3-70B (strong tier)",
+)
+
+EMBEDDER = EmbedderConfig(
+    vocab_size=_VOCAB.size,
+    d_model=128,
+    num_layers=4,
+    num_heads=4,
+    d_ff=256,
+    embed_dim=384,
+)
+
+FULL = STRONG  # registry convention
+SMOKE = dataclasses.replace(WEAK, name="rar-weak-smoke", num_layers=2)

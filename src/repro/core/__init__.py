@@ -1,0 +1,6 @@
+from repro.core.rar import RAR, RARConfig, Outcome
+from repro.core.fm import FMTier
+from repro.core import memory, embedder, router
+
+__all__ = ["RAR", "RARConfig", "Outcome", "FMTier", "memory", "embedder",
+           "router"]

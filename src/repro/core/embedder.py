@@ -1,0 +1,127 @@
+"""Request/response embedding encoder — the all-MiniLM-L12-v2 analog.
+
+A small bidirectional transformer encoder, mean-pooled over non-PAD
+positions, projected to 384 dims and L2-normalized (matching the paper's
+384-d MiniLM embeddings + cosine indexing). Trained with an NT-Xent
+contrastive objective where questions sharing a latent skill are positives
+— the same supervision family sentence-transformers are trained with.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import tokenizer as tk
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbedderConfig:
+    vocab_size: int = 128
+    d_model: int = 128
+    num_layers: int = 4
+    num_heads: int = 4
+    d_ff: int = 256
+    embed_dim: int = 384          # output dimension (paper: MiniLM 384-d)
+    rope_theta: float = 10_000.0
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.num_heads
+
+
+def init_params(cfg: EmbedderConfig, key: jax.Array) -> Any:
+    k_embed, k_layers, k_proj = jax.random.split(key, 3)
+
+    def layer_init(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "ln1": L.rmsnorm_init(cfg.d_model),
+            "attn": L.attention_block_init(k1, cfg.d_model, cfg.num_heads,
+                                           cfg.num_heads, cfg.head_dim,
+                                           dtype=jnp.float32),
+            "ln2": L.rmsnorm_init(cfg.d_model),
+            "mlp": L.mlp_init(k2, cfg.d_model, cfg.d_ff, dtype=jnp.float32),
+        }
+
+    return {
+        "embed": L.embed_init(k_embed, (cfg.vocab_size, cfg.d_model)),
+        "layers": jax.vmap(layer_init)(jax.random.split(k_layers,
+                                                        cfg.num_layers)),
+        "final_norm": L.rmsnorm_init(cfg.d_model),
+        "proj": L.dense_init(k_proj, (cfg.d_model, cfg.embed_dim)),
+    }
+
+
+def embed(cfg: EmbedderConfig, params: Any, tokens: jax.Array) -> jax.Array:
+    """tokens: (B, S) int32 (PAD=0 ignored) -> (B, embed_dim) unit-norm f32."""
+    B, S = tokens.shape
+    x = params["embed"][tokens] * cfg.d_model ** 0.5
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    mask = (tokens != tk.PAD)
+
+    def body(carry, lp):
+        h = L.rmsnorm(lp["ln1"], carry)
+        q, k, v = L.attention_qkv(lp["attn"], h, positions, cfg.rope_theta)
+        # bidirectional attention, PAD positions masked out of keys
+        kpos = jnp.where(mask, positions, -10_000_000)
+        attn = L.attention(q, k, v, q_positions=positions, k_positions=kpos,
+                           causal=False, window=0)
+        h = carry + L.attention_out(lp["attn"], attn)
+        h2 = L.rmsnorm(lp["ln2"], h)
+        return h + L.mlp(lp["mlp"], h2), None
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = L.rmsnorm(params["final_norm"], x)
+    w = mask.astype(jnp.float32)[..., None]
+    pooled = jnp.sum(x * w, axis=1) / jnp.maximum(jnp.sum(w, axis=1), 1.0)
+    out = pooled @ params["proj"]
+    return out / jnp.maximum(jnp.linalg.norm(out, axis=-1, keepdims=True),
+                             1e-9)
+
+
+def nt_xent_loss(cfg: EmbedderConfig, params: Any, tokens: jax.Array,
+                 skill_ids: jax.Array, temperature: float = 0.1
+                 ) -> jax.Array:
+    """NT-Xent with same-skill positives (multi-positive InfoNCE)."""
+    z = embed(cfg, params, tokens)                   # (N, E), unit
+    sim = z @ z.T / temperature                      # (N, N)
+    N = z.shape[0]
+    eye = jnp.eye(N, dtype=bool)
+    pos = (skill_ids[:, None] == skill_ids[None, :]) & ~eye
+    sim = jnp.where(eye, -1e9, sim)
+    logp = jax.nn.log_softmax(sim, axis=-1)
+    pos_f = pos.astype(jnp.float32)
+    per_anchor = jnp.sum(logp * pos_f, axis=-1) / jnp.maximum(
+        jnp.sum(pos_f, axis=-1), 1.0)
+    return -jnp.mean(per_anchor)
+
+
+def make_train_step(cfg: EmbedderConfig, lr: float = 3e-4):
+    @jax.jit
+    def step(params, opt, tokens, skill_ids):
+        loss, grads = jax.value_and_grad(
+            partial(nt_xent_loss, cfg))(params, tokens, skill_ids)
+        # simple Adam
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        t = opt["t"] + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g,
+                          opt["mu"], grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                          opt["nu"], grads)
+        params = jax.tree.map(
+            lambda p, m, v: p - lr * (m / (1 - b1 ** t)) /
+            (jnp.sqrt(v / (1 - b2 ** t)) + eps), params, mu, nu)
+        return params, {"t": t, "mu": mu, "nu": nu}, loss
+
+    return step
+
+
+def init_opt(params: Any) -> dict:
+    z = jax.tree.map(jnp.zeros_like, params)
+    return {"t": jnp.zeros((), jnp.int32), "mu": z,
+            "nu": jax.tree.map(jnp.zeros_like, params)}

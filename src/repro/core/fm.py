@@ -1,0 +1,67 @@
+"""FM tiers — a weak or strong foundation model behind a uniform serving
+facade, with per-call cost accounting (the quantity RAR minimizes).
+
+The tier wraps a trained model + the batched serving engine. Costs are
+reported in FLOPs derived from the architecture config (6·N_active per
+token), so heterogeneous tiers (an SSM edge model vs. a dense cloud model)
+compare on one axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import tokenizer as tk
+from repro.data.tokenizer import Vocab
+from repro.models.config import ModelConfig
+from repro.serving.engine import ServingEngine
+
+
+@dataclasses.dataclass
+class FMTier:
+    name: str
+    cfg: ModelConfig
+    engine: ServingEngine
+    vocab: Vocab
+
+    @classmethod
+    def create(cls, name: str, cfg: ModelConfig, params: Any,
+               vocab: Vocab) -> "FMTier":
+        return cls(name=name, cfg=cfg, engine=ServingEngine(cfg, params),
+                   vocab=vocab)
+
+    # ------------------------------------------------------------------
+    @property
+    def calls(self) -> int:
+        return self.engine.calls
+
+    @property
+    def flops_spent(self) -> float:
+        return self.engine.flops_spent
+
+    # ------------------------------------------------------------------
+    def answer_batch(self, prompts: np.ndarray) -> np.ndarray:
+        """prompts: (B, Lp) uniform-length question prompts ending in ANS.
+        Returns (B,) answer indices in [0, 4) (-1 if the model emitted a
+        non-option token)."""
+        out = np.asarray(self.engine.generate(
+            {"tokens": jnp.asarray(prompts)}, max_new=1))
+        ans = out[:, 0] - tk.OPTION_A
+        ans[(ans < 0) | (ans > 3)] = -1
+        return ans
+
+    def generate_guides(self, requests: np.ndarray,
+                        guide_len: int) -> np.ndarray:
+        """requests: (B, Lr) guide-request prompts. Returns (B, guide_len)
+        guide token blocks: [GUIDE_START, hints..., GUIDE_END, PAD...]."""
+        hints = np.asarray(self.engine.generate(
+            {"tokens": jnp.asarray(requests)}, max_new=2))
+        B = hints.shape[0]
+        guides = np.full((B, guide_len), tk.PAD, np.int32)
+        guides[:, 0] = tk.GUIDE_START
+        guides[:, 1:3] = hints
+        guides[:, 3] = tk.GUIDE_END
+        return guides

@@ -1,0 +1,121 @@
+"""Skill & guide memory — the paper's vector DB (§III-F), device-resident.
+
+A fixed-capacity ring of request embeddings with per-entry metadata:
+
+* ``has_guide`` — entry stores a guide (Case 2) vs. a bare skill (Case 1),
+* ``hard``     — weak FM failed even with guides (Case 3): route strong,
+* ``added_at`` — logical time of insertion (drives Case-3 re-probing),
+* ``guide``    — fixed-width guide token block.
+
+Static shapes keep every operation jit-compatible; the similarity search is
+a fused cosine/top-1 over the full store — the Pallas kernel in
+:mod:`repro.kernels.memory_topk` implements the same contract blocked for
+VMEM, and :func:`query` routes through its jnp reference on CPU.
+Eviction is FIFO (ring pointer), the capacity is a config knob.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryConfig:
+    capacity: int = 4096
+    embed_dim: int = 384
+    guide_len: int = 8
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class MemoryState:
+    emb: jax.Array        # (C, E) f32, rows L2-normalized (or zero)
+    guide: jax.Array      # (C, G) int32
+    has_guide: jax.Array  # (C,) bool
+    hard: jax.Array       # (C,) bool
+    valid: jax.Array      # (C,) bool
+    added_at: jax.Array   # (C,) int32 logical time
+    ptr: jax.Array        # () int32 ring insert pointer
+
+    @property
+    def size(self) -> int:
+        return int(jnp.sum(self.valid))
+
+
+def init_memory(cfg: MemoryConfig) -> MemoryState:
+    C, E, G = cfg.capacity, cfg.embed_dim, cfg.guide_len
+    return MemoryState(
+        emb=jnp.zeros((C, E), jnp.float32),
+        guide=jnp.zeros((C, G), jnp.int32),
+        has_guide=jnp.zeros((C,), bool),
+        hard=jnp.zeros((C,), bool),
+        valid=jnp.zeros((C,), bool),
+        added_at=jnp.zeros((C,), jnp.int32),
+        ptr=jnp.zeros((), jnp.int32),
+    )
+
+
+@jax.jit
+def add(state: MemoryState, emb: jax.Array, guide: jax.Array,
+        has_guide: jax.Array, hard: jax.Array,
+        now: jax.Array) -> MemoryState:
+    """Insert one entry at the ring pointer (FIFO eviction)."""
+    i = state.ptr % state.emb.shape[0]
+    return MemoryState(
+        emb=state.emb.at[i].set(emb),
+        guide=state.guide.at[i].set(guide),
+        has_guide=state.has_guide.at[i].set(has_guide),
+        hard=state.hard.at[i].set(hard),
+        valid=state.valid.at[i].set(True),
+        added_at=state.added_at.at[i].set(now),
+        ptr=state.ptr + 1,
+    )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class QueryResult:
+    index: jax.Array      # () int32 — argmax row (undefined if sim < -1)
+    sim: jax.Array        # () f32 cosine of best row (-2 if store empty)
+    has_guide: jax.Array
+    hard: jax.Array
+    guide: jax.Array      # (G,) int32
+    added_at: jax.Array
+
+
+@partial(jax.jit, static_argnames=("guides_only",))
+def query(state: MemoryState, emb: jax.Array,
+          guides_only: bool = False) -> QueryResult:
+    """Top-1 cosine search. ``guides_only`` restricts to guide entries
+    (the guide-memory view used during shadow inference)."""
+    mask = state.valid
+    if guides_only:
+        mask = mask & state.has_guide
+    sims, idx = kops.memory_top1(state.emb, emb, mask)
+    return QueryResult(
+        index=idx,
+        sim=sims,
+        has_guide=state.has_guide[idx],
+        hard=state.hard[idx],
+        guide=state.guide[idx],
+        added_at=state.added_at[idx],
+    )
+
+
+@jax.jit
+def mark_soft(state: MemoryState, index: jax.Array) -> MemoryState:
+    """Clear a hard flag after a successful re-probe (Case 3 → Case 1/2)."""
+    return dataclasses.replace(state, hard=state.hard.at[index].set(False))
+
+
+@jax.jit
+def touch(state: MemoryState, index: jax.Array,
+          now: jax.Array) -> MemoryState:
+    """Refresh an entry's timestamp (restarts the re-probe cool-down)."""
+    return dataclasses.replace(state,
+                               added_at=state.added_at.at[index].set(now))

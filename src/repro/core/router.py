@@ -1,0 +1,65 @@
+"""Static predictive routing (§III-C) — the RouteLLM-style front gate.
+
+Two implementations, matching the paper's evaluation:
+
+* :class:`LearnedRouter` — logistic regression over request embeddings,
+  trained on profiling data (weak-FM success labels), the analog of the
+  preference-data-trained model routers the paper builds on.
+* :class:`OracleRouter` — the paper's "ideal static router" baseline: the
+  eval set is profiled with the weak FM beforehand, and exactly the
+  samples the weak FM answered unaided are routed weak; everything else
+  goes strong. Static post-deployment, like a perfectly-trained router.
+
+Both return True = route to the WEAK model.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class LearnedRouter:
+    w: jax.Array          # (E,)
+    b: jax.Array          # ()
+    threshold: float = 0.5
+
+    def prob_weak_ok(self, emb: jax.Array) -> jax.Array:
+        return jax.nn.sigmoid(emb @ self.w + self.b)
+
+    def route_weak(self, emb: jax.Array) -> bool:
+        return bool(self.prob_weak_ok(emb) >= self.threshold)
+
+
+def train_router(embs: np.ndarray, success: np.ndarray, *,
+                 steps: int = 500, lr: float = 0.5,
+                 threshold: float = 0.5) -> LearnedRouter:
+    """Logistic regression by full-batch gradient descent."""
+    X = jnp.asarray(embs, jnp.float32)
+    y = jnp.asarray(success, jnp.float32)
+
+    def loss(params):
+        w, b = params
+        logits = X @ w + b
+        return jnp.mean(jnp.maximum(logits, 0) - logits * y +
+                        jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+    params = (jnp.zeros((X.shape[1],), jnp.float32), jnp.zeros(()))
+    grad = jax.jit(jax.grad(loss))
+    for _ in range(steps):
+        g = grad(params)
+        params = jax.tree.map(lambda p, gg: p - lr * gg, params, g)
+    return LearnedRouter(w=params[0], b=params[1], threshold=threshold)
+
+
+@dataclasses.dataclass
+class OracleRouter:
+    """Profiled on the eval set: routes weak iff the weak FM answered this
+    exact sample unaided during profiling (paper §IV-B1)."""
+    weak_ok_keys: set
+
+    def route_weak_key(self, key) -> bool:
+        return key in self.weak_ok_keys

@@ -1,0 +1,4 @@
+from repro.data.tokenizer import Vocab
+from repro.data.tasks import TaskSuite, TaskSuiteConfig
+
+__all__ = ["Vocab", "TaskSuite", "TaskSuiteConfig"]

@@ -1,0 +1,202 @@
+"""The paper's experiment procedure (§IV-A3): multi-stage sequential
+serving over shuffled "failing sample" pools, plus all comparison methods
+of RQ1 (standalone weak/strong, weak+CoT, oracle static router).
+
+A *stage* = one sequential pass over the pool (RAR's memory persists
+across stages); an *experiment* = ``n_stages`` stages over one shuffle;
+results are reported mean±std over ``n_shuffles`` shuffles, exactly like
+Figs. 4–6.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.rar import RAR, RARConfig
+from repro.experiments.setup import TrainedSystem
+
+Sample = tuple[int, int, int]   # (domain, skill, operand)
+
+
+@dataclasses.dataclass
+class StageResult:
+    n: int
+    aligned: int
+    strong_calls: int
+    guides_from_memory: int = 0
+    guides_fresh: int = 0
+    cases: dict = dataclasses.field(default_factory=dict)
+
+
+# ---------------------------------------------------------------------------
+# Shared helpers
+# ---------------------------------------------------------------------------
+
+
+def _prompts(system: TrainedSystem, pool: list[Sample]):
+    v = system.suite.vocab
+    prompts = [np.asarray(v.question(d, s, x), np.int32) for d, s, x in pool]
+    greqs = [np.asarray(v.guide_request(d, s), np.int32) for d, s, _ in pool]
+    return prompts, greqs
+
+
+def _batched_answers(tier, prompts: list[np.ndarray]) -> np.ndarray:
+    return tier.answer_batch(np.stack(prompts))
+
+
+# ---------------------------------------------------------------------------
+# RAR experiment
+# ---------------------------------------------------------------------------
+
+
+def run_rar_experiment(system: TrainedSystem, pool: list[Sample], *,
+                       n_stages: int = 5, seed: int = 0,
+                       rar_cfg: RARConfig | None = None,
+                       router_kind: str = "oracle",
+                       strong_tier=None,
+                       prepopulate_from: list[Sample] | None = None,
+                       verbose: bool = False
+                       ) -> tuple[list[StageResult], RAR]:
+    """One experiment (one shuffle). Returns per-stage results + the RAR
+    instance (memory inspectable).
+
+    ``prepopulate_from``: RQ2 inter-domain setting — run a silent warm-up
+    experiment on another domain's pool first so the guide memory is
+    populated with out-of-domain guides.
+    """
+    suite = system.suite
+    strong = strong_tier or system.strong
+    rar_cfg = rar_cfg or RARConfig(
+        reprobe_period=2 * len(pool))  # re-probe roughly every other stage
+    prompts, greqs = _prompts(system, pool)
+
+    # scoring reference: the strong FM's answers (quality is measured as
+    # alignment with the strong tier, §III-A) — scoring only, not charged.
+    strong_ref = _batched_answers(strong, prompts)
+
+    # embeddings are state-independent → compute once, look up by sample.
+    embs = system.embed_many(prompts)
+    emb_by_key = {i: embs[i] for i in range(len(pool))}
+    current: dict = {}
+
+    def embed_fn(prompt: np.ndarray) -> np.ndarray:
+        return current["emb"]
+
+    # static router
+    if router_kind == "oracle":
+        weak_ref = _batched_answers(system.weak, prompts)
+        weak_ok = {i for i in range(len(pool))
+                   if weak_ref[i] == strong_ref[i] and weak_ref[i] >= 0}
+        route_fn = lambda emb, key: key in weak_ok            # noqa: E731
+    else:
+        route_fn = lambda emb, key: system.router.route_weak(emb)  # noqa: E731
+
+    rar = RAR(system.weak, strong, embed_fn, route_fn, rar_cfg)
+
+    if prepopulate_from is not None:
+        pre_prompts, pre_greqs = _prompts(system, prepopulate_from)
+        pre_embs = system.embed_many(pre_prompts)
+        for i in range(len(prepopulate_from)):
+            current["emb"] = pre_embs[i]
+            rar.process(pre_prompts[i], pre_greqs[i], key=None)
+        # freeze: RQ2 only re-uses existing guides, no fresh generation
+        rar.cfg = dataclasses.replace(rar.cfg, allow_fresh_guides=False)
+        rar.weak.engine.calls = 0
+        rar.strong.engine.calls = 0
+
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(len(pool))
+
+    results = []
+    for stage in range(n_stages):
+        aligned = strong_calls = gmem = gfresh = 0
+        cases: dict = {}
+        for i in order:
+            current["emb"] = emb_by_key[int(i)]
+            out = rar.process(prompts[int(i)], greqs[int(i)], key=int(i))
+            ok = int(out.response == strong_ref[int(i)])
+            aligned += ok
+            strong_calls += out.strong_calls
+            cases[out.case] = cases.get(out.case, 0) + 1
+            # Fig. 7 accounting: aligned *guided* responses by guide source
+            if ok and out.guide_source == "memory":
+                gmem += 1
+            elif ok and out.guide_source == "fresh":
+                gfresh += 1
+        results.append(StageResult(
+            n=len(pool), aligned=aligned, strong_calls=strong_calls,
+            guides_from_memory=gmem, guides_fresh=gfresh, cases=cases))
+        if verbose:
+            r = results[-1]
+            print(f"    stage {stage + 1}: aligned {r.aligned}/{r.n}, "
+                  f"strong calls {r.strong_calls}, cases {r.cases}")
+    return results, rar
+
+
+# ---------------------------------------------------------------------------
+# RQ1 baselines
+# ---------------------------------------------------------------------------
+
+
+def run_baselines(system: TrainedSystem, pool: list[Sample], *,
+                  n_stages: int = 5) -> dict[str, list[StageResult]]:
+    """Standalone weak, weak + zero-shot CoT, standalone strong, oracle
+    static router — each as per-stage results over the pool."""
+    suite = system.suite
+    prompts, greqs = _prompts(system, pool)
+    strong_ref = _batched_answers(system.strong, prompts)
+    n = len(pool)
+    out: dict[str, list[StageResult]] = {}
+
+    # standalone weak
+    weak_ans = _batched_answers(system.weak, prompts)
+    aligned = int(np.sum((weak_ans == strong_ref) & (weak_ans >= 0)))
+    out["weak"] = [StageResult(n, aligned, 0) for _ in range(n_stages)]
+
+    # weak + zero-shot CoT: the weak FM generates its own guide, then
+    # answers with it in-context (the paper's CoT comparator).
+    self_guides = system.weak.generate_guides(np.stack(greqs), 8)
+    guided = []
+    for p, g in zip(prompts, self_guides):
+        gg = g[g != 0]
+        guided.append(np.concatenate([p[:1], gg, p[1:]]).astype(np.int32))
+    cot_ans = _batched_answers(system.weak, guided)
+    aligned = int(np.sum((cot_ans == strong_ref) & (cot_ans >= 0)))
+    out["weak_cot"] = [StageResult(n, aligned, 0) for _ in range(n_stages)]
+
+    # standalone strong: perfect alignment by definition, n strong calls
+    out["strong"] = [StageResult(n, n, n) for _ in range(n_stages)]
+
+    # oracle static router: weak serves exactly the samples it aligned on
+    # during profiling; the rest go strong — static across stages.
+    weak_ok = (weak_ans == strong_ref) & (weak_ans >= 0)
+    strong_calls = int(np.sum(~weak_ok))
+    out["oracle_router"] = [StageResult(n, n, strong_calls)
+                            for _ in range(n_stages)]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Aggregation over shuffles (the paper's mean ± std presentation)
+# ---------------------------------------------------------------------------
+
+
+def aggregate_shuffles(per_shuffle: list[list[StageResult]]
+                       ) -> list[dict[str, float]]:
+    """[shuffle][stage] → per-stage mean/std of cumulative metrics."""
+    n_stages = len(per_shuffle[0])
+    rows = []
+    for s in range(n_stages):
+        cum_aligned = [sum(r[i].aligned for i in range(s + 1))
+                       for r in per_shuffle]
+        cum_strong = [sum(r[i].strong_calls for i in range(s + 1))
+                      for r in per_shuffle]
+        rows.append({
+            "stage": s + 1,
+            "cum_aligned_mean": float(np.mean(cum_aligned)),
+            "cum_aligned_std": float(np.std(cum_aligned)),
+            "cum_strong_calls_mean": float(np.mean(cum_strong)),
+            "cum_strong_calls_std": float(np.std(cum_strong)),
+        })
+    return rows

@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: flash-decode — one query token against a long KV
+cache, blocked over cache length, GQA-aware, with optional sliding window.
+
+Powers ``decode_32k`` / ``long_500k``: at 500k cache entries the score
+vector alone is 500k floats per head — this kernel streams the cache in
+(BLOCK_M, hd) tiles, keeps the online-softmax state for all G query heads
+of one KV group in VMEM, and (with ``window > 0``) skips every block
+entirely outside the attention window — the sliding-window decode variant
+reduces the memory term from O(cache) to O(window).
+
+Grid = (B, KV, nm), cache blocks innermost. cache_len rides in SMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+DEFAULT_BLOCK_M = 512
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                   acc_ref, m_ref, l_ref, *,
+                   scale: float, window: int, block_m: int):
+    im = pl.program_id(2)
+    nm = pl.num_programs(2)
+
+    @pl.when(im == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    cache_len = len_ref[0]
+    m0 = im * block_m
+    needed = m0 < cache_len
+    if window > 0:
+        needed &= m0 + block_m > cache_len - window
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # (G, hd)
+        k = k_ref[0, 0].astype(jnp.float32)               # (BM, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (G, BM)
+        pos = m0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = pos < cache_len
+        if window > 0:
+            mask &= pos >= cache_len - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                               # (G, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        v = v_ref[0, 0].astype(jnp.float32)               # (BM, hd)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr + pv
+        m_ref[...] = m_new
+
+    @pl.when(im == nm - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-37)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "window", "scale", "block_m", "interpret"))
+def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                            cache_len: jax.Array, *, window: int = 0,
+                            scale: float | None = None,
+                            block_m: int = DEFAULT_BLOCK_M,
+                            interpret: bool = False) -> jax.Array:
+    """q: (B, H, hd); k, v: (B, M, KV, hd); cache_len: () int32 shared
+    across the batch. Returns (B, H, hd)."""
+    B, H, hd = q.shape
+    M, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    s = scale if scale is not None else hd ** -0.5
+    bm = min(block_m, M)
+    assert M % bm == 0, (M, bm)
+
+    qt = q.reshape(B, KV, G, hd)
+    kt = jnp.moveaxis(k, 2, 1)   # (B, KV, M, hd)
+    vt = jnp.moveaxis(v, 2, 1)
+    clen = jnp.reshape(cache_len.astype(jnp.int32), (1,))
+
+    grid = (B, KV, M // bm)
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=s, window=window,
+                          block_m=bm),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM, block_shape=(1,),
+                         index_map=lambda b, h, i: (0,)),
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, i: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bm, hd), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bm, hd), lambda b, h, i: (b, h, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, i: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(clen, qt, kt, vt)
+    return out.reshape(B, H, hd)

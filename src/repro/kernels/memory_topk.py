@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: fused cosine-similarity + masked top-1 over the RAR
+skill/guide memory.
+
+This is the per-request critical path of the paper's system (§III-F): every
+incoming request queries the vector store before any FM inference. The
+kernel streams the (capacity, E) store through VMEM in row blocks, computes
+the similarity on the MXU, and carries the running (best sim, best index)
+in SMEM across grid steps — one HBM pass, no (capacity,) score vector ever
+written back.
+
+Block shape: (BLOCK_C, E). E is 384 → zero-padded to 512 by the wrapper so
+the lane dim is a multiple of 128; BLOCK_C defaults to 1024 rows →
+1024×512×4 B = 2 MiB per block in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_C = 1024
+
+
+def _top1_kernel(q_ref, mem_ref, mask_ref, sim_ref, idx_ref, *, block_c: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        sim_ref[0, 0] = -2.0
+        idx_ref[0, 0] = 0
+
+    block = mem_ref[...].astype(jnp.float32)          # (BC, E)
+    q = q_ref[...].astype(jnp.float32)                # (1, E)
+    sims = jax.lax.dot_general(block, q, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)  # (BC, 1)
+    valid = mask_ref[...] != 0                        # (BC, 1)
+    sims = jnp.where(valid, sims, -2.0)
+
+    rows = jax.lax.broadcasted_iota(jnp.int32, sims.shape, 0)
+    best = jnp.max(sims)
+    # lowest row index achieving the max (deterministic tie-break)
+    best_row = jnp.min(jnp.where(sims >= best, rows, jnp.int32(2 ** 30)))
+
+    @pl.when(best > sim_ref[0, 0])
+    def _update():
+        sim_ref[0, 0] = best
+        idx_ref[0, 0] = (i * block_c + best_row).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
+def memory_top1_pallas(mem: jax.Array, q: jax.Array, mask: jax.Array,
+                       *, block_c: int = DEFAULT_BLOCK_C,
+                       interpret: bool = False
+                       ) -> tuple[jax.Array, jax.Array]:
+    """mem: (C, E); q: (E,); mask: (C,) bool → (sim (), idx ())."""
+    C, E = mem.shape
+    bc = min(block_c, C)
+    # pad rows to a multiple of the block, lanes to a multiple of 128
+    Cp = ((C + bc - 1) // bc) * bc
+    Ep = ((E + 127) // 128) * 128
+    memp = jnp.zeros((Cp, Ep), mem.dtype).at[:C, :E].set(mem)
+    qp = jnp.zeros((1, Ep), jnp.float32).at[0, :E].set(q.astype(jnp.float32))
+    maskp = jnp.zeros((Cp, 1), jnp.int32).at[:C, 0].set(mask.astype(jnp.int32))
+
+    grid = (Cp // bc,)
+    sim, idx = pl.pallas_call(
+        functools.partial(_top1_kernel, block_c=bc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Ep), lambda i: (0, 0)),
+            pl.BlockSpec((bc, Ep), lambda i: (i, 0)),
+            pl.BlockSpec((bc, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM, block_shape=(1, 1),
+                         index_map=lambda i: (0, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM, block_shape=(1, 1),
+                         index_map=lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(qp, memp, maskp)
+    return sim[0, 0], idx[0, 0]

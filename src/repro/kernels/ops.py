@@ -1,0 +1,60 @@
+"""Jit'd dispatch layer over the Pallas kernels and their jnp oracles.
+
+Selection order:
+* ``REPRO_KERNEL_IMPL=ref|pallas|interpret`` env var wins,
+* otherwise: ``pallas`` on TPU backends, ``ref`` elsewhere (this CPU
+  container). ``interpret`` runs the Pallas kernel bodies in Python — used
+  by the test suite to validate the TPU kernels against the oracles.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.memory_topk import memory_top1_pallas
+
+
+def _default_impl() -> str:
+    env = os.environ.get("REPRO_KERNEL_IMPL")
+    if env:
+        return env
+    try:
+        platform = jax.default_backend()
+    except RuntimeError:
+        platform = "cpu"
+    return "pallas" if platform == "tpu" else "ref"
+
+
+def memory_top1(mem: jax.Array, q: jax.Array, mask: jax.Array,
+                impl: str | None = None) -> tuple[jax.Array, jax.Array]:
+    impl = impl or _default_impl()
+    if impl == "ref":
+        return ref.memory_top1(mem, q, mask)
+    return memory_top1_pallas(mem, q, mask, interpret=(impl == "interpret"))
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, scale=None,
+                    impl: str | None = None):
+    impl = impl or _default_impl()
+    if impl == "ref":
+        return ref.flash_attention(q, k, v, causal=causal, window=window,
+                                   scale=scale)
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  scale=scale,
+                                  interpret=(impl == "interpret"))
+
+
+def decode_attention(q, k, v, cache_len, *, window=0, scale=None,
+                     impl: str | None = None):
+    impl = impl or _default_impl()
+    if impl == "ref":
+        return ref.decode_attention(q, k, v, cache_len, window=window,
+                                    scale=scale)
+    return decode_attention_pallas(q, k, v, cache_len, window=window,
+                                   scale=scale,
+                                   interpret=(impl == "interpret"))

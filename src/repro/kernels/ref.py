@@ -1,0 +1,96 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness ground truth: kernel tests sweep shapes/dtypes
+and assert_allclose against these, and the CPU execution path of the
+framework routes through them (Pallas TPU kernels run in interpret mode
+only under tests on this host).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+# ---------------------------------------------------------------------------
+# memory_top1: fused cosine similarity + masked argmax over the memory store
+# ---------------------------------------------------------------------------
+
+
+def memory_top1(mem: jax.Array, q: jax.Array, mask: jax.Array
+                ) -> tuple[jax.Array, jax.Array]:
+    """mem: (C, E) rows assumed unit-or-zero norm; q: (E,) unit norm;
+    mask: (C,) bool. Returns (best sim () f32 — -2.0 if mask empty,
+    best index () int32)."""
+    sims = mem.astype(jnp.float32) @ q.astype(jnp.float32)
+    sims = jnp.where(mask, sims, -2.0)
+    idx = jnp.argmax(sims).astype(jnp.int32)
+    return sims[idx], idx
+
+
+def memory_topk(mem: jax.Array, q: jax.Array, mask: jax.Array, k: int
+                ) -> tuple[jax.Array, jax.Array]:
+    """Top-k variant. Returns (sims (k,), idx (k,)) sorted descending."""
+    sims = mem.astype(jnp.float32) @ q.astype(jnp.float32)
+    sims = jnp.where(mask, sims, -2.0)
+    top_sims, top_idx = jax.lax.top_k(sims, k)
+    return top_sims, top_idx.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# flash attention (causal, optional sliding window, GQA)
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    scale: float | None = None) -> jax.Array:
+    """q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd). Positions are aligned to
+    the sequence end (self-attention: Sq == Sk)."""
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    s = scale if scale is not None else hd ** -0.5
+    qg = q.reshape(B, Sq, KV, G, hd).astype(jnp.float32) * s
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k.astype(jnp.float32))
+    qpos = jnp.arange(Sq)[:, None] + (Sk - Sq)
+    kpos = jnp.arange(Sk)[None, :]
+    diff = qpos - kpos
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= diff >= 0
+    if window > 0:
+        mask &= diff < window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode attention: one query position against a long KV cache
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     cache_len: jax.Array, *, window: int = 0,
+                     scale: float | None = None) -> jax.Array:
+    """q: (B, H, hd) single position; k, v: (B, M, KV, hd) cache;
+    cache_len: () or (B,) valid entries (query at position cache_len-1).
+    """
+    B, H, hd = q.shape
+    M, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    s = scale if scale is not None else hd ** -0.5
+    qg = q.reshape(B, KV, G, hd).astype(jnp.float32) * s
+    scores = jnp.einsum("bkgh,bmkh->bkgm", qg, k.astype(jnp.float32))
+    cl = jnp.broadcast_to(jnp.asarray(cache_len), (B,))
+    kpos = jnp.arange(M)[None, :]
+    mask = kpos < cl[:, None]
+    if window > 0:
+        mask &= kpos >= cl[:, None] - window
+    scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgm,bmkh->bkgh", probs, v.astype(jnp.float32))
+    return out.reshape(B, H, hd).astype(q.dtype)

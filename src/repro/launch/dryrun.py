@@ -1,0 +1,267 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture × input shape) pair this lowers + compiles the
+real step function (train_step / prefill / serve_step) against the
+production mesh — 16×16 single-pod and 2×16×16 multi-pod — from
+ShapeDtypeStruct stand-ins (no allocation), prints
+``compiled.memory_analysis()`` (fits?) and ``compiled.cost_analysis()``
+(roofline terms), and appends a JSON record consumed by
+EXPERIMENTS.md §Dry-run / §Roofline and benchmarks/roofline.py.
+
+Usage:
+    python -m repro.launch.dryrun --arch llama3-8b --shape decode_32k
+    python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+"""
+import argparse   # noqa: E402
+import json
+import time
+import traceback
+from functools import partial
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.launch import specs as SP
+from repro.launch.analytic import analytic_terms
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import analyze
+from repro.models import decode_step, prefill
+from repro.models import sharding as shd
+from repro.training import make_train_step
+
+DEFAULT_OUT = "experiments/dryrun_results.json"
+
+
+def _logit_sharding(mesh, logits_shape):
+    """Batch on data axes when divisible; vocab on model when divisible."""
+    b = shd.batch_axes(mesh)
+    spec = shd.spec_from_prefs(logits_shape, [(0, b), (1, "model")], mesh)
+    return NamedSharding(mesh, spec)
+
+
+def _apply_overrides(cfg, overrides: dict | None):
+    """--set key=value config overrides (perf variants, §Perf log)."""
+    if not overrides:
+        return cfg
+    import dataclasses as _dc
+    typed = {}
+    for k, v in overrides.items():
+        cur = getattr(cfg, k)
+        if isinstance(cur, bool):
+            typed[k] = v in ("1", "true", "True")
+        elif isinstance(cur, int):
+            typed[k] = int(v)
+        elif isinstance(cur, float):
+            typed[k] = float(v)
+        else:
+            typed[k] = v
+    return _dc.replace(cfg, **typed)
+
+
+def lower_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
+               donate: bool = True, overrides: dict | None = None):
+    """Lower + compile one (arch, shape, mesh) combination.
+
+    Returns (compiled, lowered, spec, mesh)."""
+    cfg0 = _apply_overrides(configs.get(arch), overrides)
+    spec = SP.input_specs(cfg0, shape_name)
+    cfg = spec["cfg"]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+
+    with mesh:
+        mode = "train" if spec["kind"] == "train" else "serve"
+        p_shard = shd.param_shardings(spec["params"], mesh, mode)
+
+        if spec["kind"] == "train":
+            step = make_train_step(cfg, grad_accum=spec["grad_accum"],
+                                   batch_axes=shd.batch_axes(mesh))
+            o_shard = shd.param_shardings(spec["opt_state"], mesh, mode)
+            b_shard = shd.batch_shardings(spec["batch"], mesh)
+            metrics_shard = jax.tree.map(
+                lambda _: shd.replicated(mesh),
+                {"ce": 0, "aux": 0, "accuracy": 0, "loss": 0, "lr": 0,
+                 "grad_norm": 0})
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shard, o_shard, b_shard),
+                out_shardings=(p_shard, o_shard, metrics_shard),
+                donate_argnums=(0, 1) if donate else ())
+            lowered = jitted.lower(spec["params"], spec["opt_state"],
+                                   spec["batch"])
+
+        elif spec["kind"] == "prefill":
+            fn = partial(prefill, cfg, max_len=spec["max_len"])
+            b_shard = shd.batch_shardings(spec["batch"], mesh)
+            out_shape = jax.eval_shape(fn, spec["params"], spec["batch"])
+            c_shard = shd.cache_shardings(out_shape[1], mesh)
+            out_shard = (_logit_sharding(mesh, out_shape[0].shape), c_shard,
+                         shd.replicated(mesh))
+            jitted = jax.jit(fn, in_shardings=(p_shard, b_shard),
+                             out_shardings=out_shard)
+            lowered = jitted.lower(spec["params"], spec["batch"])
+
+        else:  # decode — serve_step: ONE token against a seq_len cache
+            fn = partial(decode_step, cfg)
+            c_shard = shd.cache_shardings(spec["cache"], mesh)
+            t_shard = shd.batch_shardings(spec["tokens"], mesh)
+            B = spec["tokens"].shape[0]
+            out_shard = (_logit_sharding(mesh, (B, cfg.vocab_size)), c_shard)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(p_shard, t_shard, c_shard,
+                              shd.replicated(mesh)),
+                out_shardings=out_shard,
+                donate_argnums=(2,) if donate else ())
+            lowered = jitted.lower(spec["params"], spec["tokens"],
+                                   spec["cache"], spec["pos"])
+
+        compiled = lowered.compile()
+    return compiled, lowered, spec, mesh
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool,
+            verbose: bool = True, overrides: dict | None = None,
+            variant: str = "baseline") -> dict:
+    cfg = configs.get(arch)
+    if not SP.supported(cfg, shape_name):
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "variant": variant, "status": "skipped",
+                "reason": "architectural (see DESIGN.md §7)"}
+    t0 = time.time()
+    try:
+        compiled, lowered, spec, mesh = lower_pair(
+            arch, shape_name, multi_pod=multi_pod, overrides=overrides)
+    except Exception as e:  # a failure here is a bug in the system
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "variant": variant,
+                "status": "FAILED", "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-2000:]}
+    compile_s = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    roof = analyze(compiled)
+    n_chips = 512 if multi_pod else 256
+    model_flops = (6.0 * spec["cfg"].active_param_count() *
+                   _tokens_processed(spec)) / n_chips
+    from repro.launch.specs import INPUT_SHAPES
+    seq, gbatch, _ = INPUT_SHAPES[shape_name]
+    ana = analytic_terms(spec["cfg"], spec["kind"], gbatch, seq, n_chips,
+                         spec.get("grad_accum", 1))
+
+    rec = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "variant": variant,
+        "status": "ok", "compile_s": round(compile_s, 1),
+        "kind": spec["kind"],
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        "roofline": roof.to_dict(),
+        "analytic": {
+            **ana,
+            "compute_s": ana["flops_per_device"] / 197e12,
+            "memory_s": ana["hbm_bytes_per_device"] / 819e9,
+        },
+        "grad_accum": spec.get("grad_accum", 1),
+        "model_flops_per_device": model_flops,
+        "useful_flops_ratio": (model_flops / roof.flops_per_device
+                               if roof.flops_per_device else None),
+    }
+    if verbose:
+        print(f"[dryrun] {arch} × {shape_name} × "
+              f"{'2x16x16' if multi_pod else '16x16'}: "
+              f"compile {compile_s:.1f}s")
+        print(f"  memory_analysis: {mem}")
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, list) else ca
+        print(f"  cost_analysis: flops={ca.get('flops', 0):.3e} "
+              f"bytes={ca.get('bytes accessed', 0):.3e}")
+        print(f"  roofline: compute={roof.compute_s * 1e3:.3f}ms "
+              f"memory={roof.memory_s * 1e3:.3f}ms "
+              f"collective={roof.collective_s * 1e3:.3f}ms "
+              f"dominant={roof.dominant}")
+    return rec
+
+
+def _tokens_processed(spec) -> float:
+    """Global token count of one step (for MODEL_FLOPS = 6·N·D)."""
+    if spec["kind"] == "train":
+        B, S = spec["batch"]["tokens"].shape
+        return 3.0 * B * S       # fwd + bwd ≈ 3× forward FLOPs
+    if spec["kind"] == "prefill":
+        B, S = spec["batch"]["tokens"].shape
+        return float(B * S)
+    return float(spec["tokens"].shape[0])   # decode: one token per row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(SP.INPUT_SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (perf variants)")
+    ap.add_argument("--variant", default=None,
+                    help="variant label recorded with the results")
+    args = ap.parse_args()
+    overrides = dict(kv.split("=", 1) for kv in getattr(args, "set"))
+    variant = args.variant or ("baseline" if not overrides else
+                               ",".join(f"{k}={v}"
+                                        for k, v in overrides.items()))
+
+    assert len(jax.devices()) == 512, (
+        "dry-run requires the 512 placeholder devices; do not strip "
+        "XLA_FLAGS from the top of this file")
+
+    archs = configs.all_archs() if (args.all or not args.arch) \
+        else [args.arch]
+    shapes = list(SP.INPUT_SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    records = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_one(arch, shape, multi_pod=mp,
+                              overrides=overrides, variant=variant)
+                records.append(rec)
+                if rec["status"] == "FAILED":
+                    print(f"[dryrun] FAILED {arch} × {shape} "
+                          f"(multi_pod={mp}): {rec['error']}")
+                # append incrementally so long sweeps are resumable
+                _merge_out(args.out, records)
+    ok = sum(r["status"] == "ok" for r in records)
+    sk = sum(r["status"] == "skipped" for r in records)
+    print(f"[dryrun] done: {ok} ok, {sk} skipped, "
+          f"{len(records) - ok - sk} failed → {args.out}")
+
+
+def _merge_out(path: str, records: list[dict]) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    existing = []
+    if os.path.exists(path):
+        with open(path) as f:
+            existing = json.load(f)
+    keyed = {(r["arch"], r["shape"], r["multi_pod"],
+              r.get("variant", "baseline")): r for r in existing}
+    for r in records:
+        keyed[(r["arch"], r["shape"], r["multi_pod"],
+               r.get("variant", "baseline"))] = r
+    with open(path, "w") as f:
+        json.dump(list(keyed.values()), f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Serving launcher — run the RAR layered system over a request stream.
+
+This is the paper's deployment shape: a weak tier + strong tier behind the
+adaptive router, serving batched requests. On CPU it runs the trained
+synthetic-suite system end-to-end; production zoo archs slot in as tiers
+via --weak-arch/--strong-arch in dry-run form (see repro.launch.dryrun for
+the distributed serve_step itself).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.serve --requests 200 --domain 0
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core.rar import RARConfig
+from repro.experiments.setup import build_system, failing_pool
+from repro.experiments.stages import run_rar_experiment
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=200)
+    ap.add_argument("--domain", type=int, default=0)
+    ap.add_argument("--stages", type=int, default=3)
+    ap.add_argument("--router", default="oracle",
+                    choices=["oracle", "learned"])
+    ap.add_argument("--sim-threshold", type=float, default=0.2)
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+
+    system = build_system()
+    pool = failing_pool(system, args.domain, n=args.requests)
+    print(f"[serve] {len(pool)} requests (weak-FM-failing pool, "
+          f"domain {args.domain}); router={args.router}")
+
+    cfg = RARConfig(sim_threshold=args.sim_threshold,
+                    guide_sim_threshold=args.sim_threshold,
+                    reprobe_period=2 * len(pool))
+    t0 = time.time()
+    results, rar = run_rar_experiment(
+        system, pool, n_stages=args.stages, rar_cfg=cfg,
+        router_kind=args.router, verbose=True)
+    dt = time.time() - t0
+
+    total = args.stages * len(pool)
+    aligned = sum(r.aligned for r in results)
+    strong = sum(r.strong_calls for r in results)
+    print(f"[serve] {total} requests in {dt:.1f}s "
+          f"({1e3 * dt / total:.1f} ms/request)")
+    print(f"[serve] aligned {aligned}/{total} ({100 * aligned / total:.1f}%)"
+          f", strong-FM calls {strong} ({100 * strong / total:.1f}% of "
+          f"requests), memory size {rar.memory.size}")
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump([r.__dict__ for r in results], f, indent=1,
+                      default=str)
+
+
+if __name__ == "__main__":
+    main()

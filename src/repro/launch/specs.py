@@ -1,0 +1,132 @@
+"""ShapeDtypeStruct stand-ins for every (architecture × input shape) pair.
+
+``input_specs`` returns abstract values only — weak-type-correct,
+shardable, no device allocation — plus which step function the pair
+lowers (``train_step`` / ``prefill`` / ``serve_step``).
+
+Modality frontends are stubs per the brief: VLM pairs get precomputed
+patch embeddings, audio pairs get precomputed frame embeddings, both at
+d_model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import init_cache, init_params
+from repro.models.config import ModelConfig
+from repro.training.optimizer import init_opt_state
+
+INPUT_SHAPES = {
+    # name: (seq_len, global_batch, kind)
+    "train_4k": (4_096, 256, "train"),
+    "prefill_32k": (32_768, 32, "prefill"),
+    "decode_32k": (32_768, 128, "decode"),
+    "long_500k": (524_288, 1, "decode"),
+}
+
+# long_500k policy (DESIGN.md §7): sub-quadratic attention required.
+# SSM / hybrid / native-sliding-window run as-is; dense/moe/vlm run the
+# sliding-window decode variant; whisper (enc-dec, 448-token decoder
+# context by construction) is skipped.
+LONG_SKIP = {"whisper-medium"}
+LONG_DECODE_WINDOW = 4096
+
+
+def shape_kind(shape_name: str) -> str:
+    return INPUT_SHAPES[shape_name][2]
+
+
+ACT_BUDGET_BYTES = 1e9      # live-activation budget per device (16 GB HBM
+                            # minus weights / optimizer shards / FSDP
+                            # gather buffers / XLA slack)
+DATA_SHARDS = 16            # single-pod data-axis size (worst case)
+
+
+def auto_grad_accum(cfg: ModelConfig, global_batch: int, seq: int) -> int:
+    """Microbatch count so per-device live activations (one residual
+    carry per remat'd layer) fit the budget. See §Perf hillclimb-2."""
+    layers = cfg.num_layers + cfg.encoder_layers
+    act_per_row = seq * cfg.d_model * 2 * max(layers, 1)
+    if cfg.family == "moe":
+        # expert dispatch buffers scale with k: ≈ (1 + k·cf) residual-widths
+        act_per_row *= 1 + cfg.experts_per_token
+    rows_per_device = max(global_batch // DATA_SHARDS, 1)
+    need = act_per_row * rows_per_device / ACT_BUDGET_BYTES
+    accum = 1
+    while accum < need and accum < global_batch // DATA_SHARDS:
+        accum *= 2
+    return accum
+
+
+def supported(cfg: ModelConfig, shape_name: str) -> bool:
+    if shape_name == "long_500k" and cfg.name in LONG_SKIP:
+        return False
+    return True
+
+
+def config_for_shape(cfg: ModelConfig, shape_name: str) -> ModelConfig:
+    """Apply shape-specific config adjustments (the sliding-window decode
+    variant for long-context decode on attention archs)."""
+    if (shape_name == "long_500k" and cfg.family in
+            ("dense", "moe", "vlm", "hybrid")):
+        return dataclasses.replace(cfg, decode_window=LONG_DECODE_WINDOW)
+    return cfg
+
+
+def _abstract(tree: Any) -> Any:
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def param_specs(cfg: ModelConfig) -> Any:
+    return jax.eval_shape(lambda k: init_params(cfg, k),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def opt_specs(params: Any) -> Any:
+    return jax.eval_shape(init_opt_state, params)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> Any:
+    return jax.eval_shape(
+        lambda: init_cache(cfg, batch, max_len, jnp.bfloat16))
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict[str, Any]:
+    """Returns {kind, params, and kind-specific abstract inputs}."""
+    seq, batch, kind = INPUT_SHAPES[shape_name]
+    cfg = config_for_shape(cfg, shape_name)
+    params = param_specs(cfg)
+    tok = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)       # noqa: E731
+    emb = lambda *s: jax.ShapeDtypeStruct(s, jnp.bfloat16)    # noqa: E731
+
+    if kind == "train":
+        data = {"tokens": tok(batch, seq), "labels": tok(batch, seq)}
+        if cfg.family == "vlm":
+            data["patch_embeds"] = emb(batch, cfg.num_patches, cfg.d_model)
+        if cfg.family == "audio":
+            data["frames"] = emb(batch, cfg.encoder_frames, cfg.d_model)
+        return {"kind": kind, "cfg": cfg, "params": params,
+                "opt_state": opt_specs(params), "batch": data,
+                "grad_accum": auto_grad_accum(cfg, batch, seq)}
+
+    if kind == "prefill":
+        data = {"tokens": tok(batch, seq)}
+        extra = 0
+        if cfg.family == "vlm":
+            data["patch_embeds"] = emb(batch, cfg.num_patches, cfg.d_model)
+            extra = cfg.num_patches
+        if cfg.family == "audio":
+            data["frames"] = emb(batch, cfg.encoder_frames, cfg.d_model)
+        return {"kind": kind, "cfg": cfg, "params": params, "batch": data,
+                "max_len": seq + extra}
+
+    # decode: ONE new token against a cache of seq_len entries
+    return {"kind": kind, "cfg": cfg, "params": params,
+            "tokens": tok(batch),
+            "cache": cache_specs(cfg, batch, seq),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}

@@ -1,0 +1,15 @@
+from repro.models.config import ModelConfig, assert_valid
+from repro.models.model import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    param_shapes,
+    prefill,
+)
+
+__all__ = [
+    "ModelConfig", "assert_valid", "decode_step", "forward", "init_cache",
+    "init_params", "loss_fn", "param_shapes", "prefill",
+]

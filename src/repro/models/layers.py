@@ -1,0 +1,362 @@
+"""Core neural-network layers shared by every architecture in the zoo.
+
+Conventions
+-----------
+* Parameters are plain nested dicts of jnp arrays (pytrees).
+* Attention projections keep an explicit head axis: ``wq: (D, H, hd)`` so the
+  sharding rules in :mod:`repro.models.sharding` can target the head axis.
+* All matmuls accumulate in float32 (``preferred_element_type``) and cast back
+  to the activation dtype, mirroring TPU MXU usage.
+* Sequence-quadratic attention is computed chunk-wise (online softmax) so the
+  (S, S) score matrix never materializes in HBM — the pure-JAX analog of the
+  Pallas flash kernel in :mod:`repro.kernels.flash_attention`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key: jax.Array, shape: tuple[int, ...], in_axis: int = 0,
+               dtype=jnp.float32) -> jax.Array:
+    """Fan-in scaled normal init (matches common LLM practice)."""
+    fan_in = shape[in_axis]
+    std = fan_in ** -0.5
+    return (std * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def embed_init(key: jax.Array, shape: tuple[int, ...], dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int) -> Params:
+    return {"scale": jnp.zeros((d,), jnp.float32)}
+
+
+def rmsnorm(params: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    # "zero-centered" scale (gemma-style: weight stored as delta from 1).
+    return (x * (1.0 + params["scale"])).astype(dtype)
+
+
+def nonparametric_layernorm(x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """OLMo-style LayerNorm without learned scale/bias [arXiv:2402.00838]."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps)).astype(dtype)
+
+
+def apply_norm(norm_type: str, params: Params | None, x: jax.Array) -> jax.Array:
+    if norm_type == "nonparametric_ln":
+        return nonparametric_layernorm(x)
+    return rmsnorm(params, x)
+
+
+def norm_init(norm_type: str, d: int) -> Params:
+    if norm_type == "nonparametric_ln":
+        return {}  # stateless
+    return rmsnorm_init(d)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)  # (hd/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optional sliding window, chunked online-softmax)
+# ---------------------------------------------------------------------------
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _attn_mask(q_pos: jax.Array, k_pos: jax.Array, window, causal: bool) -> jax.Array:
+    """Boolean mask (..., Sq, Sk). window is traced or python int; <=0 → full.
+    Negative k positions mark invalid slots (ring-cache entries not yet
+    written) and are always masked."""
+    diff = q_pos[..., :, None] - k_pos[..., None, :]
+    mask = k_pos[..., None, :] >= 0
+    if causal:
+        mask &= diff >= 0
+    w = jnp.asarray(window)
+    mask &= jnp.where(w > 0, diff < w, True)
+    return mask
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              q_positions: jax.Array, k_positions: jax.Array,
+              causal: bool = True, window=0, softmax_scale: float | None = None,
+              chunk_size: int = 1024) -> jax.Array:
+    """Grouped-query attention.
+
+    q: (B, Sq, H, hd);  k, v: (B, Sk, KV, hd);  H % KV == 0.
+    positions: (B, Sq) / (B, Sk) absolute positions (handles caches/offsets).
+    window: python int or traced scalar; > 0 enables sliding-window masking.
+    Returns (B, Sq, H, hd).
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = softmax_scale if softmax_scale is not None else hd ** -0.5
+    qg = q.reshape(B, Sq, KV, G, hd) * scale
+
+    if Sk <= chunk_size or Sq == 1:
+        scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k,
+                            preferred_element_type=jnp.float32)
+        mask = _attn_mask(q_positions, k_positions, window, causal)  # (B, Sq, Sk)
+        scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v,
+                         preferred_element_type=jnp.float32)
+        return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+    # Chunked online-softmax over KV blocks: O(Sq * chunk) live memory.
+    n_chunks = (Sk + chunk_size - 1) // chunk_size
+    pad = n_chunks * chunk_size - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_positions = jnp.pad(k_positions, ((0, 0), (0, pad)),
+                              constant_values=jnp.iinfo(jnp.int32).max // 2)
+    kc = k.reshape(B, n_chunks, chunk_size, KV, hd)
+    vc = v.reshape(B, n_chunks, chunk_size, KV, hd)
+    pc = k_positions.reshape(B, n_chunks, chunk_size)
+
+    def body(carry, blk):
+        m_prev, l_prev, acc = carry
+        kb, vb, pb = blk  # (B, C, KV, hd), (B, C)
+        s = jnp.einsum("bqkgh,bckh->bkgqc", qg, kb,
+                       preferred_element_type=jnp.float32)
+        mask = _attn_mask(q_positions, pb, window, causal)  # (B, Sq, C)
+        s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgqc,bckh->bkgqh", p.astype(vb.dtype), vb,
+                        preferred_element_type=jnp.float32)
+        acc = acc * corr[..., None] + pv
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, KV, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, Sq, hd), jnp.float32)
+    blks = (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), jnp.moveaxis(pc, 1, 0))
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), blks)
+    out = acc / jnp.maximum(l[..., None], 1e-37)
+    out = jnp.moveaxis(out.reshape(B, H, Sq, hd), 1, 2)
+    return out.astype(q.dtype)
+
+
+def attention_block_init(key: jax.Array, d_model: int, num_heads: int,
+                         num_kv_heads: int, head_dim: int,
+                         dtype=jnp.bfloat16) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, (d_model, num_heads, head_dim), dtype=dtype),
+        "wk": dense_init(k2, (d_model, num_kv_heads, head_dim), dtype=dtype),
+        "wv": dense_init(k3, (d_model, num_kv_heads, head_dim), dtype=dtype),
+        "wo": dense_init(k4, (num_heads, head_dim, d_model), in_axis=1, dtype=dtype),
+    }
+
+
+def attention_qkv(params: Params, x: jax.Array, positions: jax.Array,
+                  theta: float) -> tuple[jax.Array, jax.Array, jax.Array]:
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    q = apply_rope(q, positions, theta)
+    k = apply_rope(k, positions, theta)
+    return q, k, v
+
+
+def attention_out(params: Params, attn: jax.Array) -> jax.Array:
+    return jnp.einsum("bshk,hkd->bsd", attn, params["wo"],
+                      preferred_element_type=jnp.float32).astype(attn.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeLU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key: jax.Array, d_model: int, d_ff: int, *, gated: bool = True,
+             dtype=jnp.bfloat16) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(k1, (d_model, d_ff), dtype=dtype),
+        "w_down": dense_init(k2, (d_ff, d_model), dtype=dtype),
+    }
+    if gated:
+        p["w_gate"] = dense_init(k3, (d_model, d_ff), dtype=dtype)
+    return p
+
+
+def mlp(params: Params, x: jax.Array) -> jax.Array:
+    up = jnp.einsum("bsd,df->bsf", x, params["w_up"],
+                    preferred_element_type=jnp.float32)
+    if "w_gate" in params:
+        gate = jnp.einsum("bsd,df->bsf", x, params["w_gate"],
+                          preferred_element_type=jnp.float32)
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    h = h.astype(x.dtype)
+    return jnp.einsum("bsf,fd->bsd", h, params["w_down"],
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (GShard-style capacity dispatch, expert-parallel)
+# ---------------------------------------------------------------------------
+
+
+def moe_init(key: jax.Array, d_model: int, d_ff: int, num_experts: int,
+             dtype=jnp.bfloat16) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "router": dense_init(k1, (d_model, num_experts), dtype=jnp.float32),
+        "w_gate": dense_init(k2, (num_experts, d_model, d_ff), in_axis=1, dtype=dtype),
+        "w_up": dense_init(k3, (num_experts, d_model, d_ff), in_axis=1, dtype=dtype),
+        "w_down": dense_init(k4, (num_experts, d_ff, d_model), in_axis=1, dtype=dtype),
+    }
+
+
+def moe(params: Params, x: jax.Array, *, experts_per_token: int,
+        capacity_factor: float = 1.25,
+        dispatch: str = "scatter") -> tuple[jax.Array, jax.Array]:
+    """Top-k token-choice MoE with capacity-based dispatch.
+
+    Returns (output (B,S,D), load-balance aux loss scalar).
+
+    Two dispatch implementations (§Perf — the measured difference is the
+    hillclimb-1 entry in EXPERIMENTS.md):
+
+    * ``scatter`` (default) — per-row scatter-add into (B, E, C, D) expert
+      buffers. Cost O(T·D) for dispatch + O(E·C·D·F) for experts, with
+      per-row capacity C ≈ cf·k·S/E. This is what scales: no (T, E, C)
+      one-hot ever materializes.
+    * ``dense`` — GShard-style one-hot dispatch einsum. O(T·E·C·D) compute
+      and an O(T·E·C) dispatch tensor; with global capacity C ∝ T this is
+      quadratic in tokens and blows past HBM at train_4k scale (82 TB/dev
+      for granite — kept for A/B measurement and for tiny configs).
+
+    Either way the expert axis shards on 'model' (expert parallelism); the
+    token→expert movement becomes the all-to-all.
+    """
+    B, S, D = x.shape
+    E = params["w_gate"].shape[0]
+    k = experts_per_token
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                  # (B, S, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)          # (B, S, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # Load-balance auxiliary loss (Switch-style).
+    me = jnp.mean(probs, axis=(0, 1))                        # (E,)
+    one_hot_all = jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)
+    ce = jnp.mean(jnp.sum(one_hot_all, axis=2), axis=(0, 1))
+    aux_loss = E * jnp.sum(me * ce)
+
+    # per-row (sequence) capacity: groups are batch rows, so buffers and
+    # positions never scale with the global token count
+    capacity = max(1, int(capacity_factor * k * S / E))
+
+    # position of each (token, slot) within its expert's per-row buffer
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.int32)  # (B, S, k, E)
+    flat = onehot.reshape(B, S * k, E)
+    pos = (jnp.cumsum(flat, axis=1) - flat)                  # (B, S*k, E)
+    pos = jnp.sum(pos * flat, axis=-1).reshape(B, S, k)      # (B, S, k)
+    keep = pos < capacity
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+
+    if dispatch == "dense":
+        pos_oh = jax.nn.one_hot(jnp.where(keep, pos, capacity), capacity + 1,
+                                dtype=x.dtype)[..., :capacity]  # (B,S,k,C)
+        disp = jnp.einsum("bske,bskc->bsec", onehot.astype(x.dtype), pos_oh)
+        comb = jnp.einsum("bske,bskc,bsk->bsec", onehot.astype(jnp.float32),
+                          pos_oh.astype(jnp.float32),
+                          gate_vals).astype(jnp.float32)
+        expert_in = jnp.einsum("bsec,bsd->becd", disp, x,
+                               preferred_element_type=jnp.float32
+                               ).astype(x.dtype)
+    else:
+        # scatter dispatch: (B, E, C, D) buffers, written by index
+        safe_pos = jnp.where(keep, pos, capacity)            # dropped → OOB
+        buf = jnp.zeros((B, E, capacity + 1, D), x.dtype)
+        bidx = jnp.arange(B)[:, None, None]
+        xk = jnp.broadcast_to(x[:, :, None, :], (B, S, k, D))
+        expert_in = buf.at[bidx, expert_idx, safe_pos].add(
+            xk, mode="drop")[:, :, :capacity]                # (B, E, C, D)
+
+    gate = jnp.einsum("becd,edf->becf", expert_in, params["w_gate"],
+                      preferred_element_type=jnp.float32)
+    up = jnp.einsum("becd,edf->becf", expert_in, params["w_up"],
+                    preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(gate) * up).astype(x.dtype)
+    expert_out = jnp.einsum("becf,efd->becd", h, params["w_down"],
+                            preferred_element_type=jnp.float32
+                            ).astype(x.dtype)
+
+    if dispatch == "dense":
+        out = jnp.einsum("bsec,becd->bsd", comb, expert_out,
+                         preferred_element_type=jnp.float32).astype(x.dtype)
+    else:
+        # gather back: token (b, s, slot k) reads expert_out[b, e, pos]
+        gathered = expert_out[bidx, expert_idx, safe_pos]    # (B, S, k, D)
+        out = jnp.sum(gathered.astype(jnp.float32) *
+                      gate_vals[..., None], axis=2).astype(x.dtype)
+    return out, aux_loss
+
+
+# ---------------------------------------------------------------------------
+# Output head
+# ---------------------------------------------------------------------------
+
+
+def unembed(embedding: jax.Array, x: jax.Array) -> jax.Array:
+    """Tied unembedding: embedding (V, D), x (B, S, D) -> logits (B, S, V)."""
+    return jnp.einsum("bsd,vd->bsv", x, embedding,
+                      preferred_element_type=jnp.float32)

@@ -1,0 +1,640 @@
+"""Unified model definition for all six architecture families.
+
+Design notes
+------------
+* **Scan-over-layers with stacked parameters** for every homogeneous stack
+  (dense / moe / ssm / vlm / audio-encoder / audio-decoder). HLO size — and
+  therefore 512-device dry-run compile time — is independent of depth.
+* The **hybrid** family (RecurrentGemma) has a static 2:1 recurrent:attention
+  pattern; it is unrolled with the two block kinds kept in *separate* stacked
+  groups, so no ``lax.cond`` appears in the HLO and the roofline reflects
+  exactly the executed compute.
+* Three entry points per model: ``forward`` (teacher forcing),
+  ``prefill`` (sequence mode, builds a cache), ``decode_step`` (one token
+  against the cache). Decode shapes in the dry-run lower ``decode_step``.
+* Heterogeneous attention patterns (gemma3's 5:1 local:global) ride through
+  the layer scan as a per-layer ``window`` array; masking is dynamic, which
+  keeps the stack scannable. (The §Perf log shows the static-window variant
+  that recovers the skipped-block compute.)
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.config import ModelConfig, assert_valid
+
+Params = dict[str, Any]
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ===========================================================================
+# Parameter initialization
+# ===========================================================================
+
+
+def _attn_layer_init(cfg: ModelConfig, key: jax.Array, *,
+                     cross: bool = False) -> Params:
+    ks = jax.random.split(key, 6)
+    p = {
+        "ln1": L.norm_init(cfg.norm_type, cfg.d_model),
+        "attn": L.attention_block_init(ks[0], cfg.d_model, cfg.num_heads,
+                                       cfg.num_kv_heads, cfg.head_dim,
+                                       dtype=_dt(cfg)),
+        "ln2": L.norm_init(cfg.norm_type, cfg.d_model),
+    }
+    if cfg.family == "moe":
+        p["moe"] = L.moe_init(ks[1], cfg.d_model, cfg.d_ff, cfg.num_experts,
+                              dtype=_dt(cfg))
+    else:
+        p["mlp"] = L.mlp_init(ks[1], cfg.d_model, cfg.d_ff,
+                              gated=cfg.gated_mlp, dtype=_dt(cfg))
+    if cross:
+        p["ln_cross"] = L.norm_init(cfg.norm_type, cfg.d_model)
+        p["cross_attn"] = L.attention_block_init(
+            ks[2], cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim,
+            dtype=_dt(cfg))
+    return p
+
+
+def _ssm_layer_init(cfg: ModelConfig, key: jax.Array) -> Params:
+    return {
+        "ln1": L.norm_init(cfg.norm_type, cfg.d_model),
+        "mixer": S.mamba2_init(key, cfg.d_model, d_state=cfg.ssm_state,
+                               head_dim=cfg.ssm_head_dim,
+                               expand=cfg.ssm_expand, n_groups=cfg.ssm_groups,
+                               d_conv=cfg.d_conv, dtype=_dt(cfg)),
+    }
+
+
+def _rglru_layer_init(cfg: ModelConfig, key: jax.Array) -> Params:
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": L.norm_init(cfg.norm_type, cfg.d_model),
+        "rglru": S.rglru_block_init(ks[0], cfg.d_model, cfg.d_rnn,
+                                    d_conv=cfg.d_conv, dtype=_dt(cfg)),
+        "ln2": L.norm_init(cfg.norm_type, cfg.d_model),
+        "mlp": L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, gated=cfg.gated_mlp,
+                          dtype=_dt(cfg)),
+    }
+
+
+def _hybrid_attn_layer_init(cfg: ModelConfig, key: jax.Array) -> Params:
+    p = _attn_layer_init(cfg, key)
+    return p
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    assert_valid(cfg)
+    k_embed, k_layers, k_extra = jax.random.split(key, 3)
+    params: Params = {
+        "embed": L.embed_init(k_embed, (cfg.vocab_size, cfg.d_model),
+                              dtype=_dt(cfg)),
+        "final_norm": L.norm_init(cfg.norm_type, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.dense_init(
+            jax.random.fold_in(k_embed, 1), (cfg.vocab_size, cfg.d_model),
+            in_axis=1, dtype=_dt(cfg))
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        keys = jax.random.split(k_layers, cfg.num_layers)
+        params["layers"] = jax.vmap(
+            lambda k: _attn_layer_init(cfg, k))(keys)
+    elif cfg.family == "ssm":
+        keys = jax.random.split(k_layers, cfg.num_layers)
+        params["layers"] = jax.vmap(lambda k: _ssm_layer_init(cfg, k))(keys)
+    elif cfg.family == "hybrid":
+        blocks = cfg.layer_blocks()
+        n_attn = blocks.count("a")
+        n_rec = blocks.count("r")
+        ka, kr = jax.random.split(k_layers)
+        params["attn_layers"] = jax.vmap(
+            lambda k: _hybrid_attn_layer_init(cfg, k))(
+                jax.random.split(ka, n_attn))
+        params["rglru_layers"] = jax.vmap(
+            lambda k: _rglru_layer_init(cfg, k))(jax.random.split(kr, n_rec))
+    elif cfg.family == "audio":
+        ke, kd = jax.random.split(k_layers)
+        params["enc_layers"] = jax.vmap(
+            lambda k: _attn_layer_init(cfg, k))(
+                jax.random.split(ke, cfg.encoder_layers))
+        params["enc_norm"] = L.norm_init(cfg.norm_type, cfg.d_model)
+        params["layers"] = jax.vmap(
+            lambda k: _attn_layer_init(cfg, k, cross=True))(
+                jax.random.split(kd, cfg.num_layers))
+    else:
+        raise ValueError(cfg.family)
+    return params
+
+
+def param_shapes(cfg: ModelConfig) -> Params:
+    """Abstract init — ShapeDtypeStructs only, no device allocation."""
+    return jax.eval_shape(lambda k: init_params(cfg, k),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+# ===========================================================================
+# Layer meta (per-layer static pattern, carried through the scan)
+# ===========================================================================
+
+
+def _layer_meta(cfg: ModelConfig) -> dict[str, jax.Array]:
+    return {"window": jnp.asarray(cfg.layer_windows(), jnp.int32)}
+
+
+# ===========================================================================
+# Block bodies
+# ===========================================================================
+
+
+def _attn_block_seq(cfg: ModelConfig, lp: Params, x: jax.Array,
+                    positions: jax.Array, window, *, causal: bool,
+                    kv_cache: Params | None, chunk_size: int = 1024):
+    """Attention + FFN residual block, sequence mode."""
+    h = L.apply_norm(cfg.norm_type, lp.get("ln1"), x)
+    q, k, v = L.attention_qkv(lp["attn"], h, positions, cfg.rope_theta)
+    new_cache = None
+    if kv_cache is not None:
+        new_cache = {"k": k, "v": v}
+    attn = L.attention(q, k, v, q_positions=positions, k_positions=positions,
+                       causal=causal, window=window, chunk_size=chunk_size)
+    x = x + L.attention_out(lp["attn"], attn)
+
+    aux = jnp.zeros((), jnp.float32)
+    h = L.apply_norm(cfg.norm_type, lp.get("ln2"), x)
+    if "moe" in lp:
+        f, aux = L.moe(lp["moe"], h, experts_per_token=cfg.experts_per_token,
+                       capacity_factor=cfg.moe_capacity_factor,
+                       dispatch=cfg.moe_dispatch)
+    else:
+        f = L.mlp(lp["mlp"], h)
+    return x + f, new_cache, aux
+
+
+def _attn_block_step(cfg: ModelConfig, lp: Params, x_t: jax.Array,
+                     pos: jax.Array, window, kv_cache: Params):
+    """One-token decode: write kv at ``pos``, attend over the cache.
+
+    Ring mode (cfg.ring_cache, §Perf variant): the cache holds only
+    ``decode_window`` slots; slot i currently stores absolute position
+    ``pos - ((pos - i) mod W)`` — reconstructed below so masking and the
+    sliding window work unchanged (negative = not yet written)."""
+    B = x_t.shape[0]
+    ring = cfg.ring_cache and cfg.decode_window > 0
+    h = L.apply_norm(cfg.norm_type, lp.get("ln1"), x_t[:, None, :])
+    qpos = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = L.attention_qkv(lp["attn"], h, qpos, cfg.rope_theta)
+    M = kv_cache["k"].shape[1]
+    slot = jnp.mod(pos, M) if ring else pos
+    ck = jax.lax.dynamic_update_slice(kv_cache["k"], k, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(kv_cache["v"], v, (0, slot, 0, 0))
+    slots = jnp.arange(M, dtype=jnp.int32)[None]
+    if ring:
+        kpos = pos - jnp.mod(pos - slots, M)     # absolute pos per slot
+    else:
+        kpos = slots
+    kpos = jnp.broadcast_to(kpos, (B, M))
+    w = window
+    if cfg.decode_window > 0:
+        w = jnp.where(jnp.asarray(window) > 0, window, cfg.decode_window)
+    attn = L.attention(q, ck, cv, q_positions=qpos, k_positions=kpos,
+                       causal=True, window=w)
+    x_t = x_t + L.attention_out(lp["attn"], attn)[:, 0]
+
+    h = L.apply_norm(cfg.norm_type, lp.get("ln2"), x_t[:, None, :])
+    if "moe" in lp:
+        f, _ = L.moe(lp["moe"], h, experts_per_token=cfg.experts_per_token,
+                     capacity_factor=cfg.moe_capacity_factor,
+                     dispatch=cfg.moe_dispatch)
+    else:
+        f = L.mlp(lp["mlp"], h)
+    return x_t + f[:, 0], {"k": ck, "v": cv}
+
+
+def _cross_block(cfg: ModelConfig, lp: Params, x: jax.Array,
+                 enc_k: jax.Array, enc_v: jax.Array):
+    """Cross-attention sub-block (audio decoder). enc_k/v precomputed."""
+    B, Sq = x.shape[0], x.shape[1]
+    h = L.apply_norm(cfg.norm_type, lp.get("ln_cross"), x)
+    q = jnp.einsum("bsd,dhk->bshk", h, lp["cross_attn"]["wq"],
+                   preferred_element_type=jnp.float32).astype(h.dtype)
+    qpos = jnp.zeros((B, Sq), jnp.int32)
+    kpos = jnp.zeros((B, enc_k.shape[1]), jnp.int32)
+    attn = L.attention(q, enc_k, enc_v, q_positions=qpos, k_positions=kpos,
+                       causal=False, window=0)
+    return x + L.attention_out(lp["cross_attn"], attn)
+
+
+def _ssm_block_seq(cfg: ModelConfig, lp: Params, x: jax.Array,
+                   state: Params | None):
+    h = L.apply_norm(cfg.norm_type, lp.get("ln1"), x)
+    y, new_state = S.mamba2_seq(lp["mixer"], h, d_state=cfg.ssm_state,
+                                head_dim=cfg.ssm_head_dim,
+                                n_groups=cfg.ssm_groups, chunk=cfg.ssm_chunk,
+                                state=state)
+    return x + y, new_state
+
+
+def _ssm_block_step(cfg: ModelConfig, lp: Params, x_t: jax.Array,
+                    state: Params):
+    h = L.apply_norm(cfg.norm_type, lp.get("ln1"), x_t[:, None, :])[:, 0]
+    y, new_state = S.mamba2_step(lp["mixer"], h, state, d_state=cfg.ssm_state,
+                                 head_dim=cfg.ssm_head_dim,
+                                 n_groups=cfg.ssm_groups)
+    return x_t + y, new_state
+
+
+def _rglru_block_seq(cfg: ModelConfig, lp: Params, x: jax.Array,
+                     state: Params | None):
+    h = L.apply_norm(cfg.norm_type, lp.get("ln1"), x)
+    y, new_state = S.rglru_seq(lp["rglru"], h, state)
+    x = x + y
+    h = L.apply_norm(cfg.norm_type, lp.get("ln2"), x)
+    return x + L.mlp(lp["mlp"], h), new_state
+
+
+def _rglru_block_step(cfg: ModelConfig, lp: Params, x_t: jax.Array,
+                      state: Params):
+    h = L.apply_norm(cfg.norm_type, lp.get("ln1"), x_t[:, None, :])[:, 0]
+    y, new_state = S.rglru_step(lp["rglru"], h, state)
+    x_t = x_t + y
+    h = L.apply_norm(cfg.norm_type, lp.get("ln2"), x_t[:, None, :])
+    return x_t + L.mlp(lp["mlp"], h)[:, 0], new_state
+
+
+# ===========================================================================
+# Embedding & head
+# ===========================================================================
+
+
+def embed_tokens(cfg: ModelConfig, params: Params, tokens: jax.Array):
+    x = params["embed"][tokens].astype(_dt(cfg))
+    return x * jnp.asarray(cfg.d_model ** 0.5, _dt(cfg))
+
+
+def output_logits(cfg: ModelConfig, params: Params, x: jax.Array):
+    x = L.apply_norm(cfg.norm_type, params.get("final_norm"), x)
+    w = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return L.unembed(w, x)
+
+
+# ===========================================================================
+# Full-sequence forward (train / prefill)
+# ===========================================================================
+
+
+def _build_inputs(cfg: ModelConfig, params: Params, batch: dict):
+    """Token (+frontend stub) embedding; returns (x, positions, text_start)."""
+    tokens = batch["tokens"]
+    x = embed_tokens(cfg, params, tokens)
+    if cfg.family == "vlm":
+        # Precomputed patch embeddings from the (stubbed) vision tower are
+        # prepended to the text tokens; attention is causal over the result.
+        patches = batch["patch_embeds"].astype(x.dtype)
+        x = jnp.concatenate([patches, x], axis=1)
+    B, Stot = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(Stot, dtype=jnp.int32)[None],
+                                 (B, Stot))
+    text_start = Stot - tokens.shape[1]
+    return x, positions, text_start
+
+
+def _run_encoder(cfg: ModelConfig, params: Params, frames: jax.Array):
+    """Audio encoder over precomputed (stub) frame embeddings."""
+    B, F = frames.shape[0], frames.shape[1]
+    x = frames.astype(_dt(cfg))
+    positions = jnp.broadcast_to(jnp.arange(F, dtype=jnp.int32)[None], (B, F))
+
+    def body(carry, lp):
+        h, _, _ = _attn_block_seq(cfg, lp, carry, positions, 0,
+                                  causal=False, kv_cache=None)
+        return h, None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(fn, x, params["enc_layers"])
+    return L.apply_norm(cfg.norm_type, params.get("enc_norm"), x)
+
+
+def _encoder_cross_kv(cfg: ModelConfig, params: Params, enc_out: jax.Array):
+    """Precompute per-decoder-layer cross K/V from encoder output."""
+    def one(lp):
+        k = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross_attn"]["wk"],
+                       preferred_element_type=jnp.float32).astype(enc_out.dtype)
+        v = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross_attn"]["wv"],
+                       preferred_element_type=jnp.float32).astype(enc_out.dtype)
+        return k, v
+    return jax.vmap(one)(params["layers"])  # (L,B,F,KV,hd) each
+
+
+def forward(cfg: ModelConfig, params: Params, batch: dict
+            ) -> tuple[jax.Array, jax.Array]:
+    """Teacher-forcing forward. Returns (logits over text positions, aux)."""
+    if cfg.family == "audio":
+        enc_out = _run_encoder(cfg, params, batch["frames"])
+        cross_k, cross_v = _encoder_cross_kv(cfg, params, enc_out)
+        x, positions, _ = _build_inputs(cfg, params, batch)
+
+        def body(carry, xs):
+            lp, ck, cv = xs
+            h, _, aux = _attn_block_seq(cfg, lp, carry, positions, 0,
+                                        causal=True, kv_cache=None)
+            h = _cross_block(cfg, lp, h, ck, cv)
+            return h, aux
+
+        fn = jax.checkpoint(body) if cfg.remat else body
+        x, auxs = jax.lax.scan(fn, x, (params["layers"], cross_k, cross_v))
+        return output_logits(cfg, params, x), jnp.sum(auxs)
+
+    x, positions, text_start = _build_inputs(cfg, params, batch)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        meta = _layer_meta(cfg)
+
+        def body(carry, xs):
+            lp, m = xs
+            h, _, aux = _attn_block_seq(cfg, lp, carry, positions,
+                                        m["window"], causal=True,
+                                        kv_cache=None)
+            return h, aux
+
+        fn = jax.checkpoint(body) if cfg.remat else body
+        x, auxs = jax.lax.scan(fn, x, (params["layers"], meta))
+        logits = output_logits(cfg, params, x)
+        if cfg.family == "vlm":
+            logits = logits[:, text_start:]
+        return logits, jnp.sum(auxs)
+
+    if cfg.family == "ssm":
+        def body(carry, lp):
+            h, _ = _ssm_block_seq(cfg, lp, carry, None)
+            return h, None
+
+        fn = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(fn, x, params["layers"])
+        return output_logits(cfg, params, x), jnp.zeros((), jnp.float32)
+
+    if cfg.family == "hybrid":
+        blocks = cfg.layer_blocks()
+        ia = ir = 0
+        for b in blocks:
+            if b == "a":
+                lp = jax.tree.map(lambda p, i=ia: p[i], params["attn_layers"])
+                win = cfg.layer_windows()[ia + ir]
+                body = lambda h: _attn_block_seq(  # noqa: E731
+                    cfg, lp, h, positions, win, causal=True, kv_cache=None)[0]
+                x = jax.checkpoint(body)(x) if cfg.remat else body(x)
+                ia += 1
+            else:
+                lp = jax.tree.map(lambda p, i=ir: p[i], params["rglru_layers"])
+                body = lambda h: _rglru_block_seq(cfg, lp, h, None)[0]  # noqa: E731
+                x = jax.checkpoint(body)(x) if cfg.remat else body(x)
+                ir += 1
+        return output_logits(cfg, params, x), jnp.zeros((), jnp.float32)
+
+    raise ValueError(cfg.family)
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: dict
+            ) -> tuple[jax.Array, dict]:
+    logits, aux = forward(cfg, params, batch)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    ce = jnp.sum(nll * mask) / denom
+    total = ce + AUX_LOSS_WEIGHT * aux
+    return total, {"ce": ce, "aux": aux,
+                   "accuracy": jnp.sum(
+                       (jnp.argmax(logits, -1) == labels) * mask) / denom}
+
+
+# ===========================================================================
+# KV / state caches
+# ===========================================================================
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int,
+               dtype=jnp.bfloat16) -> Params:
+    """Concrete zero cache. Use inside jax.eval_shape for dry-run specs.
+
+    Ring mode (§Perf variant): attention caches hold only decode_window
+    slots regardless of logical context length."""
+    B, M = batch_size, max_len
+    if cfg.ring_cache and cfg.decode_window > 0:
+        M = min(M, cfg.decode_window)
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+
+    def kv(n):
+        return {"k": jnp.zeros((n, B, M, KV, hd), dtype),
+                "v": jnp.zeros((n, B, M, KV, hd), dtype)}
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        return kv(cfg.num_layers)
+    if cfg.family == "ssm":
+        C = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+        return {
+            "ssd": jnp.zeros((cfg.num_layers, B, cfg.ssm_heads,
+                              cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+            "conv": jnp.zeros((cfg.num_layers, B, cfg.d_conv - 1, C), dtype),
+        }
+    if cfg.family == "hybrid":
+        blocks = cfg.layer_blocks()
+        n_attn, n_rec = blocks.count("a"), blocks.count("r")
+        c = kv(n_attn)
+        c["h"] = jnp.zeros((n_rec, B, cfg.d_rnn), jnp.float32)
+        c["conv"] = jnp.zeros((n_rec, B, cfg.d_conv - 1, cfg.d_rnn), dtype)
+        return c
+    if cfg.family == "audio":
+        c = kv(cfg.num_layers)
+        c["cross_k"] = jnp.zeros((cfg.num_layers, B, cfg.encoder_frames,
+                                  KV, hd), dtype)
+        c["cross_v"] = jnp.zeros_like(c["cross_k"])
+        return c
+    raise ValueError(cfg.family)
+
+
+# ===========================================================================
+# Prefill
+# ===========================================================================
+
+
+def prefill(cfg: ModelConfig, params: Params, batch: dict, max_len: int
+            ) -> tuple[jax.Array, Params, jax.Array]:
+    """Run the prompt through the model, building a cache.
+
+    Returns (last-position logits (B, V), cache, next position scalar).
+    """
+    if cfg.family == "audio":
+        enc_out = _run_encoder(cfg, params, batch["frames"])
+        cross_k, cross_v = _encoder_cross_kv(cfg, params, enc_out)
+        x, positions, _ = _build_inputs(cfg, params, batch)
+        B, Stot = x.shape[0], x.shape[1]
+
+        def body(carry, xs):
+            lp, ck, cv = xs
+            h, new_kv, _ = _attn_block_seq(cfg, lp, carry, positions, 0,
+                                           causal=True, kv_cache={})
+            h = _cross_block(cfg, lp, h, ck, cv)
+            return h, new_kv
+
+        x, kv = jax.lax.scan(body, x, (params["layers"], cross_k, cross_v))
+        cache = _pad_kv(kv, max_len)
+        cache["cross_k"], cache["cross_v"] = cross_k, cross_v
+        logits = output_logits(cfg, params, x[:, -1:, :])[:, 0]
+        return logits, cache, jnp.asarray(Stot, jnp.int32)
+
+    x, positions, _ = _build_inputs(cfg, params, batch)
+    B, Stot = x.shape[0], x.shape[1]
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        meta = _layer_meta(cfg)
+
+        def body(carry, xs):
+            lp, m = xs
+            h, new_kv, _ = _attn_block_seq(cfg, lp, carry, positions,
+                                           m["window"], causal=True,
+                                           kv_cache={})
+            return h, new_kv
+
+        x, kv = jax.lax.scan(body, x, (params["layers"], meta))
+        cache = _pad_kv(kv, max_len)
+        logits = output_logits(cfg, params, x[:, -1:, :])[:, 0]
+        return logits, cache, jnp.asarray(Stot, jnp.int32)
+
+    if cfg.family == "ssm":
+        def body(carry, lp):
+            h, st = _ssm_block_seq(cfg, lp, carry, None)
+            return h, st
+
+        x, states = jax.lax.scan(body, x, params["layers"])
+        logits = output_logits(cfg, params, x[:, -1:, :])[:, 0]
+        return logits, states, jnp.asarray(Stot, jnp.int32)
+
+    if cfg.family == "hybrid":
+        blocks = cfg.layer_blocks()
+        ks, vs, hs, convs = [], [], [], []
+        ia = ir = 0
+        for b in blocks:
+            if b == "a":
+                lp = jax.tree.map(lambda p, i=ia: p[i], params["attn_layers"])
+                win = cfg.layer_windows()[ia + ir]
+                x, new_kv, _ = _attn_block_seq(cfg, lp, x, positions, win,
+                                               causal=True, kv_cache={})
+                ks.append(new_kv["k"])
+                vs.append(new_kv["v"])
+                ia += 1
+            else:
+                lp = jax.tree.map(lambda p, i=ir: p[i], params["rglru_layers"])
+                x, st = _rglru_block_seq(cfg, lp, x, None)
+                hs.append(st["h"])
+                convs.append(st["conv"])
+                ir += 1
+        kv = {"k": jnp.stack(ks), "v": jnp.stack(vs)}
+        cache = _pad_kv(kv, max_len)
+        cache["h"] = jnp.stack(hs)
+        cache["conv"] = jnp.stack(convs)
+        logits = output_logits(cfg, params, x[:, -1:, :])[:, 0]
+        return logits, cache, jnp.asarray(Stot, jnp.int32)
+
+    raise ValueError(cfg.family)
+
+
+def _pad_kv(kv: Params, max_len: int) -> Params:
+    S = kv["k"].shape[2]
+    pad = max_len - S
+    assert pad >= 0, (S, max_len)
+    return {
+        "k": jnp.pad(kv["k"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+        "v": jnp.pad(kv["v"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+    }
+
+
+# ===========================================================================
+# Decode step
+# ===========================================================================
+
+
+def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                cache: Params, pos: jax.Array
+                ) -> tuple[jax.Array, Params]:
+    """One decode step.
+
+    tokens: (B,) int32 — the token at position ``pos`` (cache holds
+    positions [0, pos)). Returns (logits (B, V), updated cache).
+    """
+    x = embed_tokens(cfg, params, tokens[:, None])[:, 0]
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        meta = _layer_meta(cfg)
+
+        def body(carry, xs):
+            lp, m, kv = xs
+            h = _attn_block_step(cfg, lp, carry, pos, m["window"], kv)
+            return h[0], h[1]
+
+        x, kv = jax.lax.scan(body, x, (params["layers"], meta, cache))
+        return output_logits(cfg, params, x[:, None, :])[:, 0], kv
+
+    if cfg.family == "ssm":
+        def body(carry, xs):
+            lp, st = xs
+            h, new_st = _ssm_block_step(cfg, lp, carry, st)
+            return h, new_st
+
+        x, states = jax.lax.scan(body, x, (params["layers"], cache))
+        return output_logits(cfg, params, x[:, None, :])[:, 0], states
+
+    if cfg.family == "hybrid":
+        blocks = cfg.layer_blocks()
+        ks, vs, hs, convs = [], [], [], []
+        ia = ir = 0
+        for b in blocks:
+            if b == "a":
+                lp = jax.tree.map(lambda p, i=ia: p[i], params["attn_layers"])
+                kv = {"k": cache["k"][ia], "v": cache["v"][ia]}
+                win = cfg.layer_windows()[ia + ir]
+                x, new_kv = _attn_block_step(cfg, lp, x, pos, win, kv)
+                ks.append(new_kv["k"])
+                vs.append(new_kv["v"])
+                ia += 1
+            else:
+                lp = jax.tree.map(lambda p, i=ir: p[i], params["rglru_layers"])
+                st = {"h": cache["h"][ir], "conv": cache["conv"][ir]}
+                x, new_st = _rglru_block_step(cfg, lp, x, st)
+                hs.append(new_st["h"])
+                convs.append(new_st["conv"])
+                ir += 1
+        new_cache = {"k": jnp.stack(ks), "v": jnp.stack(vs),
+                     "h": jnp.stack(hs), "conv": jnp.stack(convs)}
+        return output_logits(cfg, params, x[:, None, :])[:, 0], new_cache
+
+    if cfg.family == "audio":
+        def body(carry, xs):
+            lp, kv, ck, cv = xs
+            h = _attn_block_step(cfg, lp, carry, pos, 0,
+                                 {"k": kv["k"], "v": kv["v"]})
+            x2 = _cross_block(cfg, lp, h[0][:, None, :], ck, cv)[:, 0]
+            return x2, h[1]
+
+        x, kv = jax.lax.scan(
+            body, x, (params["layers"],
+                      {"k": cache["k"], "v": cache["v"]},
+                      cache["cross_k"], cache["cross_v"]))
+        new_cache = dict(kv)
+        new_cache["cross_k"], new_cache["cross_v"] = (cache["cross_k"],
+                                                      cache["cross_v"])
+        return output_logits(cfg, params, x[:, None, :])[:, 0], new_cache
+
+    raise ValueError(cfg.family)

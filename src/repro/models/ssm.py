@@ -1,0 +1,329 @@
+"""State-space and linear-recurrent layers.
+
+* Mamba-2 SSD (state-space duality) block [arXiv:2405.21060] — the chunked
+  "dual form": intra-chunk quadratic (MXU-friendly masked matmul) +
+  inter-chunk linear recurrence over chunk states.
+* RG-LRU (Real-Gated Linear Recurrent Unit) from RecurrentGemma / Griffin
+  [arXiv:2402.19427] — implemented with an associative scan for
+  train/prefill and a single fused step for decode.
+
+Both expose a (sequence-mode, step-mode) pair so the serving engine can run
+prefill with the parallel form and decode with the O(1)-state recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, dense_init, rmsnorm, rmsnorm_init
+
+# ---------------------------------------------------------------------------
+# Depthwise causal conv1d (shared by Mamba2 and RG-LRU branches)
+# ---------------------------------------------------------------------------
+
+
+def conv1d_init(key: jax.Array, channels: int, kernel: int,
+                dtype=jnp.bfloat16) -> Params:
+    return {"w": dense_init(key, (kernel, channels), dtype=dtype),
+            "b": jnp.zeros((channels,), dtype)}
+
+
+def causal_conv1d(params: Params, x: jax.Array) -> jax.Array:
+    """x: (B, S, C) -> (B, S, C), depthwise causal convolution."""
+    k = params["w"].shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):  # k is tiny (4); unrolled adds, no gather
+        out = out + pad[:, i:i + x.shape[1], :].astype(jnp.float32) * params["w"][i]
+    return jax.nn.silu(out + params["b"]).astype(x.dtype)
+
+
+def causal_conv1d_step(params: Params, x_t: jax.Array,
+                       buf: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """One decode step. x_t: (B, C); buf: (B, k-1, C) previous inputs."""
+    k = params["w"].shape[0]
+    window = jnp.concatenate([buf, x_t[:, None, :]], axis=1)  # (B, k, C)
+    out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), params["w"])
+    out = jax.nn.silu(out + params["b"]).astype(x_t.dtype)
+    return out, window[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD
+# ---------------------------------------------------------------------------
+
+
+def mamba2_init(key: jax.Array, d_model: int, *, d_state: int, head_dim: int,
+                expand: int = 2, n_groups: int = 1, d_conv: int = 4,
+                dtype=jnp.bfloat16) -> Params:
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    keys = jax.random.split(key, 5)
+    d_in_proj = 2 * d_inner + 2 * n_groups * d_state + n_heads
+    return {
+        "in_proj": dense_init(keys[0], (d_model, d_in_proj), dtype=dtype),
+        "conv": conv1d_init(keys[1], d_inner + 2 * n_groups * d_state, d_conv,
+                            dtype=dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads, dtype=jnp.float32)),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm": rmsnorm_init(d_inner),
+        "out_proj": dense_init(keys[2], (d_inner, d_model), dtype=dtype),
+    }
+
+
+def _ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                 C: jax.Array, chunk: int,
+                 h0: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """SSD dual form. x: (B,S,H,P); dt: (B,S,H); A: (H,) <0; B,C: (B,S,G,N).
+
+    Returns (y (B,S,H,P), final state (B,H,P,N)).
+    """
+    Bsz, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    assert S % chunk == 0, f"seq {S} % chunk {chunk} != 0"
+    nc = S // chunk
+    rep = H // G
+
+    xd = (x * dt[..., None]).astype(jnp.float32)          # dt-weighted input
+    a = A[None, None, :] * dt                              # (B,S,H) log-decay <0
+    # reshape into chunks
+    xc = xd.reshape(Bsz, nc, chunk, H, P)
+    ac = a.reshape(Bsz, nc, chunk, H)
+    Bc = B.reshape(Bsz, nc, chunk, G, N).astype(jnp.float32)
+    Cc = C.reshape(Bsz, nc, chunk, G, N).astype(jnp.float32)
+    Bh = jnp.repeat(Bc, rep, axis=3)                       # (B,nc,Q,H,N)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    cum = jnp.cumsum(ac, axis=2)                           # (B,nc,Q,H)
+    # intra-chunk: L[q,s] = exp(cum[q]-cum[s]) for q>=s.
+    # Mask BEFORE the exp: exp of a large positive (q<s) value would be inf,
+    # and `where(mask, inf, 0)` is fine forward but NaNs the backward pass.
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # rel[b,c,q,s,h]
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    rel = jnp.where(causal[None, None, :, :, None], rel, -jnp.inf)
+    L = jnp.exp(rel)
+    scores = jnp.einsum("bcqhn,bcshn->bcqsh", Ch, Bh,
+                        preferred_element_type=jnp.float32)
+    y_diag = jnp.einsum("bcqsh,bcqsh,bcshp->bcqhp", scores, L, xc,
+                        preferred_element_type=jnp.float32)
+
+    # chunk-final states: states[c] = sum_s exp(cum[last]-cum[s]) B_s x_s
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)        # (B,nc,Q,H)
+    states = jnp.einsum("bcshn,bcsh,bcshp->bchpn", Bh, decay_to_end, xc,
+                        preferred_element_type=jnp.float32)
+
+    # inter-chunk recurrence over nc chunk states
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                # (B,nc,H)
+
+    def scan_fn(h, inp):
+        st, dec = inp                                      # (B,H,P,N), (B,H)
+        h_new = h * dec[..., None, None] + st
+        return h_new, h
+
+    hinit = jnp.zeros((Bsz, H, P, N), jnp.float32) if h0 is None else h0
+    h_last, h_prevs = jax.lax.scan(
+        scan_fn, hinit,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                  # (B,nc,H,P,N) state entering chunk c
+
+    # inter-chunk contribution: y_off[q] = C_q · (exp(cum[q]) * h_prev)
+    in_decay = jnp.exp(cum)                                # (B,nc,Q,H)
+    y_off = jnp.einsum("bcqhn,bcqh,bchpn->bcqhp", Ch, in_decay, h_prevs,
+                       preferred_element_type=jnp.float32)
+
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)
+    return y, h_last
+
+
+def mamba2_seq(params: Params, x: jax.Array, *, d_state: int, head_dim: int,
+               n_groups: int = 1, chunk: int = 256,
+               state: Params | None = None) -> tuple[jax.Array, Params]:
+    """Sequence mode (train / prefill). x: (B, S, D) -> (B, S, D), cache.
+
+    Lengths that don't divide the chunk are zero-padded; padded positions
+    get dt = 0, which makes them exact no-ops on the recurrent state
+    (decay exp(0·A) = 1, input contribution dt·B·x = 0)."""
+    Bsz, S, D = x.shape
+    d_inner = params["out_proj"].shape[0]
+    H = d_inner // head_dim
+    GN = n_groups * d_state
+
+    chunk = min(chunk, max(S, 1))
+    Sp = ((S + chunk - 1) // chunk) * chunk
+    if Sp != S:
+        x = jnp.pad(x, ((0, 0), (0, Sp - S), (0, 0)))
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["in_proj"],
+                        preferred_element_type=jnp.float32).astype(x.dtype)
+    z, xin, Bmat, Cmat, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + GN, 2 * d_inner + 2 * GN],
+        axis=-1)
+    xbc = jnp.concatenate([xin, Bmat, Cmat], axis=-1)
+    xbc = causal_conv1d(params["conv"], xbc)
+    xin, Bmat, Cmat = jnp.split(xbc, [d_inner, d_inner + GN], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,Sp,H)
+    if Sp != S:
+        valid = (jnp.arange(Sp) < S)[None, :, None]
+        dt = dt * valid                       # padded steps: state no-op
+    A = -jnp.exp(params["A_log"])                                     # (H,)
+    xh = xin.reshape(Bsz, Sp, H, head_dim)
+    Bh = Bmat.reshape(Bsz, Sp, n_groups, d_state)
+    Ch = Cmat.reshape(Bsz, Sp, n_groups, d_state)
+
+    h0 = state["ssd"] if state is not None else None
+    y, h_last = _ssd_chunked(xh, dt, A, Bh, Ch, chunk, h0)
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(Bsz, Sp, d_inner).astype(x.dtype)
+    if Sp != S:
+        y = y[:, :S]
+        z = z[:, :S]
+        zxbcdt = zxbcdt[:, :S]
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype))
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    # conv cache holds the last (k-1) PRE-activation conv inputs
+    k = params["conv"]["w"].shape[0]
+    zxbcdt_tail = zxbcdt[:, -(k - 1):, :]
+    if zxbcdt_tail.shape[1] < k - 1:   # very short prompts: left-pad
+        zxbcdt_tail = jnp.pad(
+            zxbcdt_tail,
+            ((0, 0), (k - 1 - zxbcdt_tail.shape[1], 0), (0, 0)))
+    pre = jnp.concatenate([
+        zxbcdt_tail[..., d_inner:2 * d_inner],
+        zxbcdt_tail[..., 2 * d_inner:2 * d_inner + 2 * GN]], axis=-1)
+    return out, {"ssd": h_last, "conv": pre.astype(x.dtype)}
+
+
+def mamba2_step(params: Params, x_t: jax.Array, state: Params, *,
+                d_state: int, head_dim: int, n_groups: int = 1
+                ) -> tuple[jax.Array, Params]:
+    """Decode step. x_t: (B, D); state: {'ssd': (B,H,P,N), 'conv': (B,k-1,C)}."""
+    Bsz, D = x_t.shape
+    d_inner = params["out_proj"].shape[0]
+    H = d_inner // head_dim
+    GN = n_groups * d_state
+
+    zxbcdt = jnp.einsum("bd,de->be", x_t, params["in_proj"],
+                        preferred_element_type=jnp.float32).astype(x_t.dtype)
+    z, xin, Bmat, Cmat, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + GN, 2 * d_inner + 2 * GN],
+        axis=-1)
+    xbc = jnp.concatenate([xin, Bmat, Cmat], axis=-1)
+    xbc, conv_buf = causal_conv1d_step(params["conv"], xbc, state["conv"])
+    xin, Bmat, Cmat = jnp.split(xbc, [d_inner, d_inner + GN], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    A = -jnp.exp(params["A_log"])
+    xh = (xin.reshape(Bsz, H, head_dim) * dt[..., None]).astype(jnp.float32)
+    Bh = jnp.repeat(Bmat.reshape(Bsz, n_groups, d_state), H // n_groups, axis=1)
+    Ch = jnp.repeat(Cmat.reshape(Bsz, n_groups, d_state), H // n_groups, axis=1)
+
+    decay = jnp.exp(A[None, :] * dt)                       # (B,H)
+    h = state["ssd"] * decay[..., None, None] + \
+        xh[..., :, None] * Bh.astype(jnp.float32)[:, :, None, :]  # (B,H,P,N)
+    y = jnp.einsum("bhpn,bhn->bhp", h, Ch.astype(jnp.float32))
+    y = y + params["D"][None, :, None] * xin.reshape(Bsz, H, head_dim).astype(jnp.float32)
+    y = y.reshape(Bsz, d_inner).astype(x_t.dtype)
+    y = rmsnorm(params["norm"],
+                (y * jax.nn.silu(z.astype(jnp.float32)).astype(x_t.dtype))[:, None, :])[:, 0]
+    out = jnp.einsum("be,ed->bd", y, params["out_proj"],
+                     preferred_element_type=jnp.float32).astype(x_t.dtype)
+    return out, {"ssd": h, "conv": conv_buf}
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (RecurrentGemma recurrent block)
+# ---------------------------------------------------------------------------
+
+RGLRU_C = 8.0
+
+
+def rglru_block_init(key: jax.Array, d_model: int, d_rnn: int, *,
+                     d_conv: int = 4, dtype=jnp.bfloat16) -> Params:
+    keys = jax.random.split(key, 6)
+    # Λ init so that a ∈ (0.9, 0.999) roughly (griffin appendix)
+    u = jax.random.uniform(keys[0], (d_rnn,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1((-jnp.log(u)) / RGLRU_C))  # softplus^-1(-log u / c)
+    return {
+        "w_gate_branch": dense_init(keys[1], (d_model, d_rnn), dtype=dtype),
+        "w_rnn_branch": dense_init(keys[2], (d_model, d_rnn), dtype=dtype),
+        "conv": conv1d_init(keys[3], d_rnn, d_conv, dtype=dtype),
+        "w_a": dense_init(keys[4], (d_rnn, d_rnn), dtype=dtype),
+        "w_i": dense_init(keys[5], (d_rnn, d_rnn), dtype=dtype),
+        "b_a": jnp.zeros((d_rnn,), jnp.float32),
+        "b_i": jnp.zeros((d_rnn,), jnp.float32),
+        "lambda": lam,
+        "out_proj": dense_init(jax.random.fold_in(key, 7), (d_rnn, d_model),
+                               dtype=dtype),
+    }
+
+
+def _rglru_gates(params: Params, x: jax.Array):
+    r = jax.nn.sigmoid(jnp.einsum("...c,cd->...d", x, params["w_a"],
+                                  preferred_element_type=jnp.float32)
+                       + params["b_a"])
+    i = jax.nn.sigmoid(jnp.einsum("...c,cd->...d", x, params["w_i"],
+                                  preferred_element_type=jnp.float32)
+                       + params["b_i"])
+    log_a = -RGLRU_C * jax.nn.softplus(params["lambda"]) * r   # <= 0
+    a = jnp.exp(log_a)
+    gated_in = i * x.astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)) * gated_in
+    return a, b
+
+
+def rglru_seq(params: Params, x: jax.Array,
+              state: Params | None = None) -> tuple[jax.Array, Params]:
+    """Full recurrent block, sequence mode. x: (B,S,D) -> (B,S,D), cache."""
+    gate = jax.nn.gelu(jnp.einsum(
+        "bsd,de->bse", x, params["w_gate_branch"],
+        preferred_element_type=jnp.float32)).astype(x.dtype)
+    u = jnp.einsum("bsd,de->bse", x, params["w_rnn_branch"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    k = params["conv"]["w"].shape[0]
+    if state is not None:
+        u_ext = jnp.concatenate([state["conv"], u], axis=1)
+        uc = causal_conv1d(params["conv"], u_ext)[:, k - 1:, :]
+    else:
+        uc = causal_conv1d(params["conv"], u)
+    a, b = _rglru_gates(params, uc)                         # (B,S,C) each
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    if state is not None:
+        # inject h0 by prepending an element (a=0 ⇒ resets, b=h0)
+        a = jnp.concatenate([jnp.zeros_like(a[:, :1]), a], axis=1)
+        b = jnp.concatenate([state["h"][:, None, :], b], axis=1)
+        _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+        h = h[:, 1:, :]
+    else:
+        _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+
+    y = (h.astype(x.dtype) * gate)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    conv_buf = u[:, -(k - 1):, :] if u.shape[1] >= k - 1 else jnp.pad(
+        u, ((0, 0), (k - 1 - u.shape[1], 0), (0, 0)))
+    return out, {"h": h[:, -1, :].astype(jnp.float32), "conv": conv_buf}
+
+
+def rglru_step(params: Params, x_t: jax.Array,
+               state: Params) -> tuple[jax.Array, Params]:
+    """Decode step. x_t: (B,D); state: {'h': (B,C) f32, 'conv': (B,k-1,C)}."""
+    gate = jax.nn.gelu(jnp.einsum(
+        "bd,de->be", x_t, params["w_gate_branch"],
+        preferred_element_type=jnp.float32)).astype(x_t.dtype)
+    u = jnp.einsum("bd,de->be", x_t, params["w_rnn_branch"],
+                   preferred_element_type=jnp.float32).astype(x_t.dtype)
+    uc, conv_buf = causal_conv1d_step(params["conv"], u, state["conv"])
+    a, b = _rglru_gates(params, uc)
+    h = a * state["h"] + b
+    y = (h.astype(x_t.dtype) * gate)
+    out = jnp.einsum("be,ed->bd", y, params["out_proj"],
+                     preferred_element_type=jnp.float32).astype(x_t.dtype)
+    return out, {"h": h, "conv": conv_buf}

@@ -1,0 +1,3 @@
+from repro.serving.engine import ServingEngine, greedy_generate
+
+__all__ = ["ServingEngine", "greedy_generate"]

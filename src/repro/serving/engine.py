@@ -1,0 +1,72 @@
+"""Batched serving: prefill + greedy decode over the unified model API.
+
+``ServingEngine`` maintains a jit cache keyed on (batch, prompt_len,
+max_new) so repeated calls with uniform-shaped request batches (the common
+case in the RAR evaluation loop: unguided / guided / guide-request prompts
+each have a fixed length) hit compiled code.
+
+This is the same ``prefill`` / ``decode_step`` pair the multi-pod dry-run
+lowers at production shapes — the engine is the single-host driver of it.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step, prefill
+from repro.models.config import ModelConfig
+
+
+def greedy_generate(cfg: ModelConfig, params: Any, batch: dict,
+                    max_new: int) -> jax.Array:
+    """Greedy decode ``max_new`` tokens after the prompt.
+
+    batch["tokens"]: (B, Lp) un-padded prompts (uniform length).
+    Returns (B, max_new) int32.
+    """
+    tokens = batch["tokens"]
+    B, Lp = tokens.shape
+    extra = cfg.num_patches if cfg.family == "vlm" else 0
+    max_len = Lp + extra + max_new
+    logits, cache, pos = prefill(cfg, params, batch, max_len)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def body(carry, _):
+        tok, cache, pos = carry
+        logits, cache = decode_step(cfg, params, tok, cache, pos)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return (nxt, cache, pos + 1), tok
+
+    (_, _, _), outs = jax.lax.scan(body, (tok, cache, pos),
+                                   None, length=max_new)
+    return jnp.moveaxis(outs, 0, 1)  # (B, max_new)
+
+
+class ServingEngine:
+    """Jit-cached greedy serving for one model."""
+
+    def __init__(self, cfg: ModelConfig, params: Any):
+        self.cfg = cfg
+        self.params = params
+        self._jitted: dict[tuple, Any] = {}
+        self.calls = 0          # inference calls served (RAR cost metric)
+        self.tokens_processed = 0
+
+    def generate(self, batch: dict, max_new: int) -> jax.Array:
+        tokens = batch["tokens"]
+        key = (tokens.shape, max_new) + tuple(sorted(
+            k for k in batch if k != "tokens"))
+        if key not in self._jitted:
+            self._jitted[key] = jax.jit(
+                partial(greedy_generate, self.cfg, max_new=max_new))
+        out = self._jitted[key](params=self.params, batch=batch)
+        self.calls += tokens.shape[0]
+        self.tokens_processed += tokens.size + out.size
+        return out
+
+    @property
+    def flops_spent(self) -> float:
+        return self.tokens_processed * self.cfg.flops_per_token()

@@ -1,0 +1,38 @@
+"""Minimal pytree checkpointing (numpy .npz + structure pickle).
+
+Orbax is not available offline; this covers the framework's needs: save /
+restore params, optimizer state, and RAR memory snapshots atomically.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import tempfile
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def save_checkpoint(path: str, tree: Any) -> None:
+    leaves, treedef = jax.tree.flatten(tree)
+    arrays = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            pickle.dump(treedef, f)
+            np.savez(f, **arrays)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def load_checkpoint(path: str) -> Any:
+    with open(path, "rb") as f:
+        treedef = pickle.load(f)
+        data = np.load(f)
+        leaves = [data[f"leaf_{i}"] for i in range(len(data.files))]
+    return jax.tree.unflatten(treedef, leaves)

@@ -1,0 +1,102 @@
+"""AdamW with f32 master weights, implemented directly in JAX.
+
+Mixed-precision layout (standard TPU practice, and what the FSDP sharding
+math in DESIGN.md §4 budgets for):
+
+* model params live in bf16 (compute dtype),
+* optimizer state carries f32 ``master`` weights plus f32 ``mu``/``nu``
+  moments — 14 bytes/param total.
+
+State and params share sharding specs leaf-for-leaf, so the FSDP rules in
+:mod:`repro.models.sharding` apply unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    learning_rate: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def lr_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup then cosine decay to ``min_lr_ratio``."""
+    step = step.astype(jnp.float32)
+    warm = cfg.learning_rate * step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.learning_rate * cos)
+
+
+def init_opt_state(params: Any) -> dict:
+    # copy=True: an f32 param's .astype would alias the same buffer, and
+    # donating params+master together would then double-donate it.
+    f32 = lambda p: jnp.array(p, jnp.float32, copy=True)  # noqa: E731
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "master": jax.tree.map(f32, params),
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(cfg: AdamWConfig, grads: Any, opt_state: dict,
+                 like: Any = None) -> tuple[Any, dict, dict]:
+    """Returns (new params cast to the dtype of ``like`` — or of the
+    grads when ``like`` is None — plus new opt state and metrics)."""
+    step = opt_state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip_norm / jnp.maximum(gnorm, 1e-9))
+
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p
+        return m, v, p - lr * delta
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(opt_state["mu"])
+    flat_v = treedef.flatten_up_to(opt_state["nu"])
+    flat_p = treedef.flatten_up_to(opt_state["master"])
+    out = [upd(g, m, v, p) for g, m, v, p in
+           zip(flat_g, flat_m, flat_v, flat_p)]
+    new_mu = treedef.unflatten([o[0] for o in out])
+    new_nu = treedef.unflatten([o[1] for o in out])
+    new_master = treedef.unflatten([o[2] for o in out])
+
+    ref = like if like is not None else grads
+    cast = jax.tree.map(
+        lambda mp, old: mp.astype(old.dtype), new_master, ref)
+    new_state = {"step": step, "master": new_master,
+                 "mu": new_mu, "nu": new_nu}
+    return cast, new_state, {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,36 @@
+import os
+
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 device;
+# only repro.launch.dryrun forces 512 placeholder devices (in-process).
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def pytest_addoption(parser):
+    parser.addoption("--skip-slow", action="store_true",
+                     default=bool(os.environ.get("REPRO_FAST")),
+                     help="skip slow integration tests (trained RAR "
+                          "system, subprocess dry-runs)")
+    parser.addoption("--run-slow", action="store_true", default=False,
+                     help="deprecated no-op (slow tests run by default)")
+
+
+def pytest_collection_modifyitems(config, items):
+    if not config.getoption("--skip-slow"):
+        return
+    skip = pytest.mark.skip(reason="slow; skipped via --skip-slow")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

@@ -1,0 +1,45 @@
+"""Multi-pod dry-run smoke (slow: subprocess with 512 placeholder devices).
+
+The full 10×4×2 sweep runs via ``python -m repro.launch.dryrun --all
+--both-meshes`` (results in EXPERIMENTS.md); here we gate a representative
+subset in CI fashion: one arch per family × one shape each, both meshes
+for one of them.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+pytestmark = pytest.mark.slow
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+CASES = [
+    ("llama3-8b", "decode_32k", False),
+    ("llama3-8b", "decode_32k", True),          # multi-pod
+    ("mamba2-2.7b", "long_500k", False),
+    ("olmoe-1b-7b", "prefill_32k", False),
+    ("recurrentgemma-2b", "decode_32k", False),
+    ("whisper-medium", "train_4k", False),
+]
+
+
+@pytest.mark.parametrize("arch,shape,mp", CASES)
+def test_dryrun_pair_compiles(arch, shape, mp, tmp_path):
+    out = os.path.join(tmp_path, "dr.json")
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--out", out]
+    if mp:
+        cmd.append("--multi-pod")
+    env = dict(os.environ, PYTHONPATH=SRC)
+    r = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                       timeout=1800)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    with open(out) as f:
+        recs = json.load(f)
+    rec = recs[-1]
+    assert rec["status"] == "ok", rec
+    assert rec["roofline"]["flops_per_device"] > 0
+    assert rec["roofline"]["dominant"] in ("compute", "memory", "collective")

@@ -1,0 +1,142 @@
+"""Pallas kernel validation: shape/dtype sweeps in interpret mode against
+the pure-jnp oracles in repro.kernels.ref."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.memory_topk import memory_top1_pallas
+
+TOL = {np.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+# ---------------------------------------------------------------------------
+# memory_top1
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("C", [64, 300, 1024, 4096])
+@pytest.mark.parametrize("E", [128, 384])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_memory_top1_sweep(rng, C, E, dtype):
+    mem = rng.normal(size=(C, E)).astype(np.float32)
+    mem /= np.linalg.norm(mem, axis=1, keepdims=True)
+    q = rng.normal(size=(E,)).astype(np.float32)
+    q /= np.linalg.norm(q)
+    mask = rng.random(C) < 0.6
+    mask[int(rng.integers(0, C))] = True  # never empty
+    mem_t = jnp.asarray(mem, dtype)
+    s_ref, i_ref = ref.memory_top1(mem_t, jnp.asarray(q), jnp.asarray(mask))
+    s_p, i_p = memory_top1_pallas(mem_t, jnp.asarray(q), jnp.asarray(mask),
+                                  block_c=128, interpret=True)
+    assert int(i_ref) == int(i_p)
+    np.testing.assert_allclose(float(s_ref), float(s_p), atol=1e-5)
+
+
+def test_memory_top1_empty_mask(rng):
+    mem = jnp.asarray(rng.normal(size=(64, 128)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(128,)), jnp.float32)
+    mask = jnp.zeros((64,), bool)
+    s, _ = memory_top1_pallas(mem, q, mask, block_c=32, interpret=True)
+    assert float(s) == -2.0
+
+
+def test_memory_top1_exact_hit(rng):
+    """Query equal to a stored row must retrieve that row with sim≈1."""
+    mem = rng.normal(size=(256, 384)).astype(np.float32)
+    mem /= np.linalg.norm(mem, axis=1, keepdims=True)
+    q = mem[123]
+    mask = np.ones(256, bool)
+    s, i = memory_top1_pallas(jnp.asarray(mem), jnp.asarray(q),
+                              jnp.asarray(mask), block_c=64, interpret=True)
+    assert int(i) == 123
+    assert float(s) > 0.999
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("S,window", [(128, 0), (256, 0), (256, 64),
+                                      (512, 128), (256, 32)])
+@pytest.mark.parametrize("H,KV", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_flash_attention_sweep(rng, S, window, H, KV, dtype):
+    B, hd = 2, 32
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, hd)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, hd)), dtype)
+    o_ref = ref.flash_attention(q, k, v, causal=True, window=window)
+    o_p = flash_attention_pallas(q, k, v, causal=True, window=window,
+                                 block_q=64, block_k=64, interpret=True)
+    tol = TOL[dtype]
+    np.testing.assert_allclose(np.asarray(o_p, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_noncausal(rng):
+    B, S, H, hd = 1, 128, 2, 32
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    o_ref = ref.flash_attention(q, k, v, causal=False)
+    o_p = flash_attention_pallas(q, k, v, causal=False, block_q=64,
+                                 block_k=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(o_p), np.asarray(o_ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_block_skip_equals_masked(rng):
+    """Window smaller than a block: skipped blocks must not change the
+    result (the FLOPs-saving path is numerically identical)."""
+    B, S, H, hd = 1, 512, 2, 32
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    o_ref = ref.flash_attention(q, k, v, causal=True, window=16)
+    o_p = flash_attention_pallas(q, k, v, causal=True, window=16,
+                                 block_q=128, block_k=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(o_p), np.asarray(o_ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("M,clen,window", [
+    (256, 256, 0), (512, 300, 0), (512, 300, 64), (1024, 1000, 256),
+    (256, 1, 0)])
+@pytest.mark.parametrize("H,KV", [(4, 4), (8, 2)])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_decode_attention_sweep(rng, M, clen, window, H, KV, dtype):
+    B, hd = 2, 32
+    q = jnp.asarray(rng.normal(size=(B, H, hd)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, M, KV, hd)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, M, KV, hd)), dtype)
+    cl = jnp.asarray(clen, jnp.int32)
+    o_ref = ref.decode_attention(q, k, v, cl, window=window)
+    o_p = decode_attention_pallas(q, k, v, cl, window=window, block_m=128,
+                                  interpret=True)
+    tol = TOL[dtype]
+    np.testing.assert_allclose(np.asarray(o_p, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_decode_matches_flash_at_full_length(rng):
+    """decode(q_last) == flash(q)[last] when the cache is exactly full."""
+    B, S, H, hd = 1, 256, 4, 32
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    full = ref.flash_attention(q, k, v, causal=True)
+    dec = decode_attention_pallas(q[:, -1], k, v, jnp.asarray(S, jnp.int32),
+                                  block_m=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full[:, -1]),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,113 @@
+"""Skill/guide memory: unit tests + hypothesis properties over the store
+invariants (retrieval, thresholds, FIFO eviction, flag semantics)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import memory as mem
+
+CFG = mem.MemoryConfig(capacity=32, embed_dim=16, guide_len=4)
+
+
+def unit(v):
+    v = np.asarray(v, np.float32)
+    return v / max(np.linalg.norm(v), 1e-9)
+
+
+def rand_unit(rng, d=16):
+    return unit(rng.normal(size=d))
+
+
+def test_empty_memory_returns_sentinel(rng):
+    state = mem.init_memory(CFG)
+    q = mem.query(state, jnp.asarray(rand_unit(rng)))
+    assert float(q.sim) == -2.0
+
+
+def test_add_then_query_exact(rng):
+    state = mem.init_memory(CFG)
+    e = rand_unit(rng)
+    g = jnp.asarray([5, 1, 2, 6], jnp.int32)
+    state = mem.add(state, jnp.asarray(e), g, jnp.asarray(True),
+                    jnp.asarray(False), jnp.int32(3))
+    q = mem.query(state, jnp.asarray(e))
+    assert float(q.sim) > 0.999
+    assert bool(q.has_guide) and not bool(q.hard)
+    assert int(q.added_at) == 3
+    np.testing.assert_array_equal(np.asarray(q.guide), [5, 1, 2, 6])
+
+
+def test_guides_only_view(rng):
+    state = mem.init_memory(CFG)
+    e1, e2 = rand_unit(rng), rand_unit(rng)
+    zero_g = jnp.zeros(4, jnp.int32)
+    state = mem.add(state, jnp.asarray(e1), zero_g, jnp.asarray(False),
+                    jnp.asarray(False), jnp.int32(0))     # bare skill
+    state = mem.add(state, jnp.asarray(e2), zero_g + 7, jnp.asarray(True),
+                    jnp.asarray(False), jnp.int32(0))     # guide entry
+    q = mem.query(state, jnp.asarray(e1), guides_only=True)
+    # the only guide entry must win, even though e1 matches a bare entry
+    assert bool(q.has_guide)
+    np.testing.assert_allclose(float(q.sim), float(e1 @ e2), atol=1e-5)
+
+
+def test_fifo_eviction(rng):
+    state = mem.init_memory(CFG)
+    first = rand_unit(rng)
+    zero_g = jnp.zeros(4, jnp.int32)
+    state = mem.add(state, jnp.asarray(first), zero_g, jnp.asarray(False),
+                    jnp.asarray(False), jnp.int32(0))
+    for i in range(CFG.capacity):   # fill past capacity → evicts `first`
+        state = mem.add(state, jnp.asarray(rand_unit(rng)), zero_g,
+                        jnp.asarray(False), jnp.asarray(False),
+                        jnp.int32(i + 1))
+    q = mem.query(state, jnp.asarray(first))
+    assert float(q.sim) < 0.999     # exact row is gone
+
+
+def test_mark_soft_and_touch(rng):
+    state = mem.init_memory(CFG)
+    e = rand_unit(rng)
+    zero_g = jnp.zeros(4, jnp.int32)
+    state = mem.add(state, jnp.asarray(e), zero_g, jnp.asarray(False),
+                    jnp.asarray(True), jnp.int32(1))
+    q = mem.query(state, jnp.asarray(e))
+    assert bool(q.hard)
+    state = mem.touch(state, q.index, jnp.int32(9))
+    assert int(mem.query(state, jnp.asarray(e)).added_at) == 9
+    state = mem.mark_soft(state, q.index)
+    assert not bool(mem.query(state, jnp.asarray(e)).hard)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 2 ** 31 - 1), min_size=1, max_size=40),
+       st.integers(0, 2 ** 31 - 1))
+def test_property_best_match_wins(seeds, qseed):
+    """query() returns the stored row with the max cosine (vs. numpy)."""
+    state = mem.init_memory(CFG)
+    zero_g = jnp.zeros(4, jnp.int32)
+    rows = []
+    for i, s in enumerate(seeds):
+        e = rand_unit(np.random.default_rng(s))
+        rows.append(e)
+        state = mem.add(state, jnp.asarray(e), zero_g, jnp.asarray(False),
+                        jnp.asarray(False), jnp.int32(i))
+    q_emb = rand_unit(np.random.default_rng(qseed))
+    q = mem.query(state, jnp.asarray(q_emb))
+    kept = rows[-CFG.capacity:]                 # FIFO keeps the tail
+    expect = max(float(np.dot(r, q_emb)) for r in kept)
+    np.testing.assert_allclose(float(q.sim), expect, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.booleans(), st.booleans())
+def test_property_flags_roundtrip(seed, has_guide, hard):
+    state = mem.init_memory(CFG)
+    e = rand_unit(np.random.default_rng(seed))
+    g = jnp.arange(4, dtype=jnp.int32)
+    state = mem.add(state, jnp.asarray(e), g, jnp.asarray(has_guide),
+                    jnp.asarray(hard), jnp.int32(5))
+    q = mem.query(state, jnp.asarray(e))
+    assert bool(q.has_guide) == has_guide
+    assert bool(q.hard) == hard

@@ -1,0 +1,147 @@
+"""Per-architecture smoke tests: reduced configs, one forward/train step on
+CPU, shape + finiteness assertions, and prefill/decode consistency with
+teacher forcing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import (decode_step, forward, init_params, loss_fn,
+                          prefill)
+from repro.training import AdamWConfig, init_opt_state, make_train_step
+
+ARCHS = configs.all_archs()
+
+
+def make_batch(cfg, rng, B=2, S=32, shift=True):
+    tokens = rng.integers(1, cfg.vocab_size, (B, S)).astype(np.int32)
+    labels = np.roll(tokens, -1, axis=1).astype(np.int32)
+    labels[:, -1] = -1
+    batch = {"tokens": jnp.asarray(tokens), "labels": jnp.asarray(labels)}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.num_patches, cfg.d_model)),
+            jnp.float32)
+    if cfg.family == "audio":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(B, cfg.encoder_frames, cfg.d_model)),
+            jnp.float32)
+    return batch
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch, key, rng):
+    cfg = configs.get_smoke(arch)
+    params = init_params(cfg, key)
+    B, S = 2, 32
+    batch = make_batch(cfg, rng, B, S)
+    logits, aux = forward(cfg, params, batch)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step_no_nans(arch, key, rng):
+    cfg = configs.get_smoke(arch)
+    params = init_params(cfg, key)
+    opt_state = init_opt_state(params)
+    step = jax.jit(make_train_step(cfg, AdamWConfig(learning_rate=1e-3,
+                                                    warmup_steps=1,
+                                                    total_steps=10)))
+    batch = make_batch(cfg, rng)
+    new_params, new_opt, metrics = step(params, opt_state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert float(metrics["loss"]) > 0
+    for leaf in jax.tree.leaves(new_params):
+        assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32))))
+    # params actually moved
+    moved = any(
+        float(jnp.max(jnp.abs(a.astype(jnp.float32) -
+                              b.astype(jnp.float32)))) > 0
+        for a, b in zip(jax.tree.leaves(params),
+                        jax.tree.leaves(new_params)))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_matches_forward(arch, key, rng):
+    """Prefill's last-position logits == teacher-forcing logits at the last
+    position (same params, same inputs)."""
+    cfg = configs.get_smoke(arch)
+    params = init_params(cfg, key)
+    B, S = 2, 16
+    batch = make_batch(cfg, rng, B, S)
+    full_logits, _ = forward(cfg, params, batch)
+    extra = cfg.num_patches if cfg.family == "vlm" else 0
+    pf_logits, cache, pos = prefill(cfg, params, batch, S + extra + 4)
+    np.testing.assert_allclose(
+        np.asarray(pf_logits, np.float32),
+        np.asarray(full_logits[:, -1], np.float32), rtol=0.1, atol=0.1)
+    assert int(pos) == S + extra
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward(arch, key, rng):
+    """Greedy decode logits at position S match teacher forcing on the
+    extended sequence — the KV-cache path is consistent with the parallel
+    path for every family (incl. SSM states and hybrid mixed caches)."""
+    cfg = configs.get_smoke(arch)
+    params = init_params(cfg, key)
+    B, S = 2, 16
+    batch = make_batch(cfg, rng, B, S)
+    extra = cfg.num_patches if cfg.family == "vlm" else 0
+    _, cache, pos = prefill(cfg, params, batch, S + extra + 4)
+
+    next_tok = jnp.asarray(rng.integers(1, cfg.vocab_size, (B,)), jnp.int32)
+    step_logits, _ = decode_step(cfg, params, next_tok, cache, pos)
+
+    ext = dict(batch)
+    ext["tokens"] = jnp.concatenate([batch["tokens"], next_tok[:, None]], 1)
+    ext["labels"] = jnp.zeros_like(ext["tokens"])
+    full_logits, _ = forward(cfg, params, ext)
+    # bf16 params: the cached and parallel paths accumulate rounding
+    # differently; 0.1 abs on O(10) logits still catches positional bugs.
+    np.testing.assert_allclose(
+        np.asarray(step_logits, np.float32),
+        np.asarray(full_logits[:, -1], np.float32), rtol=0.1, atol=0.1)
+
+
+def test_param_counts_match_formula(key):
+    """param_count() accounting vs. actual init (within embed rounding)."""
+    for arch in ARCHS:
+        cfg = configs.get_smoke(arch)
+        params = init_params(cfg, key)
+        actual = sum(x.size for x in jax.tree.leaves(params))
+        expected = cfg.param_count()
+        assert abs(actual - expected) / actual < 0.15, \
+            (arch, actual, expected)
+
+
+def test_moe_active_params_less_than_total():
+    for arch in ("granite-moe-3b-a800m", "olmoe-1b-7b"):
+        cfg = configs.get(arch)
+        assert cfg.active_param_count() < cfg.param_count()
+        assert cfg.active_param_count() > 0
+
+
+def test_window_pattern_cycles():
+    cfg = configs.get("gemma3-27b")
+    w = cfg.layer_windows()
+    assert len(w) == 62
+    assert w[:6] == (1024, 1024, 1024, 1024, 1024, 0)
+    assert w.count(0) == 10  # global layers
+
+
+def test_hybrid_pattern():
+    cfg = configs.get("recurrentgemma-2b")
+    b = cfg.layer_blocks()
+    assert len(b) == 26
+    assert b[:3] == ("r", "r", "a")
+    assert b.count("a") == 8 and b.count("r") == 18

@@ -1,0 +1,214 @@
+"""RAR controller state-machine tests with deterministic rule-based FM
+tiers (no neural nets): Cases 1/2/3, strong-call accounting, memory-hit
+routing, re-probe cool-down, and cost-reduction-over-stages properties."""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import memory as mem
+from repro.core.rar import RAR, RARConfig
+from repro.data import tokenizer as tk
+
+EMBED_DIM = 16
+GUIDE_LEN = 8
+
+
+def make_cfg(**kw):
+    base = dict(sim_threshold=0.9, guide_sim_threshold=0.9,
+                reprobe_period=100,
+                memory=mem.MemoryConfig(capacity=64, embed_dim=EMBED_DIM,
+                                        guide_len=GUIDE_LEN))
+    base.update(kw)
+    return RARConfig(**base)
+
+
+class FakeTier:
+    """Deterministic FM stand-in.
+
+    Question prompts are [skill_id, x, ANS-marker...]-style arrays; the
+    correct answer is (skill + x) % 4. ``known`` = skills answered unaided.
+    A guided prompt (GUIDE_START present) is answered correctly iff the
+    guide hint encodes the right skill. Guide generation emits the skill
+    hint iff ``can_guide``."""
+
+    def __init__(self, known=(), can_guide=False, name="fake"):
+        self.known = set(known)
+        self.can_guide = can_guide
+        self.name = name
+        self.engine = type("E", (), {"calls": 0})()
+
+    def answer_batch(self, prompts):
+        out = []
+        for p in prompts:
+            self.engine.calls += 1
+            p = list(p)
+            if len(p) == 6:                      # [BOS, GS, hint, GE, s, x]
+                hint, skill, x = p[2], p[4], p[5]
+                out.append((skill + x) % 4 if hint == skill + 100 else -1)
+            else:                                # [BOS, s, x]
+                skill, x = p[1], p[2]
+                out.append((skill + x) % 4 if skill in self.known else -1)
+        return np.asarray(out)
+
+    def generate_guides(self, requests, guide_len):
+        self.engine.calls += len(requests)
+        g = np.zeros((len(requests), guide_len), np.int32)
+        g[:, 0] = tk.GUIDE_START
+        for i, r in enumerate(requests):
+            g[i, 1] = r[1] + 100 if self.can_guide else 99999
+        g[:, 2] = tk.GUIDE_END
+        return g
+
+
+def prompt(skill, x):
+    # [pad-slot, skill, x]; pad-slot plays the BOS role for _guided()
+    return np.asarray([tk.BOS, skill, x], np.int32)
+
+
+def greq(skill):
+    return np.asarray([tk.GUIDE_REQ, skill], np.int32)
+
+
+def skill_emb(skill):
+    rng = np.random.default_rng(skill)
+    v = rng.normal(size=EMBED_DIM)
+    return (v / np.linalg.norm(v)).astype(np.float32)
+
+
+def make_rar(weak_known=(), weak_follows_guides=True, **cfg_kw):
+    weak = FakeTier(known=weak_known, name="weak")
+    strong = FakeTier(known=range(10_000), can_guide=True, name="strong")
+    if not weak_follows_guides:
+        # weak ignores hints entirely
+        weak.answer_batch = lambda prompts: np.asarray([-1] * len(prompts))
+    holder = {}
+
+    def embed_fn(p):
+        return holder["emb"]
+
+    rar = RAR(weak, strong, embed_fn, lambda e, k: False, make_cfg(**cfg_kw))
+    return rar, holder
+
+
+def process(rar, holder, skill, x):
+    holder["emb"] = skill_emb(skill)
+    return rar.process(prompt(skill, x), greq(skill), key=(skill, x))
+
+
+# ---------------------------------------------------------------------------
+
+
+def test_case1_stores_skill_then_routes_weak():
+    rar, h = make_rar(weak_known={7})
+    out = process(rar, h, 7, 1)
+    assert out.case == "case1" and out.strong_calls == 1
+    assert out.served_by == "strong"            # user got the strong answer
+    # same skill again → memory hit → weak serves, zero strong calls
+    out2 = process(rar, h, 7, 2)
+    assert out2.case == "memory_skill" and out2.strong_calls == 0
+    assert out2.served_by == "weak"
+    assert out2.response == (7 + 2) % 4         # weak is actually correct
+
+
+def test_case2_guide_generated_then_reused():
+    rar, h = make_rar(weak_known=set())          # weak knows nothing unaided
+    out = process(rar, h, 3, 1)
+    assert out.case == "case2" and out.guide_source == "fresh"
+    assert out.strong_calls == 2                 # response + guide gen
+    out2 = process(rar, h, 3, 2)
+    assert out2.case == "memory_guide" and out2.strong_calls == 0
+    assert out2.response == (3 + 2) % 4          # guided weak is correct
+
+
+def test_case3_hard_entry_shortcircuits():
+    rar, h = make_rar(weak_known=set(), weak_follows_guides=False)
+    out = process(rar, h, 5, 1)
+    assert out.case == "case3" and out.strong_calls == 2
+    out2 = process(rar, h, 5, 2)
+    assert out2.case == "memory_hard" and out2.strong_calls == 1
+    assert out2.served_by == "strong"
+
+
+def test_case3_reprobe_after_cooldown():
+    rar, h = make_rar(weak_known=set(), weak_follows_guides=False,
+                      reprobe_period=2)
+    process(rar, h, 5, 1)                        # case3 at now=1
+    out = process(rar, h, 5, 2)                  # now=2, age 1 < 2 → hard
+    assert out.case == "memory_hard"
+    # age reaches the period → shadow re-runs (still fails → case3 path)
+    out = process(rar, h, 5, 3)
+    assert out.case == "case3"
+
+
+def test_reprobe_clears_hard_flag_when_weak_learns():
+    """Weak 'evolves' between probes (the paper's motivating scenario:
+    weaker FMs improve over time) — the hard flag must clear."""
+    rar, h = make_rar(weak_known=set(), weak_follows_guides=False,
+                      reprobe_period=2)
+    process(rar, h, 5, 1)                        # case3
+    rar.weak = FakeTier(known={5}, name="weak-evolved")   # evolution
+    process(rar, h, 5, 2)                        # memory_hard (cooldown)
+    out = process(rar, h, 5, 3)                  # re-probe → case1
+    assert out.case == "case1_reprobe"
+    out = process(rar, h, 5, 4)
+    assert out.case in ("memory_skill",)         # now routed weak
+    assert out.strong_calls == 0
+
+
+def test_router_weak_passthrough():
+    rar, h = make_rar(weak_known={1})
+    rar.route_weak_fn = lambda e, k: True
+    out = process(rar, h, 1, 0)
+    assert out.case == "router_weak" and out.strong_calls == 0
+
+
+def test_dissimilar_skills_do_not_collide():
+    rar, h = make_rar(weak_known={7})
+    process(rar, h, 7, 1)                        # case1 for skill 7
+    out = process(rar, h, 8, 1)                  # different skill embedding
+    assert out.case in ("case1", "case2", "case3")   # no memory hit
+
+
+def test_allow_fresh_guides_false_blocks_generation():
+    rar, h = make_rar(weak_known=set(),
+                      allow_fresh_guides=False)
+    out = process(rar, h, 3, 1)
+    assert out.case == "case3"                   # no guide available → hard
+    assert out.strong_calls == 1                 # and no guide-gen call
+
+
+# ---------------------------------------------------------------------------
+# System-level properties
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.integers(0, 5), min_size=5, max_size=30),
+       st.integers(0, 1000))
+def test_property_strong_calls_nonincreasing_over_stages(skills, salt):
+    """For any static request stream, RAR's per-stage strong-FM calls never
+    increase between the first and later stages (the paper's core claim —
+    the system only accumulates capability)."""
+    rar, h = make_rar(weak_known={0, 1})
+    stream = [(s, (s * 7 + salt) % 97) for s in skills]
+    per_stage = []
+    for _ in range(3):
+        calls = 0
+        for s, x in stream:
+            calls += process(rar, h, s, x).strong_calls
+        per_stage.append(calls)
+    assert per_stage[1] <= per_stage[0]
+    assert per_stage[2] <= per_stage[0]
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.integers(0, 8), min_size=5, max_size=30))
+def test_property_responses_match_strong_when_guides_work(skills):
+    """With a guide-following weak FM and a competent strong FM, every
+    served response equals the strong FM's answer (quality preserved)."""
+    rar, h = make_rar(weak_known=set())
+    for s in skills:
+        out = process(rar, h, s, s % 5)
+        assert out.response == (s + s % 5) % 4

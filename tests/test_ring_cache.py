@@ -1,0 +1,43 @@
+"""Ring-buffer KV cache (§Perf variant): decode with a window-sized ring
+must produce exactly the logits of the full-length cache with the same
+sliding-window mask."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import decode_step, init_cache, init_params
+
+WINDOW = 8
+STEPS = 24
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "olmoe-1b-7b"])
+def test_ring_cache_matches_full_cache(arch, rng):
+    base = configs.get_smoke(arch)
+    full_cfg = dataclasses.replace(base, decode_window=WINDOW,
+                                   param_dtype="float32")
+    ring_cfg = dataclasses.replace(base, decode_window=WINDOW,
+                                   ring_cache=True, param_dtype="float32")
+    params = init_params(full_cfg, jax.random.PRNGKey(0))
+
+    B = 2
+    full_cache = init_cache(full_cfg, B, STEPS, jnp.float32)
+    ring_cache = init_cache(ring_cfg, B, STEPS, jnp.float32)
+    assert ring_cache["k"].shape[2] == WINDOW
+    assert full_cache["k"].shape[2] == STEPS
+
+    toks = rng.integers(1, base.vocab_size, (STEPS, B)).astype(np.int32)
+    for pos in range(STEPS):
+        t = jnp.asarray(toks[pos])
+        lf, full_cache = decode_step(full_cfg, params, t, full_cache,
+                                     jnp.asarray(pos, jnp.int32))
+        lr, ring_cache = decode_step(ring_cfg, params, t, ring_cache,
+                                     jnp.asarray(pos, jnp.int32))
+        np.testing.assert_allclose(
+            np.asarray(lr, np.float32), np.asarray(lf, np.float32),
+            rtol=2e-4, atol=2e-4,
+            err_msg=f"pos {pos} ({'pre' if pos < WINDOW else 'post'}-wrap)")

@@ -1,0 +1,90 @@
+"""Sharding rule logic (pure PartitionSpec computation, no devices)."""
+import dataclasses
+
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.models.sharding import _param_prefs, spec_from_prefs
+
+
+@dataclasses.dataclass
+class FakeMesh:
+    shape: dict
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+POD = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def spec(shape, prefs, mesh=MESH, offset=0):
+    return spec_from_prefs(shape, prefs, mesh, offset=offset)
+
+
+def test_divisible_dims_assigned():
+    assert spec((4096, 32, 128), [(1, "model")]) == P(None, "model", None)
+
+
+def test_nondivisible_falls_back():
+    # 24 heads don't divide 16 → fall through to d_model
+    s = spec((1536, 24, 64), [(1, "model"), (0, "model")])
+    assert s == P("model", None, None)
+
+
+def test_nothing_divides_replicates():
+    s = spec((7, 3), [(0, "model"), (1, "model"), (0, "data")])
+    assert s == P(None, None)
+
+
+def test_axis_used_once():
+    s = spec((64, 64), [(0, "model"), (1, "model")])
+    assert s == P("model", None)
+
+
+def test_dim_assigned_once():
+    s = spec((64, 32), [(0, "model"), (0, "data"), (1, "data")])
+    assert s == P("model", "data")
+
+
+def test_tuple_axis_multipod():
+    s = spec((256, 4096), [(0, ("pod", "data"))], mesh=POD)
+    assert s == P(("pod", "data"), None)
+    # batch 1 can't shard over 32
+    s = spec((1, 4096), [(0, ("pod", "data"))], mesh=POD)
+    assert s == P(None, None)
+
+
+def test_stacked_offset_shifts_dims():
+    # stacked layer param (L, D, H, hd): rules written for (D, H, hd)
+    s = spec((32, 4096, 32, 128), [(1, "model")], offset=1)
+    assert s == P(None, None, "model", None)
+
+
+def test_train_mode_adds_fsdp_axis():
+    prefs = _param_prefs("w_up", 2, "train", MESH)
+    s = spec((4096, 14336), prefs)
+    assert s == P("data", "model")
+
+
+def test_serve_mode_weights_replicated_on_data():
+    prefs = _param_prefs("w_up", 2, "serve", MESH)
+    s = spec((4096, 14336), prefs)
+    assert s == P(None, "model")
+
+
+def test_moe_expert_parallel_when_divisible():
+    prefs = _param_prefs("w_gate", 3, "serve", MESH)  # (E, D, F)
+    assert spec((64, 2048, 1024), prefs) == P("model", None, None)
+    # 40 experts don't divide 16 → F (=512/16) carries model parallelism
+    assert spec((40, 1536, 512), prefs) == P(None, None, "model")
+
+
+def test_norm_scales_replicated():
+    prefs = _param_prefs("scale", 1, "train", MESH)
+    assert spec((4096,), prefs) == P(None)
+
+
+def test_embed_vocab_sharding():
+    prefs = _param_prefs("embed", 2, "serve", MESH)
+    assert spec((128256, 4096), prefs) == P("model", None)
+    # 49155 (granite) doesn't divide 16 → replicated row dim
+    assert spec((49155, 1536), prefs) == P(None, None)

@@ -1,0 +1,92 @@
+"""End-to-end behaviour of the trained RAR system (the paper's claims, at
+test scale). Uses the shared cached system from ``build_system`` — the
+first run trains it (~10 min on this CPU), later runs load the checkpoint.
+"""
+import numpy as np
+import pytest
+
+from repro.core.rar import RARConfig
+from repro.experiments.setup import build_system, failing_pool
+from repro.experiments.stages import run_baselines, run_rar_experiment
+
+pytestmark = pytest.mark.slow
+
+
+@pytest.fixture(scope="module")
+def system():
+    return build_system(verbose=False)
+
+
+@pytest.fixture(scope="module")
+def pool(system):
+    return failing_pool(system, domain=0, n=120)
+
+
+@pytest.fixture(scope="module")
+def rar_run(system, pool):
+    results, rar = run_rar_experiment(system, pool, n_stages=3, seed=0)
+    return results, rar
+
+
+def test_trained_capability_structure(system):
+    """Weak fails unknown skills / strong solves everything / guides lift
+    the weak FM — the premise the paper's method needs."""
+    suite = system.suite
+    rng = np.random.default_rng(0)
+
+    def acc(tier, skills, guided=False, n=80):
+        prompts, truth = [], []
+        for _ in range(n):
+            s = int(rng.choice(skills))
+            d, x = suite.domain_of(s), int(rng.integers(0, 100))
+            g = suite.guide(s) if guided else None
+            prompts.append(np.asarray(suite.vocab.question(d, s, x, g),
+                                      np.int32))
+            truth.append(suite.answer(s, x))
+        ans = tier.answer_batch(np.stack(prompts))
+        return float((ans == np.asarray(truth)).mean())
+
+    all_sk = np.arange(suite.cfg.total_skills)
+    unknown = np.setdiff1d(all_sk, suite.weak_known)
+    assert acc(system.strong, all_sk) > 0.9
+    assert acc(system.weak, suite.weak_known) > 0.75
+    assert acc(system.weak, unknown) < 0.55
+    assert acc(system.weak, unknown, guided=True) > \
+        acc(system.weak, unknown) + 0.25
+
+
+def test_rar_reduces_strong_calls_over_stages(rar_run, pool):
+    results, _ = rar_run
+    first, last = results[0], results[-1]
+    assert last.strong_calls < 0.6 * first.strong_calls, \
+        [r.strong_calls for r in results]
+    # late stages serve most requests without ANY strong call
+    assert last.strong_calls < 0.6 * len(pool)
+
+
+def test_rar_quality_maintained(rar_run, pool):
+    results, _ = rar_run
+    total = sum(r.aligned for r in results)
+    n = 3 * len(pool)
+    assert total / n > 0.75, total / n
+
+
+def test_rar_beats_weak_baselines(system, pool, rar_run):
+    base = run_baselines(system, pool, n_stages=3)
+    results, _ = rar_run
+    rar_aligned = sum(r.aligned for r in results)
+    weak_aligned = sum(r.aligned for r in base["weak"])
+    cot_aligned = sum(r.aligned for r in base["weak_cot"])
+    assert rar_aligned > weak_aligned
+    assert rar_aligned > cot_aligned
+    # and saves vs the oracle router on cumulative strong calls
+    rar_strong = sum(r.strong_calls for r in results)
+    oracle_strong = sum(r.strong_calls for r in base["oracle_router"])
+    assert rar_strong < oracle_strong
+
+
+def test_guide_memory_populates(rar_run):
+    _, rar = rar_run
+    assert rar.memory.size > 0
+    assert bool(np.asarray(rar.memory.has_guide)[
+        np.asarray(rar.memory.valid)].any())

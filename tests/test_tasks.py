@@ -1,0 +1,88 @@
+"""Synthetic task suite invariants (hypothesis-driven) + tokenizer checks."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import tokenizer as tk
+from repro.data.tasks import TaskSuite, TaskSuiteConfig
+
+SUITE = TaskSuite(TaskSuiteConfig())
+N = SUITE.cfg.total_skills
+
+
+def test_vocab_block_layout():
+    v = SUITE.vocab
+    assert v.domain_0 == 22
+    assert v.skill_0 == 22 + 3
+    assert v.size % 64 == 0
+    assert v.h_beta_0 + 4 <= v.size
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, N - 1), st.integers(0, 39))
+def test_answer_is_affine_rule(s, x):
+    a = SUITE.answer(s, x)
+    assert 0 <= a < 4
+    assert a == (SUITE.alpha[s] * (x % 4) + SUITE.beta[s]) % 4
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, N - 1))
+def test_guide_encodes_rule_not_answer(s):
+    """Guides carry (α, β) hint tokens and no answer-option token —
+    §III-E: 'instructions that do not contain the actual answer'."""
+    g = SUITE.guide(s)
+    v = SUITE.vocab
+    assert g[0] == tk.GUIDE_START and g[-1] == tk.GUIDE_END
+    assert g[1] == v.h_alpha_0 + SUITE.alpha[s]
+    assert g[2] == v.h_beta_0 + SUITE.beta[s]
+    for t in g:
+        assert not (tk.OPTION_A <= t < tk.OPTION_A + 4)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, N - 1), st.integers(0, 39), st.booleans())
+def test_encode_shapes_and_supervision(s, x, guided):
+    d = SUITE.domain_of(s)
+    g = SUITE.guide(s) if guided else None
+    toks, labs = SUITE.encode(d, s, x, guide=g)
+    L = SUITE.cfg.seq_len
+    assert toks.shape == (L,) and labs.shape == (L,)
+    # exactly two supervised positions: the answer and EOS
+    assert int(np.sum(labs >= 0)) == 2
+    ans_pos = int(np.where(labs >= 0)[0][0])
+    assert labs[ans_pos] == SUITE.vocab.answer_token(SUITE.answer(s, x))
+    assert toks[ans_pos] == tk.ANS
+
+
+def test_same_skill_shares_guide_different_questions():
+    """The generalization premise: one guide serves every question of its
+    skill (the paper's intra-domain reuse)."""
+    s = int(SUITE.domain_skills[0][0])
+    assert SUITE.guide(s) == SUITE.guide(s)
+    xs = [1, 2, 3]
+    answers = {SUITE.answer(s, x) for x in xs}
+    assert len(answers) >= 2     # rule is x-dependent (α ≥ 1)
+
+
+def test_domains_share_only_shared_block():
+    s0 = set(SUITE.domain_skills[0].tolist())
+    s1 = set(SUITE.domain_skills[1].tolist())
+    inter = s0 & s1
+    assert len(inter) == SUITE.cfg.shared_skills
+
+
+def test_weak_known_is_quarter():
+    frac = len(SUITE.weak_known) / SUITE.cfg.total_skills
+    assert 0.15 < frac < 0.35
+
+
+def test_question_pool_distinct():
+    pool = SUITE.question_pool(0, 200, seed=7)
+    assert len(set((s, x) for _, s, x in pool)) == 200
+    for d, s, x in pool:
+        assert s in SUITE.domain_skills[0]
+
+
+def test_guide_train_disjoint_from_known():
+    assert not set(SUITE.guide_train_skills) & set(SUITE.weak_known)

@@ -1,0 +1,106 @@
+"""Optimizer, LR schedule, checkpoint roundtrip, and a tiny convergence
+test on the real train loop."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import init_params
+from repro.training import (AdamWConfig, adamw_update, init_opt_state,
+                            load_checkpoint, lr_schedule, make_train_step,
+                            save_checkpoint)
+
+
+def test_lr_schedule_shape():
+    cfg = AdamWConfig(learning_rate=1e-3, warmup_steps=10, total_steps=100,
+                      min_lr_ratio=0.1)
+    lrs = [float(lr_schedule(cfg, jnp.asarray(s))) for s in range(101)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[10] - 1e-3) < 1e-9          # warmup peak
+    assert lrs[100] == pytest.approx(1e-4, rel=1e-3)   # cosine floor
+    assert all(a >= b - 1e-12 for a, b in zip(lrs[10:], lrs[11:]))  # decay
+
+
+def test_adamw_moves_toward_minimum():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    opt = init_opt_state(params)
+    cfg = AdamWConfig(learning_rate=0.1, warmup_steps=0, total_steps=200,
+                      weight_decay=0.0)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}          # d/dw ||w||²
+        params, opt, m = adamw_update(cfg, grads, opt)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.05
+
+
+def test_grad_clipping_caps_update():
+    params = {"w": jnp.zeros(4)}
+    opt = init_opt_state(params)
+    cfg = AdamWConfig(learning_rate=1.0, warmup_steps=0, total_steps=10,
+                      grad_clip_norm=1.0, weight_decay=0.0)
+    _, _, metrics = adamw_update(cfg, {"w": jnp.full(4, 1e6)}, opt)
+    assert float(metrics["grad_norm"]) > 1e5    # raw norm reported
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": np.arange(6, dtype=np.float32).reshape(2, 3),
+            "nest": {"b": np.asarray([1, 2, 3], np.int32)},
+            "name": np.asarray(7)}
+    path = os.path.join(tmp_path, "ckpt.npz")
+    save_checkpoint(path, tree)
+    back = load_checkpoint(path)
+    np.testing.assert_array_equal(back["a"], tree["a"])
+    np.testing.assert_array_equal(back["nest"]["b"], tree["nest"]["b"])
+
+
+def test_train_loop_reduces_loss(rng):
+    """~40 steps on a copy task with the smallest smoke config — loss must
+    drop substantially (integration of model + loss + AdamW)."""
+    cfg = configs.get_smoke("olmo-1b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    step = jax.jit(make_train_step(cfg, AdamWConfig(
+        learning_rate=3e-3, warmup_steps=5, total_steps=60)))
+    losses = []
+    for i in range(40):
+        tokens = rng.integers(1, 32, (8, 16)).astype(np.int32)
+        tokens[:, 8:] = tokens[:, :8]           # learnable copy structure
+        labels = np.roll(tokens, -1, 1).astype(np.int32)
+        labels[:, -1] = -1
+        batch = {"tokens": jnp.asarray(tokens), "labels": jnp.asarray(labels)}
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] * 0.7, (losses[0], losses[-1])
+
+
+def test_grad_accum_matches_full_batch(rng):
+    """grad_accum=2 must match the single-shot step (same data, f32)."""
+    import dataclasses
+
+    from repro import configs
+    from repro.models import init_params
+
+    cfg = dataclasses.replace(configs.get_smoke("olmo-1b"),
+                              param_dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt_cfg = AdamWConfig(learning_rate=1e-3, warmup_steps=0, total_steps=10)
+
+    tokens = rng.integers(1, cfg.vocab_size, (8, 16)).astype(np.int32)
+    labels = np.roll(tokens, -1, 1).astype(np.int32)
+    labels[:, -1] = -1
+    batch = {"tokens": jnp.asarray(tokens), "labels": jnp.asarray(labels)}
+
+    step1 = jax.jit(make_train_step(cfg, opt_cfg, grad_accum=1))
+    step2 = jax.jit(make_train_step(cfg, opt_cfg, grad_accum=2))
+    p1, _, m1 = step1(params, init_opt_state(params), batch)
+    p2, _, m2 = step2(params, init_opt_state(params), batch)
+    # microbatch means weight tokens slightly differently only when the
+    # valid-label counts differ per microbatch; with identical counts the
+    # losses match to float tolerance.
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-4)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=2e-4)
