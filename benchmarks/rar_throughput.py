@@ -1,0 +1,147 @@
+"""RAR data-plane throughput: sequential vs. microbatched controller.
+
+Serves an identical request stream (distinct synthetic-suite questions,
+multiple passes so the memory warms up) through:
+
+* the sequential ``RAR.process`` loop (batch-of-1 FM calls, one memory
+  read/write round-trip per request), and
+* ``MicrobatchRAR.process_batch`` at microbatch sizes 8 and 32 (one
+  multi-query memory pass + one sweep per FM tier per microbatch).
+
+The FM tiers are the paper-analog WEAK/STRONG architectures with random
+(untrained) weights behind the real jitted serving engine — answer content
+is irrelevant here, per-request serving overhead is what the batched data
+plane amortises. Embeddings are a deterministic per-question hash, so the
+routing decisions (and therefore the strong-call counts) are directly
+comparable across modes.
+
+Emits ``BENCH_rar_throughput.json`` (requests/sec, strong-call ratio per
+mode, speedups, strong-call parity checks) plus a CSV summary to stdout.
+``REPRO_BENCH_SCALE`` scales the pool size.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import SCALE, emit, print
+from repro.configs import rar_system
+from repro.core.fm import FMTier
+from repro.core.pipeline import MicrobatchRAR
+from repro.core.rar import RAR, RARConfig
+from repro.data.tokenizer import Vocab
+from repro.models import init_params
+
+MICROBATCHES = (8, 32)
+N_PASSES = 2
+
+
+def _make_tiers():
+    vocab = Vocab(n_domains=3)
+    weak = FMTier.create(
+        "weak", rar_system.WEAK,
+        init_params(rar_system.WEAK, jax.random.PRNGKey(0)), vocab)
+    strong = FMTier.create(
+        "strong", rar_system.STRONG,
+        init_params(rar_system.STRONG, jax.random.PRNGKey(1)), vocab)
+    return vocab, weak, strong
+
+
+def _workload(vocab: Vocab, n: int):
+    """n distinct questions + deterministic hash embeddings."""
+    keys, prompts, greqs, embs = [], [], [], []
+    i = 0
+    while len(keys) < n:
+        d, s, x = i % 3, (i // 3) % 16, (i // 48) % 10
+        i += 1
+        keys.append((d, s, x))
+        prompts.append(np.asarray(vocab.question(d, s, x), np.int32))
+        greqs.append(np.asarray(vocab.guide_request(d, s), np.int32))
+        rng = np.random.default_rng(abs(hash((d, s, x))) % (2 ** 31))
+        e = rng.normal(size=384).astype(np.float32)
+        embs.append(e / np.linalg.norm(e))
+    return keys, prompts, greqs, np.stack(embs)
+
+
+def _run(mode_batch: int, weak, strong, prompts, greqs, embs,
+         cfg: RARConfig):
+    """One full serve of the stream (N_PASSES passes over the pool).
+    Returns total strong calls."""
+    n = len(prompts)
+    emb_holder = {}
+    if mode_batch == 1:
+        ctrl = RAR(weak, strong, lambda p: emb_holder["emb"],
+                   lambda e, k: False, cfg)
+        strong_calls = 0
+        for _ in range(N_PASSES):
+            for i in range(n):
+                emb_holder["emb"] = embs[i]
+                strong_calls += ctrl.process(prompts[i], greqs[i],
+                                             key=i).strong_calls
+        return strong_calls
+    ctrl = MicrobatchRAR(weak, strong, lambda p: emb_holder["emb"],
+                         lambda e, k: False, cfg)
+    strong_calls = 0
+    for _ in range(N_PASSES):
+        for start in range(0, n, mode_batch):
+            sl = slice(start, start + mode_batch)
+            outs = ctrl.process_batch(prompts[sl], greqs[sl],
+                                      keys=list(range(start, start +
+                                                      len(prompts[sl]))),
+                                      embs=embs[sl])
+            strong_calls += sum(o.strong_calls for o in outs)
+    return strong_calls
+
+
+def main() -> None:
+    pool_n = max(32, int(round(64 * min(1.0, SCALE * 2))))
+    vocab, weak, strong = _make_tiers()
+    keys, prompts, greqs, embs = _workload(vocab, pool_n)
+    cfg = RARConfig(reprobe_period=100 * pool_n)
+    total_requests = N_PASSES * pool_n
+
+    rows, results = [], {}
+    for mb in (1,) + MICROBATCHES:
+        _run(mb, weak, strong, prompts, greqs, embs, cfg)   # warm jit caches
+        t0 = time.perf_counter()
+        strong_calls = _run(mb, weak, strong, prompts, greqs, embs, cfg)
+        dt = time.perf_counter() - t0
+        rps = total_requests / dt
+        results[mb] = {"microbatch": mb,
+                       "requests": total_requests,
+                       "seconds": round(dt, 4),
+                       "requests_per_sec": round(rps, 2),
+                       "strong_calls": strong_calls,
+                       "strong_call_ratio": round(
+                           strong_calls / total_requests, 4)}
+        rows.append({"mode": "sequential" if mb == 1 else f"microbatch_{mb}",
+                     **results[mb]})
+    emit(rows)
+
+    seq, mb32 = results[1], results[32]
+    speedup = mb32["requests_per_sec"] / seq["requests_per_sec"]
+    rel_err = abs(mb32["strong_calls"] - seq["strong_calls"]) / \
+        max(seq["strong_calls"], 1)
+    report = {
+        "benchmark": "rar_throughput",
+        "pool_size": pool_n,
+        "passes": N_PASSES,
+        "modes": rows,
+        "speedup_mb32_vs_sequential": round(speedup, 2),
+        "speedup_mb8_vs_sequential": round(
+            results[8]["requests_per_sec"] / seq["requests_per_sec"], 2),
+        "strong_calls_rel_err_mb32": round(rel_err, 4),
+    }
+    out = os.environ.get("REPRO_BENCH_OUT", "BENCH_rar_throughput.json")
+    with open(out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"# speedup mb32 vs sequential: {speedup:.2f}x "
+          f"(strong-call rel err {rel_err:.2%}) → {out}")
+
+
+if __name__ == "__main__":
+    main()

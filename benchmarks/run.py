@@ -21,6 +21,7 @@ SECTIONS = [
     ("fig7_guide_memory", "Fig 7: guide source per stage"),
     ("table1_generalization", "Table I: inter/intra-domain guides"),
     ("memory_bench", "Memory retrieval microbench"),
+    ("rar_throughput", "RAR data plane: sequential vs microbatched"),
     ("roofline", "Roofline table from dry-run sweep"),
 ]
 

@@ -24,16 +24,16 @@ def main() -> None:
     system = build_system()
     pool = failing_pool(system, args.domain, n=args.requests)
 
+    cfg = RARConfig(reprobe_period=2 * len(pool))
     t0 = time.time()
     results, rar = run_rar_experiment(
-        system, pool, n_stages=args.stages,
-        rar_cfg=RARConfig(reprobe_period=2 * len(pool)), verbose=True)
+        system, pool, n_stages=args.stages, rar_cfg=cfg, verbose=True)
     dt = time.time() - t0
 
     n = args.stages * len(pool)
     aligned = sum(r.aligned for r in results)
     strong = sum(r.strong_calls for r in results)
-    base = run_baselines(system, pool, n_stages=args.stages)
+    base = run_baselines(system, pool, n_stages=args.stages, rar_cfg=cfg)
     oracle_strong = sum(r.strong_calls for r in base["oracle_router"])
 
     # FLOPs-based cost model (6·N_active per token, per tier config)

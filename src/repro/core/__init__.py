@@ -1,6 +1,7 @@
-from repro.core.rar import RAR, RARConfig, Outcome
+from repro.core.rar import RAR, RARConfig, Outcome, splice_guide
+from repro.core.pipeline import MicrobatchRAR
 from repro.core.fm import FMTier
 from repro.core import memory, embedder, router
 
-__all__ = ["RAR", "RARConfig", "Outcome", "FMTier", "memory", "embedder",
-           "router"]
+__all__ = ["RAR", "RARConfig", "Outcome", "splice_guide", "MicrobatchRAR",
+           "FMTier", "memory", "embedder", "router"]

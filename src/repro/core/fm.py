@@ -53,12 +53,31 @@ class FMTier:
         ans[(ans < 0) | (ans > 3)] = -1
         return ans
 
+    def answer_many(self, prompts: list[np.ndarray]) -> np.ndarray:
+        """Mixed-length variant of :meth:`answer_batch`: prompts may have
+        different lengths; they are served through the engine's
+        length-bucketed path in one logical sweep."""
+        out = self.engine.generate_bucketed(prompts, max_new=1)
+        ans = out[:, 0] - tk.OPTION_A
+        ans[(ans < 0) | (ans > 3)] = -1
+        return ans
+
     def generate_guides(self, requests: np.ndarray,
                         guide_len: int) -> np.ndarray:
         """requests: (B, Lr) guide-request prompts. Returns (B, guide_len)
         guide token blocks: [GUIDE_START, hints..., GUIDE_END, PAD...]."""
         hints = np.asarray(self.engine.generate(
             {"tokens": jnp.asarray(requests)}, max_new=2))
+        return self._pack_guides(hints, guide_len)
+
+    def generate_guides_many(self, requests: list[np.ndarray],
+                             guide_len: int) -> np.ndarray:
+        """Mixed-length variant of :meth:`generate_guides`."""
+        hints = self.engine.generate_bucketed(requests, max_new=2)
+        return self._pack_guides(hints, guide_len)
+
+    @staticmethod
+    def _pack_guides(hints: np.ndarray, guide_len: int) -> np.ndarray:
         B = hints.shape[0]
         guides = np.full((B, guide_len), tk.PAD, np.int32)
         guides[:, 0] = tk.GUIDE_START

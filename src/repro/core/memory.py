@@ -44,7 +44,16 @@ class MemoryState:
 
     @property
     def size(self) -> int:
+        """Debugging-only: blocking device sync (full reduction over
+        ``valid``). Hot paths must use :attr:`size_fast` instead."""
         return int(jnp.sum(self.valid))
+
+    @property
+    def size_fast(self) -> int:
+        """O(1) occupancy from the ring pointer: entries are only ever
+        added (``valid`` is monotone), so size == min(ptr, capacity).
+        Transfers one scalar instead of reducing the (C,) mask."""
+        return min(int(self.ptr), self.emb.shape[0])
 
 
 def init_memory(cfg: MemoryConfig) -> MemoryState:
@@ -74,6 +83,32 @@ def add(state: MemoryState, emb: jax.Array, guide: jax.Array,
         valid=state.valid.at[i].set(True),
         added_at=state.added_at.at[i].set(now),
         ptr=state.ptr + 1,
+    )
+
+
+@jax.jit
+def add_batch(state: MemoryState, embs: jax.Array, guides: jax.Array,
+              has_guide: jax.Array, hard: jax.Array,
+              now: jax.Array) -> MemoryState:
+    """Insert K entries at consecutive ring slots in one jitted call — the
+    microbatch commit (all of a batch's shadow-inference writes land
+    together). embs (K, E); guides (K, G); has_guide/hard (K,) bool;
+    now (K,) int32 per-entry logical times. Equivalent to K sequential
+    :func:`add` calls for K ≤ capacity (slot indices are then distinct, so
+    the scatter order cannot matter)."""
+    K, C = embs.shape[0], state.emb.shape[0]
+    if K > C:
+        raise ValueError(f"microbatch commit of {K} entries exceeds "
+                         f"memory capacity {C}")
+    idx = (state.ptr + jnp.arange(K, dtype=jnp.int32)) % C
+    return MemoryState(
+        emb=state.emb.at[idx].set(embs),
+        guide=state.guide.at[idx].set(guides),
+        has_guide=state.has_guide.at[idx].set(has_guide),
+        hard=state.hard.at[idx].set(hard),
+        valid=state.valid.at[idx].set(True),
+        added_at=state.added_at.at[idx].set(now),
+        ptr=state.ptr + K,
     )
 
 
@@ -107,15 +142,39 @@ def query(state: MemoryState, emb: jax.Array,
     )
 
 
+@partial(jax.jit, static_argnames=("guides_only",))
+def query_batch(state: MemoryState, embs: jax.Array,
+                guides_only: bool = False) -> QueryResult:
+    """Top-1 cosine search for a whole microbatch of queries in one store
+    pass. embs (B, E) → QueryResult with per-field leading B axis. All
+    queries see the same snapshot of the store (reads happen at microbatch
+    start; writes commit at microbatch end via :func:`add_batch`)."""
+    mask = state.valid
+    if guides_only:
+        mask = mask & state.has_guide
+    sims, idx = kops.memory_top1_batch(state.emb, embs, mask)
+    return QueryResult(
+        index=idx,
+        sim=sims,
+        has_guide=state.has_guide[idx],
+        hard=state.hard[idx],
+        guide=state.guide[idx],
+        added_at=state.added_at[idx],
+    )
+
+
 @jax.jit
 def mark_soft(state: MemoryState, index: jax.Array) -> MemoryState:
-    """Clear a hard flag after a successful re-probe (Case 3 → Case 1/2)."""
+    """Clear a hard flag after a successful re-probe (Case 3 → Case 1/2).
+    ``index`` may be a scalar or a (K,) batch of indices (the microbatch
+    commit's flag pass)."""
     return dataclasses.replace(state, hard=state.hard.at[index].set(False))
 
 
 @jax.jit
 def touch(state: MemoryState, index: jax.Array,
           now: jax.Array) -> MemoryState:
-    """Refresh an entry's timestamp (restarts the re-probe cool-down)."""
+    """Refresh an entry's timestamp (restarts the re-probe cool-down).
+    ``index``/``now`` may be scalars or matching (K,) batches."""
     return dataclasses.replace(state,
                                added_at=state.added_at.at[index].set(now))

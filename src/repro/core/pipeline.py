@@ -1,0 +1,304 @@
+"""Microbatched RAR controller — the batched data plane over the §III
+procedure.
+
+:class:`MicrobatchRAR` serves B requests per step with the *same* routing
+semantics as the sequential :class:`repro.core.rar.RAR`, restructured so
+every layer touches the device once per microbatch instead of once per
+request:
+
+1. **Embed** the whole microbatch (or accept precomputed embeddings).
+2. **Query memory once** — the multi-query top-1 kernel
+   (:func:`repro.core.memory.query_batch`) streams the store through VMEM
+   a single time for all B queries.
+3. **Partition** requests into {memory_hard, memory_guide, memory_skill,
+   router_weak, shadow} by the batched similarities and the static router.
+4. **Serve each group with one sweep per FM tier**: strong answers for
+   memory_hard + shadow come from one ``answer_batch``; all weak work
+   (guided hits, bare hits, router passthroughs, shadow weak-probes) is one
+   weak sweep through the length-bucketed serving path.
+5. **Shadow inference as three batched sweeps**: weak-alone probe,
+   guide-from-memory probe, fresh-guide probe (one ``generate_guides``
+   call for every request that needs one).
+6. **Commit once**: all memory inserts of the microbatch land in a single
+   :func:`repro.core.memory.add_batch` scatter, followed by the
+   re-probe ``mark_soft``/``touch`` updates.
+
+Microbatch-commit semantics (documented contract): within a microbatch all
+memory reads observe the store snapshot at step start and all writes commit
+at step end. At B = 1 this reduces *exactly* to ``RAR.process`` — identical
+Outcome stream, memory state and FM-call counts (asserted by
+``tests/test_pipeline.py``). At B > 1 a request cannot hit an entry written
+earlier in the same microbatch; duplicate skills inside one microbatch each
+run their own shadow pass and insert their own entry (first hit lands one
+microbatch later). This is the standard staleness/throughput trade of
+batched vector-DB serving and the basis for every future scaling PR
+(sharded memory, async shadow queues, multi-host serving).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import memory as mem
+from repro.core.rar import RAR, Outcome, splice_guide
+
+
+def _answers(tier, prompts: list[np.ndarray]) -> np.ndarray:
+    """One logical answer sweep over possibly mixed-length prompts. The
+    length-bucketed path is preferred even for uniform groups: partition
+    sizes vary per microbatch, and bucketing keeps the engine's jit cache
+    at O(#lengths · log B) entries instead of one per observed size.
+    Tiers without it (test doubles) take the prompt list directly."""
+    many = getattr(tier, "answer_many", None)
+    if many is not None:
+        return np.asarray(many(prompts))
+    return np.asarray(tier.answer_batch(prompts))
+
+
+def _guides(tier, greqs: list[np.ndarray], guide_len: int) -> np.ndarray:
+    """One guide-generation sweep over possibly mixed-length requests."""
+    many = getattr(tier, "generate_guides_many", None)
+    if many is not None:
+        return np.asarray(many(greqs, guide_len))
+    return np.asarray(tier.generate_guides(greqs, guide_len))
+
+
+@dataclasses.dataclass
+class _Shadow:
+    """Per-request shadow-inference bookkeeping inside one microbatch."""
+    req: int                      # index into the microbatch
+    now: int                      # this request's logical time
+    reprobe_index: int | None     # hard entry being re-probed, if any
+    strong_ans: int = -1
+    strong_calls: int = 1
+    outcome: Outcome | None = None
+
+
+class MicrobatchRAR(RAR):
+    """Batched controller. Inherits the sequential ``process`` (so a
+    microbatch of 1 can also be served request-at-a-time if desired) and
+    adds :meth:`process_batch`."""
+
+    # ------------------------------------------------------------------
+    def process_batch(self, prompts: list[np.ndarray],
+                      guide_requests: list[np.ndarray],
+                      keys: list | None = None,
+                      embs: np.ndarray | None = None) -> list[Outcome]:
+        """Serve one microbatch. ``prompts[i]``/``guide_requests[i]``/
+        ``keys[i]`` mirror the arguments of ``RAR.process``; ``embs`` may
+        carry precomputed request embeddings (B, E)."""
+        B = len(prompts)
+        if B > self.cfg.memory.capacity:
+            # every request may record one entry; reject before any FM
+            # call rather than letting the commit scatter fail afterwards
+            raise ValueError(
+                f"microbatch of {B} exceeds memory capacity "
+                f"{self.cfg.memory.capacity}")
+        if keys is None:
+            keys = [None] * B
+        nows = [self.now + i + 1 for i in range(B)]
+        self.now += B
+
+        if embs is None:
+            embs = np.stack([np.asarray(self.embed_fn(p)) for p in prompts])
+        else:
+            embs = np.asarray(embs)
+
+        # ---- phase 1: one batched memory read (snapshot at batch start)
+        q = mem.query_batch(self.memory, jnp.asarray(embs))
+        sims = np.asarray(q.sim)
+        hards = np.asarray(q.hard)
+        has_guides = np.asarray(q.has_guide)
+        hit_guides = np.asarray(q.guide)
+        added_ats = np.asarray(q.added_at)
+        hit_idxs = np.asarray(q.index)
+
+        # ---- phase 2: partition
+        outcomes: list[Outcome | None] = [None] * B
+        g_hard: list[int] = []        # memory_hard → strong serves
+        g_guide: list[int] = []       # memory_guide → weak + stored guide
+        g_skill: list[int] = []       # memory_skill → weak unaided
+        g_router: list[int] = []      # router_weak  → weak unaided
+        shadows: list[_Shadow] = []   # strong serves + background probes
+        for i in range(B):
+            if sims[i] >= self.cfg.sim_threshold:
+                if bool(hards[i]):
+                    age = nows[i] - int(added_ats[i])
+                    if age < self.cfg.reprobe_period:
+                        g_hard.append(i)
+                    else:
+                        shadows.append(_Shadow(i, nows[i], int(hit_idxs[i])))
+                elif bool(has_guides[i]):
+                    g_guide.append(i)
+                else:
+                    g_skill.append(i)
+            elif self.route_weak_fn(np.asarray(embs[i]), keys[i]):
+                g_router.append(i)
+            else:
+                shadows.append(_Shadow(i, nows[i], None))
+
+        # ---- phase 3: one strong sweep (memory_hard + shadow requests)
+        strong_reqs = g_hard + [s.req for s in shadows]
+        if strong_reqs:
+            strong_ans = _answers(self.strong, [prompts[i]
+                                                for i in strong_reqs])
+            for i, a in zip(g_hard, strong_ans):
+                outcomes[i] = Outcome(int(a), "strong", 1, "memory_hard")
+            for s, a in zip(shadows, strong_ans[len(g_hard):]):
+                s.strong_ans = int(a)
+
+        # ---- phase 4: one weak sweep (guided hits, bare hits, router
+        # passthroughs, shadow weak-alone probes)
+        weak_prompts: list[np.ndarray] = []
+        weak_tags: list[tuple[str, object]] = []
+        for i in g_guide:
+            weak_prompts.append(splice_guide(prompts[i], hit_guides[i]))
+            weak_tags.append(("guide", i))
+        for i in g_skill:
+            weak_prompts.append(prompts[i])
+            weak_tags.append(("skill", i))
+        for i in g_router:
+            weak_prompts.append(prompts[i])
+            weak_tags.append(("router", i))
+        for s in shadows:
+            weak_prompts.append(prompts[s.req])
+            weak_tags.append(("shadow", s))
+
+        records: list[tuple[int, np.ndarray, np.ndarray, bool, bool, int]]
+        records = []          # (req, emb, guide, has_guide, hard, now)
+        soft_clears: list[tuple[int, int]] = []    # (req, memory index)
+        touches: list[tuple[int, int, int]] = []   # (req, index, now)
+        empty_guide = np.zeros((self.cfg.memory.guide_len,), np.int32)
+
+        def record(s: _Shadow, guide, has_guide, hard):
+            records.append((s.req, embs[s.req], guide, has_guide, hard,
+                            s.now))
+            if s.reprobe_index is not None and not hard:
+                soft_clears.append((s.req, s.reprobe_index))
+
+        pending: list[_Shadow] = []
+        if weak_prompts:
+            weak_ans = _answers(self.weak, weak_prompts)
+            for (tag, ref), a in zip(weak_tags, weak_ans):
+                a = int(a)
+                if tag == "guide":
+                    outcomes[ref] = Outcome(a, "weak", 0, "memory_guide",
+                                            guide_source="memory")
+                elif tag == "skill":
+                    outcomes[ref] = Outcome(a, "weak", 0, "memory_skill")
+                elif tag == "router":
+                    outcomes[ref] = Outcome(a, "weak", 0, "router_weak")
+                else:                                  # shadow Case 1 probe
+                    s: _Shadow = ref
+                    if self.aligned_fn(a, s.strong_ans):
+                        record(s, empty_guide, False, False)
+                        s.outcome = Outcome(
+                            s.strong_ans, "strong", s.strong_calls,
+                            "case1_reprobe" if s.reprobe_index is not None
+                            else "case1")
+                    else:
+                        pending.append(s)
+
+        # ---- phase 5: shadow sweep 2 — guide-from-memory probes (against
+        # the same batch-start snapshot)
+        still: list[_Shadow] = []
+        if pending:
+            gq = mem.query_batch(self.memory,
+                                 jnp.asarray(embs[[s.req for s in pending]]),
+                                 guides_only=True)
+            gsims = np.asarray(gq.sim)
+            gguides = np.asarray(gq.guide)
+            probes, probe_shadows, probe_guides = [], [], []
+            for j, s in enumerate(pending):
+                if gsims[j] >= self.cfg.guide_sim_threshold:
+                    probes.append(splice_guide(prompts[s.req], gguides[j]))
+                    probe_shadows.append(s)
+                    probe_guides.append(gguides[j])
+                else:
+                    still.append(s)
+            if probes:
+                probe_ans = _answers(self.weak, probes)
+                for s, g, a in zip(probe_shadows, probe_guides, probe_ans):
+                    if self.aligned_fn(int(a), s.strong_ans):
+                        self.guides_from_memory += 1
+                        record(s, g, True, False)
+                        s.outcome = Outcome(s.strong_ans, "strong",
+                                            s.strong_calls, "case2",
+                                            guide_source="memory")
+                    else:
+                        still.append(s)
+            still.sort(key=lambda s: s.req)
+
+        # ---- phase 6: shadow sweep 3 — fresh guides (one strong
+        # generate_guides sweep) + guided weak probes
+        failed: list[_Shadow] = []
+        if still and self.cfg.allow_fresh_guides:
+            for s in still:
+                s.strong_calls += 1
+            fresh = _guides(self.strong,
+                            [guide_requests[s.req] for s in still],
+                            self.cfg.memory.guide_len)
+            probe_ans = _answers(self.weak,
+                                 [splice_guide(prompts[s.req], g)
+                                  for s, g in zip(still, fresh)])
+            for s, g, a in zip(still, fresh, probe_ans):
+                if self.aligned_fn(int(a), s.strong_ans):
+                    self.guides_generated += 1
+                    record(s, g, True, False)
+                    s.outcome = Outcome(s.strong_ans, "strong",
+                                        s.strong_calls, "case2",
+                                        guide_source="fresh")
+                else:
+                    failed.append(s)
+        else:
+            failed = still
+
+        for s in failed:                               # Case 3
+            if s.reprobe_index is not None:
+                touches.append((s.req, s.reprobe_index, s.now))
+            else:
+                record(s, empty_guide, False, True)
+            s.outcome = Outcome(s.strong_ans, "strong", s.strong_calls,
+                                "case3")
+        for s in shadows:
+            outcomes[s.req] = s.outcome
+
+        # ---- phase 7: one commit — adds first (matching sequential
+        # add-then-flag order), then re-probe flag updates, in request
+        # order. Flag updates target *pre-batch* entries; if the FIFO
+        # scatter just evicted one (full ring), the update would hit an
+        # unrelated fresh entry — e.g. clear the hard flag another request
+        # just recorded — so those are dropped.
+        overwritten: set[int] = set()
+        if records:
+            records.sort(key=lambda r: r[0])
+            C = self.memory.emb.shape[0]
+            base_ptr = int(self.memory.ptr)
+            overwritten = {(base_ptr + j) % C for j in range(len(records))}
+            self.memory = mem.add_batch(
+                self.memory,
+                jnp.asarray(np.stack([r[1] for r in records])),
+                jnp.asarray(np.stack([np.asarray(r[2], np.int32)
+                                      for r in records])),
+                jnp.asarray(np.asarray([r[3] for r in records], bool)),
+                jnp.asarray(np.asarray([r[4] for r in records], bool)),
+                jnp.asarray(np.asarray([r[5] for r in records], np.int32)))
+        soft_clears = [s for s in soft_clears if s[1] not in overwritten]
+        if soft_clears:
+            self.memory = mem.mark_soft(
+                self.memory,
+                jnp.asarray(sorted({idx for _, idx in soft_clears}),
+                            jnp.int32))
+        # dedupe duplicate slots last-request-wins (scatter order for
+        # duplicate indices is implementation-defined) — matches the
+        # sequential controller, where the later touch lands last
+        by_idx = {idx: now for _, idx, now in sorted(touches)
+                  if idx not in overwritten}
+        if by_idx:
+            self.memory = mem.touch(
+                self.memory,
+                jnp.asarray(sorted(by_idx), jnp.int32),
+                jnp.asarray([by_idx[i] for i in sorted(by_idx)], jnp.int32))
+        return outcomes

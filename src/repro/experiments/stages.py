@@ -13,7 +13,8 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.rar import RAR, RARConfig
+from repro.core.pipeline import MicrobatchRAR
+from repro.core.rar import RAR, RARConfig, splice_guide
 from repro.experiments.setup import TrainedSystem
 
 Sample = tuple[int, int, int]   # (domain, skill, operand)
@@ -56,6 +57,7 @@ def run_rar_experiment(system: TrainedSystem, pool: list[Sample], *,
                        router_kind: str = "oracle",
                        strong_tier=None,
                        prepopulate_from: list[Sample] | None = None,
+                       microbatch: int = 1,
                        verbose: bool = False
                        ) -> tuple[list[StageResult], RAR]:
     """One experiment (one shuffle). Returns per-stage results + the RAR
@@ -64,6 +66,11 @@ def run_rar_experiment(system: TrainedSystem, pool: list[Sample], *,
     ``prepopulate_from``: RQ2 inter-domain setting — run a silent warm-up
     experiment on another domain's pool first so the guide memory is
     populated with out-of-domain guides.
+
+    ``microbatch``: requests served per controller step. 1 (default) is
+    the paper's sequential stream via ``RAR.process``; > 1 routes through
+    the batched data plane (``MicrobatchRAR.process_batch``) with
+    microbatch-commit memory semantics.
     """
     suite = system.suite
     strong = strong_tier or system.strong
@@ -92,7 +99,8 @@ def run_rar_experiment(system: TrainedSystem, pool: list[Sample], *,
     else:
         route_fn = lambda emb, key: system.router.route_weak(emb)  # noqa: E731
 
-    rar = RAR(system.weak, strong, embed_fn, route_fn, rar_cfg)
+    controller_cls = MicrobatchRAR if microbatch > 1 else RAR
+    rar = controller_cls(system.weak, strong, embed_fn, route_fn, rar_cfg)
 
     if prepopulate_from is not None:
         pre_prompts, pre_greqs = _prompts(system, prepopulate_from)
@@ -112,10 +120,10 @@ def run_rar_experiment(system: TrainedSystem, pool: list[Sample], *,
     for stage in range(n_stages):
         aligned = strong_calls = gmem = gfresh = 0
         cases: dict = {}
-        for i in order:
-            current["emb"] = emb_by_key[int(i)]
-            out = rar.process(prompts[int(i)], greqs[int(i)], key=int(i))
-            ok = int(out.response == strong_ref[int(i)])
+
+        def tally(i: int, out) -> None:
+            nonlocal aligned, strong_calls, gmem, gfresh
+            ok = int(out.response == strong_ref[i])
             aligned += ok
             strong_calls += out.strong_calls
             cases[out.case] = cases.get(out.case, 0) + 1
@@ -124,6 +132,21 @@ def run_rar_experiment(system: TrainedSystem, pool: list[Sample], *,
                 gmem += 1
             elif ok and out.guide_source == "fresh":
                 gfresh += 1
+
+        if microbatch > 1:
+            for start in range(0, len(order), microbatch):
+                chunk = [int(i) for i in order[start:start + microbatch]]
+                outs = rar.process_batch(
+                    [prompts[i] for i in chunk],
+                    [greqs[i] for i in chunk],
+                    keys=chunk, embs=embs[chunk])
+                for i, out in zip(chunk, outs):
+                    tally(i, out)
+        else:
+            for i in order:
+                current["emb"] = emb_by_key[int(i)]
+                out = rar.process(prompts[int(i)], greqs[int(i)], key=int(i))
+                tally(int(i), out)
         results.append(StageResult(
             n=len(pool), aligned=aligned, strong_calls=strong_calls,
             guides_from_memory=gmem, guides_fresh=gfresh, cases=cases))
@@ -140,10 +163,14 @@ def run_rar_experiment(system: TrainedSystem, pool: list[Sample], *,
 
 
 def run_baselines(system: TrainedSystem, pool: list[Sample], *,
-                  n_stages: int = 5) -> dict[str, list[StageResult]]:
+                  n_stages: int = 5, rar_cfg: RARConfig | None = None
+                  ) -> dict[str, list[StageResult]]:
     """Standalone weak, weak + zero-shot CoT, standalone strong, oracle
-    static router — each as per-stage results over the pool."""
+    static router — each as per-stage results over the pool. ``rar_cfg``
+    supplies the guide format (``memory.guide_len``) so the CoT comparator
+    matches the configuration RAR itself runs with."""
     suite = system.suite
+    rar_cfg = rar_cfg or RARConfig()
     prompts, greqs = _prompts(system, pool)
     strong_ref = _batched_answers(system.strong, prompts)
     n = len(pool)
@@ -156,11 +183,9 @@ def run_baselines(system: TrainedSystem, pool: list[Sample], *,
 
     # weak + zero-shot CoT: the weak FM generates its own guide, then
     # answers with it in-context (the paper's CoT comparator).
-    self_guides = system.weak.generate_guides(np.stack(greqs), 8)
-    guided = []
-    for p, g in zip(prompts, self_guides):
-        gg = g[g != 0]
-        guided.append(np.concatenate([p[:1], gg, p[1:]]).astype(np.int32))
+    self_guides = system.weak.generate_guides(np.stack(greqs),
+                                              rar_cfg.memory.guide_len)
+    guided = [splice_guide(p, g) for p, g in zip(prompts, self_guides)]
     cot_ans = _batched_answers(system.weak, guided)
     aligned = int(np.sum((cot_ans == strong_ref) & (cot_ans >= 0)))
     out["weak_cot"] = [StageResult(n, aligned, 0) for _ in range(n_stages)]

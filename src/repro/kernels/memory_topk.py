@@ -11,6 +11,20 @@ written back.
 Block shape: (BLOCK_C, E). E is 384 → zero-padded to 512 by the wrapper so
 the lane dim is a multiple of 128; BLOCK_C defaults to 1024 rows →
 1024×512×4 B = 2 MiB per block in VMEM.
+
+Two entry points share the streaming layout:
+
+* :func:`memory_top1_pallas` — one query, running best carried in SMEM.
+* :func:`memory_top1_batch_pallas` — the microbatched data plane
+  (``core.pipeline``): all B queries stay resident in VMEM while the store
+  makes the same single HBM pass; each (BLOCK_C, E)×(B, E)ᵀ product lands
+  on the MXU and the per-query running (best sim, best index) pair is a
+  (1, B) VMEM accumulator updated with a vector compare. One pass serves
+  the whole microbatch — the HBM traffic is amortised B-fold, which is
+  exactly the paper's per-request vector-DB lookup cost divided by the
+  serving batch size. Microbatch-commit semantics (reads at batch start,
+  writes once at batch end) live in ``core.memory.add_batch``; this kernel
+  is the read side.
 """
 from __future__ import annotations
 
@@ -87,3 +101,81 @@ def memory_top1_pallas(mem: jax.Array, q: jax.Array, mask: jax.Array,
         interpret=interpret,
     )(qp, memp, maskp)
     return sim[0, 0], idx[0, 0]
+
+
+# ---------------------------------------------------------------------------
+# Multi-query top-1 — the batched data plane
+# ---------------------------------------------------------------------------
+
+
+def _top1_batch_kernel(q_ref, mem_ref, mask_ref, sim_ref, idx_ref, *,
+                       block_c: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        sim_ref[...] = jnp.full(sim_ref.shape, -2.0, jnp.float32)
+        idx_ref[...] = jnp.zeros(idx_ref.shape, jnp.int32)
+
+    block = mem_ref[...].astype(jnp.float32)          # (BC, E)
+    qs = q_ref[...].astype(jnp.float32)               # (B, E)
+    sims = jax.lax.dot_general(block, qs, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)  # (BC, B)
+    valid = mask_ref[...] != 0                        # (BC, 1)
+    sims = jnp.where(valid, sims, -2.0)
+
+    rows = jax.lax.broadcasted_iota(jnp.int32, sims.shape, 0)
+    best = jnp.max(sims, axis=0)                      # (B,)
+    # lowest row index achieving each column's max (deterministic tie-break)
+    best_row = jnp.min(jnp.where(sims >= best[None, :], rows,
+                                 jnp.int32(2 ** 30)), axis=0)       # (B,)
+    prev = sim_ref[0, :]
+    take = best > prev
+    sim_ref[0, :] = jnp.where(take, best, prev)
+    idx_ref[0, :] = jnp.where(take,
+                              (i * block_c + best_row).astype(jnp.int32),
+                              idx_ref[0, :])
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
+def memory_top1_batch_pallas(mem: jax.Array, qs: jax.Array, mask: jax.Array,
+                             *, block_c: int = DEFAULT_BLOCK_C,
+                             interpret: bool = False
+                             ) -> tuple[jax.Array, jax.Array]:
+    """mem: (C, E); qs: (B, E); mask: (C,) bool → (sims (B,), idx (B,)).
+
+    The B queries are VMEM-resident for the whole store pass; the running
+    per-query best is a (1, B) VMEM accumulator revisited every grid step.
+    """
+    C, E = mem.shape
+    B = qs.shape[0]
+    bc = min(block_c, C)
+    # rows to a multiple of the block; lanes (E and B) to multiples of 128
+    Cp = ((C + bc - 1) // bc) * bc
+    Ep = ((E + 127) // 128) * 128
+    Bp = ((B + 127) // 128) * 128
+    memp = jnp.zeros((Cp, Ep), mem.dtype).at[:C, :E].set(mem)
+    qp = jnp.zeros((Bp, Ep), jnp.float32).at[:B, :E].set(
+        qs.astype(jnp.float32))
+    maskp = jnp.zeros((Cp, 1), jnp.int32).at[:C, 0].set(mask.astype(jnp.int32))
+
+    grid = (Cp // bc,)
+    sims, idx = pl.pallas_call(
+        functools.partial(_top1_batch_kernel, block_c=bc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((Bp, Ep), lambda i: (0, 0)),
+            pl.BlockSpec((bc, Ep), lambda i: (i, 0)),
+            pl.BlockSpec((bc, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Bp), lambda i: (0, 0)),
+            pl.BlockSpec((1, Bp), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, Bp), jnp.float32),
+            jax.ShapeDtypeStruct((1, Bp), jnp.int32),
+        ],
+        interpret=interpret,
+    )(qp, memp, maskp)
+    return sims[0, :B], idx[0, :B]

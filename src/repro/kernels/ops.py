@@ -16,7 +16,8 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.memory_topk import memory_top1_pallas
+from repro.kernels.memory_topk import (memory_top1_batch_pallas,
+                                       memory_top1_pallas)
 
 
 def _default_impl() -> str:
@@ -36,6 +37,17 @@ def memory_top1(mem: jax.Array, q: jax.Array, mask: jax.Array,
     if impl == "ref":
         return ref.memory_top1(mem, q, mask)
     return memory_top1_pallas(mem, q, mask, interpret=(impl == "interpret"))
+
+
+def memory_top1_batch(mem: jax.Array, qs: jax.Array, mask: jax.Array,
+                      impl: str | None = None
+                      ) -> tuple[jax.Array, jax.Array]:
+    """Multi-query top-1: qs (B, E) against mem (C, E) in one store pass."""
+    impl = impl or _default_impl()
+    if impl == "ref":
+        return ref.memory_top1_batch(mem, qs, mask)
+    return memory_top1_batch_pallas(mem, qs, mask,
+                                    interpret=(impl == "interpret"))
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, scale=None,

@@ -29,6 +29,18 @@ def memory_top1(mem: jax.Array, q: jax.Array, mask: jax.Array
     return sims[idx], idx
 
 
+def memory_top1_batch(mem: jax.Array, qs: jax.Array, mask: jax.Array
+                      ) -> tuple[jax.Array, jax.Array]:
+    """Multi-query variant: qs (B, E) unit-norm rows. Returns
+    (sims (B,) f32 — -2.0 where mask empty, idx (B,) int32). Ties break to
+    the lowest row index, matching the blocked kernel."""
+    sims = qs.astype(jnp.float32) @ mem.astype(jnp.float32).T   # (B, C)
+    sims = jnp.where(mask[None, :], sims, -2.0)
+    idx = jnp.argmax(sims, axis=1).astype(jnp.int32)
+    return jnp.take_along_axis(sims, idx[:, None].astype(jnp.int32),
+                               axis=1)[:, 0], idx
+
+
 def memory_topk(mem: jax.Array, q: jax.Array, mask: jax.Array, k: int
                 ) -> tuple[jax.Array, jax.Array]:
     """Top-k variant. Returns (sims (k,), idx (k,)) sorted descending."""

@@ -27,6 +27,9 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=200)
     ap.add_argument("--domain", type=int, default=0)
     ap.add_argument("--stages", type=int, default=3)
+    ap.add_argument("--microbatch", type=int, default=1,
+                    help="requests per controller step (1 = the paper's "
+                         "sequential stream; >1 = batched data plane)")
     ap.add_argument("--router", default="oracle",
                     choices=["oracle", "learned"])
     ap.add_argument("--sim-threshold", type=float, default=0.2)
@@ -44,7 +47,7 @@ def main() -> None:
     t0 = time.time()
     results, rar = run_rar_experiment(
         system, pool, n_stages=args.stages, rar_cfg=cfg,
-        router_kind=args.router, verbose=True)
+        router_kind=args.router, microbatch=args.microbatch, verbose=True)
     dt = time.time() - t0
 
     total = args.stages * len(pool)
@@ -54,7 +57,7 @@ def main() -> None:
           f"({1e3 * dt / total:.1f} ms/request)")
     print(f"[serve] aligned {aligned}/{total} ({100 * aligned / total:.1f}%)"
           f", strong-FM calls {strong} ({100 * strong / total:.1f}% of "
-          f"requests), memory size {rar.memory.size}")
+          f"requests), memory size {rar.memory.size_fast}")
     if args.json_out:
         with open(args.json_out, "w") as f:
             json.dump([r.__dict__ for r in results], f, indent=1,

@@ -5,19 +5,35 @@ max_new) so repeated calls with uniform-shaped request batches (the common
 case in the RAR evaluation loop: unguided / guided / guide-request prompts
 each have a fixed length) hit compiled code.
 
+``generate_bucketed`` extends this to mixed-length request groups (the
+microbatched RAR controller mixes guided and unguided prompts in one
+sweep): prompts are grouped by exact length — a causal LM cannot be
+length-padded without shifting positions — and each group's batch dim is
+padded up to a power-of-two bucket, so arbitrary traffic compiles at most
+O(#lengths · log max_batch) variants instead of one per observed shape.
+
 This is the same ``prefill`` / ``decode_step`` pair the multi-pod dry-run
 lowers at production shapes — the engine is the single-host driver of it.
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import Any
+from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import decode_step, prefill
 from repro.models.config import ModelConfig
+
+
+def bucket_batch(n: int) -> int:
+    """Smallest power of two ≥ n — the batch-dim bucket sizes."""
+    b = 1
+    while b < n:
+        b *= 2
+    return b
 
 
 def greedy_generate(cfg: ModelConfig, params: Any, batch: dict,
@@ -65,6 +81,33 @@ class ServingEngine:
         out = self._jitted[key](params=self.params, batch=batch)
         self.calls += tokens.shape[0]
         self.tokens_processed += tokens.size + out.size
+        return out
+
+    def generate_bucketed(self, prompts: Sequence[np.ndarray],
+                          max_new: int) -> np.ndarray:
+        """Serve a mixed-length prompt list in one sweep. Prompts are
+        grouped by exact length; each group is padded along batch to the
+        power-of-two bucket (dummy rows replicate the group's first
+        prompt, their outputs are dropped and they are not billed as
+        calls). ``calls`` stays logical (real requests only) while
+        ``tokens_processed``/``flops_spent`` stay physical — padding rows
+        do consume compute and are deliberately included there.
+        Returns (N, max_new) int32 in input order."""
+        by_len: dict[int, list[int]] = {}
+        for i, p in enumerate(prompts):
+            by_len.setdefault(len(p), []).append(i)
+        out = np.zeros((len(prompts), max_new), np.int32)
+        for L, idxs in sorted(by_len.items()):
+            B = len(idxs)
+            Bp = bucket_batch(B)
+            batch = np.stack([np.asarray(prompts[i], np.int32)
+                              for i in idxs] +
+                             [np.asarray(prompts[idxs[0]], np.int32)] *
+                             (Bp - B))
+            got = np.asarray(self.generate({"tokens": jnp.asarray(batch)},
+                                           max_new))
+            self.calls -= Bp - B          # padding rows are not requests
+            out[idxs] = got[:B]
         return out
 
     @property

@@ -1,0 +1,56 @@
+"""Hypothesis shim: re-export the real library when installed, otherwise a
+minimal deterministic fallback so the property tests still run (each
+``@given`` test executes ``max_examples`` seeded samples).
+
+Only the strategy surface this suite uses is implemented: ``integers``,
+``booleans``, ``lists``.
+"""
+from __future__ import annotations
+
+try:                                     # pragma: no cover - env dependent
+    from hypothesis import given, settings, strategies  # noqa: F401
+except ImportError:
+    import functools
+
+    import numpy as np
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample
+
+    class strategies:  # noqa: N801 - mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def sample(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elements.sample(rng) for _ in range(n)]
+            return _Strategy(sample)
+
+    def settings(*, max_examples=10, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", 10)
+                rng = np.random.default_rng(0)
+                for _ in range(n):
+                    fn(*args, *(s.sample(rng) for s in strats), **kwargs)
+            # pytest resolves fixtures through __wrapped__'s signature;
+            # drop it so the strategy-filled params aren't fixture-matched.
+            del wrapper.__wrapped__
+            return wrapper
+        return deco

@@ -7,7 +7,8 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.memory_topk import memory_top1_pallas
+from repro.kernels.memory_topk import (memory_top1_batch_pallas,
+                                       memory_top1_pallas)
 
 TOL = {np.float32: 2e-5, jnp.bfloat16: 2e-2}
 
@@ -53,6 +54,73 @@ def test_memory_top1_exact_hit(rng):
                               jnp.asarray(mask), block_c=64, interpret=True)
     assert int(i) == 123
     assert float(s) > 0.999
+
+
+# ---------------------------------------------------------------------------
+# memory_top1_batch (multi-query)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("C", [64, 300, 1024])
+@pytest.mark.parametrize("B", [1, 3, 8, 32])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_memory_top1_batch_sweep(rng, C, B, dtype):
+    E = 384
+    mem = rng.normal(size=(C, E)).astype(np.float32)
+    mem /= np.linalg.norm(mem, axis=1, keepdims=True)
+    qs = rng.normal(size=(B, E)).astype(np.float32)
+    qs /= np.linalg.norm(qs, axis=1, keepdims=True)
+    mask = rng.random(C) < 0.6
+    mask[int(rng.integers(0, C))] = True  # never empty
+    mem_t = jnp.asarray(mem, dtype)
+    s_ref, i_ref = ref.memory_top1_batch(mem_t, jnp.asarray(qs),
+                                         jnp.asarray(mask))
+    s_p, i_p = memory_top1_batch_pallas(mem_t, jnp.asarray(qs),
+                                        jnp.asarray(mask), block_c=128,
+                                        interpret=True)
+    np.testing.assert_array_equal(np.asarray(i_ref), np.asarray(i_p))
+    np.testing.assert_allclose(np.asarray(s_ref), np.asarray(s_p),
+                               atol=1e-5)
+
+
+def test_memory_top1_batch_matches_single(rng):
+    """Each batched query must agree with the single-query kernel."""
+    C, E, B = 256, 128, 7
+    mem = rng.normal(size=(C, E)).astype(np.float32)
+    mem /= np.linalg.norm(mem, axis=1, keepdims=True)
+    qs = rng.normal(size=(B, E)).astype(np.float32)
+    qs /= np.linalg.norm(qs, axis=1, keepdims=True)
+    mask = jnp.asarray(rng.random(C) < 0.7)
+    s_b, i_b = memory_top1_batch_pallas(jnp.asarray(mem), jnp.asarray(qs),
+                                        mask, block_c=64, interpret=True)
+    for b in range(B):
+        s1, i1 = memory_top1_pallas(jnp.asarray(mem), jnp.asarray(qs[b]),
+                                    mask, block_c=64, interpret=True)
+        assert int(i1) == int(i_b[b])
+        np.testing.assert_allclose(float(s1), float(s_b[b]), atol=1e-6)
+
+
+def test_memory_top1_batch_empty_mask(rng):
+    mem = jnp.asarray(rng.normal(size=(64, 128)), jnp.float32)
+    qs = jnp.asarray(rng.normal(size=(4, 128)), jnp.float32)
+    mask = jnp.zeros((64,), bool)
+    s, _ = memory_top1_batch_pallas(mem, qs, mask, block_c=32,
+                                    interpret=True)
+    np.testing.assert_array_equal(np.asarray(s), np.full(4, -2.0))
+
+
+def test_memory_top1_batch_exact_hits(rng):
+    """Queries equal to stored rows retrieve those rows with sim≈1."""
+    mem = rng.normal(size=(256, 384)).astype(np.float32)
+    mem /= np.linalg.norm(mem, axis=1, keepdims=True)
+    picks = [3, 77, 200]
+    qs = mem[picks]
+    mask = np.ones(256, bool)
+    s, i = memory_top1_batch_pallas(jnp.asarray(mem), jnp.asarray(qs),
+                                    jnp.asarray(mask), block_c=64,
+                                    interpret=True)
+    np.testing.assert_array_equal(np.asarray(i), picks)
+    assert float(np.min(np.asarray(s))) > 0.999
 
 
 # ---------------------------------------------------------------------------

@@ -3,7 +3,7 @@ invariants (retrieval, thresholds, FIFO eviction, flag semantics)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, strategies as st
 
 from repro.core import memory as mem
 
@@ -78,6 +78,94 @@ def test_mark_soft_and_touch(rng):
     assert int(mem.query(state, jnp.asarray(e)).added_at) == 9
     state = mem.mark_soft(state, q.index)
     assert not bool(mem.query(state, jnp.asarray(e)).hard)
+
+
+def _batch_of(rng, k, d=16):
+    embs = np.stack([rand_unit(rng, d) for _ in range(k)])
+    guides = np.arange(4 * k, dtype=np.int32).reshape(k, 4)
+    has_guide = (np.arange(k) % 2).astype(bool)
+    hard = (np.arange(k) % 3 == 0)
+    now = np.arange(k, dtype=np.int32) + 1
+    return embs, guides, has_guide, hard, now
+
+
+def test_add_batch_equals_sequential_adds(rng):
+    """add_batch(K entries) == K sequential add() calls, field for field."""
+    embs, guides, has_guide, hard, now = _batch_of(rng, 5)
+    seq = mem.init_memory(CFG)
+    for j in range(5):
+        seq = mem.add(seq, jnp.asarray(embs[j]), jnp.asarray(guides[j]),
+                      jnp.asarray(has_guide[j]), jnp.asarray(hard[j]),
+                      jnp.int32(now[j]))
+    bat = mem.add_batch(mem.init_memory(CFG), jnp.asarray(embs),
+                        jnp.asarray(guides), jnp.asarray(has_guide),
+                        jnp.asarray(hard), jnp.asarray(now))
+    for f in ("emb", "guide", "has_guide", "hard", "valid", "added_at",
+              "ptr"):
+        np.testing.assert_array_equal(np.asarray(getattr(seq, f)),
+                                      np.asarray(getattr(bat, f)), f)
+
+
+def test_add_batch_ring_wraparound(rng):
+    """A commit crossing the ring end wraps to the start, matching the
+    sequential FIFO semantics."""
+    state = mem.init_memory(CFG)
+    zero_g = jnp.zeros(4, jnp.int32)
+    for i in range(CFG.capacity - 2):        # leave 2 free slots
+        state = mem.add(state, jnp.asarray(rand_unit(rng)), zero_g,
+                        jnp.asarray(False), jnp.asarray(False), jnp.int32(i))
+    embs, guides, has_guide, hard, now = _batch_of(rng, 5)
+    state = mem.add_batch(state, jnp.asarray(embs), jnp.asarray(guides),
+                          jnp.asarray(has_guide), jnp.asarray(hard),
+                          jnp.asarray(now))
+    # slots C-2, C-1 then 0, 1, 2 hold the batch
+    slots = [CFG.capacity - 2, CFG.capacity - 1, 0, 1, 2]
+    np.testing.assert_array_equal(np.asarray(state.emb)[slots], embs)
+    np.testing.assert_array_equal(np.asarray(state.added_at)[slots], now)
+    assert int(state.ptr) == CFG.capacity + 3
+    assert state.size_fast == CFG.capacity       # full ring
+    assert state.size == CFG.capacity            # slow path agrees
+
+
+def test_add_batch_rejects_overflow(rng):
+    embs, guides, has_guide, hard, now = _batch_of(rng, CFG.capacity + 1)
+    with pytest.raises(ValueError):
+        mem.add_batch(mem.init_memory(CFG), jnp.asarray(embs),
+                      jnp.asarray(guides), jnp.asarray(has_guide),
+                      jnp.asarray(hard), jnp.asarray(now))
+
+
+def test_size_fast_matches_size(rng):
+    state = mem.init_memory(CFG)
+    zero_g = jnp.zeros(4, jnp.int32)
+    assert state.size_fast == state.size == 0
+    for i in range(CFG.capacity + 5):
+        state = mem.add(state, jnp.asarray(rand_unit(rng)), zero_g,
+                        jnp.asarray(False), jnp.asarray(False),
+                        jnp.int32(i))
+        assert state.size_fast == state.size
+
+
+def test_query_batch_matches_query(rng):
+    state = mem.init_memory(CFG)
+    for j in range(10):
+        state = mem.add(state, jnp.asarray(rand_unit(rng)),
+                        jnp.asarray(np.full(4, j, np.int32)),
+                        jnp.asarray(j % 2 == 0), jnp.asarray(j % 3 == 0),
+                        jnp.int32(j))
+    qs = np.stack([rand_unit(rng) for _ in range(6)])
+    for guides_only in (False, True):
+        qb = mem.query_batch(state, jnp.asarray(qs),
+                             guides_only=guides_only)
+        for b in range(6):
+            q1 = mem.query(state, jnp.asarray(qs[b]),
+                           guides_only=guides_only)
+            assert int(q1.index) == int(np.asarray(qb.index)[b])
+            np.testing.assert_allclose(float(q1.sim),
+                                       float(np.asarray(qb.sim)[b]),
+                                       atol=1e-6)
+            np.testing.assert_array_equal(np.asarray(q1.guide),
+                                          np.asarray(qb.guide)[b])
 
 
 @settings(max_examples=25, deadline=None)

@@ -1,0 +1,181 @@
+"""Microbatched controller: exact batch-of-1 equivalence with the
+sequential ``RAR.process`` (Outcome stream, memory state, FM-call counts),
+plus batched-mode behaviour at B > 1."""
+import numpy as np
+import pytest
+from test_rar_controller import FakeTier, greq, make_cfg, prompt, skill_emb
+
+from repro.core.pipeline import MicrobatchRAR
+from repro.core.rar import RAR
+
+MEM_FIELDS = ("emb", "guide", "has_guide", "hard", "valid", "added_at",
+              "ptr")
+
+
+def make_stream(n_skills=6, reps=3, seed=0):
+    rng = np.random.default_rng(seed)
+    stream = []
+    for _ in range(reps):
+        for s in rng.permutation(n_skills):
+            stream.append((int(s), int(rng.integers(0, 8))))
+    return stream
+
+
+def build(cls, weak_known=(), weak_follows_guides=True, **cfg_kw):
+    weak = FakeTier(known=weak_known, name="weak")
+    strong = FakeTier(known=range(10_000), can_guide=True, name="strong")
+    if not weak_follows_guides:
+        calls = weak.engine
+
+        def stubborn(prompts):
+            calls.calls += len(prompts)
+            return np.asarray([-1] * len(prompts))
+        weak.answer_batch = stubborn
+    holder = {}
+    ctrl = cls(weak, strong, lambda p: holder["emb"], lambda e, k: False,
+               make_cfg(**cfg_kw))
+    return ctrl, holder
+
+
+def run_sequential(stream, **kw):
+    rar, holder = build(RAR, **kw)
+    outs = []
+    for s, x in stream:
+        holder["emb"] = skill_emb(s)
+        outs.append(rar.process(prompt(s, x), greq(s), key=(s, x)))
+    return rar, outs
+
+
+def run_batched(stream, batch, **kw):
+    ctrl, _ = build(MicrobatchRAR, **kw)
+    outs = []
+    for start in range(0, len(stream), batch):
+        chunk = stream[start:start + batch]
+        outs += ctrl.process_batch(
+            [prompt(s, x) for s, x in chunk],
+            [greq(s) for s, _ in chunk],
+            keys=chunk,
+            embs=np.stack([skill_emb(s) for s, _ in chunk]))
+    return ctrl, outs
+
+
+SCENARIOS = [
+    dict(weak_known={0, 1}),                        # case1 + guide paths
+    dict(weak_known=set()),                         # all guide-driven
+    dict(weak_known=set(), weak_follows_guides=False,
+         reprobe_period=4),                         # case3 + re-probe
+    dict(weak_known={0, 1, 2}, reprobe_period=3, allow_fresh_guides=False),
+]
+
+
+@pytest.mark.parametrize("kw", SCENARIOS)
+def test_batch1_identical_to_sequential(kw):
+    stream = make_stream()
+    seq, seq_outs = run_sequential(stream, **kw)
+    bat, bat_outs = run_batched(stream, 1, **kw)
+    assert bat_outs == seq_outs                     # full Outcome stream
+    for f in MEM_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(seq.memory, f)),
+            np.asarray(getattr(bat.memory, f)), f)
+    assert bat.now == seq.now
+    assert bat.weak.engine.calls == seq.weak.engine.calls
+    assert bat.strong.engine.calls == seq.strong.engine.calls
+    assert bat.guides_from_memory == seq.guides_from_memory
+    assert bat.guides_generated == seq.guides_generated
+
+
+def test_batched_mode_learns_and_matches_cost_profile():
+    """At B=8 the controller still learns (second pass over the stream is
+    mostly memory hits) and total strong calls stay close to sequential."""
+    stream = make_stream(n_skills=8, reps=1, seed=3)
+    kw = dict(weak_known={0, 1, 2})
+    pass1 = stream
+    pass2 = make_stream(n_skills=8, reps=1, seed=4)
+
+    seq, seq_outs = run_sequential(pass1 + pass2, **kw)
+    bat, bat_outs = run_batched(pass1 + pass2, 8, **kw)
+
+    seq_strong = sum(o.strong_calls for o in seq_outs)
+    bat_strong = sum(o.strong_calls for o in bat_outs)
+    # same skills learned → identical steady state; transient duplicates
+    # inside one microbatch may add a few extra shadow passes
+    assert bat_strong >= seq_strong
+    assert bat_strong <= seq_strong + 2 * 8
+    # second pass: every skill is in memory → no strong calls at all for
+    # guide-able skills in either mode
+    second = bat_outs[len(pass1):]
+    assert all(o.case in ("memory_skill", "memory_guide") for o in second)
+    assert all(o.strong_calls == 0 for o in second)
+    # responses match the sequential stream on the second pass
+    assert [o.response for o in second] == \
+        [o.response for o in seq_outs[len(pass1):]]
+
+
+def test_batched_reprobe_clears_hard_flag():
+    """The re-probe path (hard entry past cool-down) works batched: after
+    the weak FM 'evolves', the hard flag clears and routing goes weak."""
+    kw = dict(weak_known=set(), weak_follows_guides=False, reprobe_period=2)
+    ctrl, _ = build(MicrobatchRAR, **kw)
+    embs = skill_emb(5)[None]
+    out = ctrl.process_batch([prompt(5, 1)], [greq(5)], embs=embs)[0]
+    assert out.case == "case3"
+    ctrl.weak = FakeTier(known={5}, name="weak-evolved")
+    out = ctrl.process_batch([prompt(5, 2)], [greq(5)], embs=embs)[0]
+    assert out.case == "memory_hard"
+    out = ctrl.process_batch([prompt(5, 3)], [greq(5)], embs=embs)[0]
+    assert out.case == "case1_reprobe"
+    out = ctrl.process_batch([prompt(5, 4)], [greq(5)], embs=embs)[0]
+    assert out.case == "memory_skill" and out.strong_calls == 0
+
+
+def test_commit_eviction_does_not_corrupt_flag_updates():
+    """Full ring: when the microbatch's FIFO scatter evicts the very slot
+    a re-probe wanted to mark soft, the flag update must be dropped — not
+    applied to the unrelated entry that now occupies the slot."""
+    from repro.core import memory as mem
+
+    kw = dict(weak_known=set(), reprobe_period=3,
+              memory=mem.MemoryConfig(capacity=2, embed_dim=16,
+                                      guide_len=8))
+    ctrl, _ = build(MicrobatchRAR, **kw)
+    ctrl.strong.can_guide = False          # guides never help → case3
+    for s, now in ((5, 1), (6, 2)):        # two hard entries fill the ring
+        out = ctrl.process_batch([prompt(s, 0)], [greq(s)],
+                                 embs=skill_emb(s)[None])[0]
+        assert out.case == "case3"
+    ctrl.weak = FakeTier(known={5}, name="weak-evolved")
+    # one microbatch: skill 7 records a fresh hard entry on slot 0 while
+    # skill 5's successful re-probe targets (old) slot 0 for mark_soft
+    outs = ctrl.process_batch(
+        [prompt(7, 0), prompt(5, 1)], [greq(7), greq(5)],
+        embs=np.stack([skill_emb(7), skill_emb(5)]))
+    assert [o.case for o in outs] == ["case3", "case1_reprobe"]
+    # skill 7's entry keeps its hard flag → next hit short-circuits strong
+    out = ctrl.process_batch([prompt(7, 1)], [greq(7)],
+                             embs=skill_emb(7)[None])[0]
+    assert out.case == "memory_hard"
+    # and skill 5 routes weak off its re-probed bare-skill entry
+    out = ctrl.process_batch([prompt(5, 2)], [greq(5)],
+                             embs=skill_emb(5)[None])[0]
+    assert out.case == "memory_skill"
+
+
+def test_mixed_batch_covers_all_groups():
+    """One microbatch that lands in every partition group at once."""
+    kw = dict(weak_known={0})
+    ctrl, _ = build(MicrobatchRAR, **kw)
+    warm = [(0, 1), (1, 1)]        # 0 → bare skill entry, 1 → guide entry
+    ctrl.process_batch([prompt(s, x) for s, x in warm],
+                       [greq(s) for s, _ in warm],
+                       embs=np.stack([skill_emb(s) for s, _ in warm]))
+    ctrl.route_weak_fn = lambda e, k: k is not None and k[0] == 2
+    batch = [(0, 2), (1, 2), (2, 2), (3, 2)]
+    outs = ctrl.process_batch([prompt(s, x) for s, x in batch],
+                              [greq(s) for s, _ in batch],
+                              keys=batch,
+                              embs=np.stack([skill_emb(s)
+                                             for s, _ in batch]))
+    assert [o.case for o in outs] == ["memory_skill", "memory_guide",
+                                     "router_weak", "case2"]
+    assert [o.strong_calls for o in outs] == [0, 0, 0, 2]

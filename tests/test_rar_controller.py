@@ -5,7 +5,7 @@ import dataclasses
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, strategies as st
 
 from repro.core import memory as mem
 from repro.core.rar import RAR, RARConfig

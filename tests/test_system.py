@@ -88,5 +88,23 @@ def test_rar_beats_weak_baselines(system, pool, rar_run):
 def test_guide_memory_populates(rar_run):
     _, rar = rar_run
     assert rar.memory.size > 0
+    assert rar.memory.size_fast == rar.memory.size
     assert bool(np.asarray(rar.memory.has_guide)[
         np.asarray(rar.memory.valid)].any())
+
+
+def test_microbatched_experiment_preserves_claims(system, pool, rar_run):
+    """The batched data plane keeps the paper's properties on the trained
+    system: strong calls still collapse across stages, and quality stays
+    close to the sequential controller."""
+    results_mb, rar = run_rar_experiment(system, pool, n_stages=3, seed=0,
+                                         microbatch=16)
+    first, last = results_mb[0], results_mb[-1]
+    assert last.strong_calls < 0.6 * first.strong_calls, \
+        [r.strong_calls for r in results_mb]
+    results_seq, _ = rar_run
+    n = 3 * len(pool)
+    mb_quality = sum(r.aligned for r in results_mb) / n
+    seq_quality = sum(r.aligned for r in results_seq) / n
+    assert mb_quality > seq_quality - 0.1, (mb_quality, seq_quality)
+    assert rar.memory.size_fast > 0

@@ -1,7 +1,7 @@
 """Synthetic task suite invariants (hypothesis-driven) + tokenizer checks."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, strategies as st
 
 from repro.data import tokenizer as tk
 from repro.data.tasks import TaskSuite, TaskSuiteConfig
