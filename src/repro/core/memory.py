@@ -7,11 +7,38 @@ A fixed-capacity ring of request embeddings with per-entry metadata:
 * ``added_at`` — logical time of insertion (drives Case-3 re-probing),
 * ``guide``    — fixed-width guide token block.
 
-Static shapes keep every operation jit-compatible; the similarity search is
-a fused cosine/top-1 over the full store — the Pallas kernel in
-:mod:`repro.kernels.memory_topk` implements the same contract blocked for
-VMEM, and :func:`query` routes through its jnp reference on CPU.
-Eviction is FIFO (ring pointer), the capacity is a config knob.
+Persistent padded layout (the zero-copy invariant)
+--------------------------------------------------
+``emb`` lives **permanently in kernel layout**: (Cp, Ep) f32 with rows
+padded to the kernel block multiple and lanes to a multiple of 128
+(:func:`repro.kernels.memory_topk.padded_rows` /
+:func:`~repro.kernels.memory_topk.padded_lanes`). ``valid`` and
+``has_guide`` are packed into an incrementally-maintained (Cp, 1) int32
+``mask`` bit plane (bit 0 = valid, bit 1 = has_guide). Logical ring slots
+are rows [0, C) of the padded buffers; padding rows [C, Cp) carry mask 0
+and are never valid.
+
+Consequences:
+
+* a query touches each store byte exactly once — the kernel consumes the
+  buffers as-is, with no per-call O(C·E) re-padding copy (the old wrappers
+  re-materialized the store on *every* query, doubling HBM traffic);
+* the ``guides_only`` view is a different ``required`` bit set on the same
+  mask plane — no per-query (C,) mask combine;
+* writes (:func:`add`, :func:`add_batch`, :func:`mark_soft`,
+  :func:`touch`) scatter directly into the padded buffers, O(K·E) per
+  commit, never O(C·E).
+
+Static shapes keep every operation jit-compatible; the similarity search
+is a fused cosine/top-1 over the full store — the Pallas kernel in
+:mod:`repro.kernels.memory_topk` implements the contract blocked for VMEM,
+and :func:`query` routes through its jnp reference on CPU. The query
+epilogue (metadata gathers + ``guides_only`` handling) is fused into the
+same jitted call and returns a :class:`QueryResult` packing everything
+into two arrays — one ``device_get`` moves a whole microbatch of results
+to the host. Eviction is FIFO (ring pointer), the capacity is a config
+knob. :mod:`repro.core.memory_sharded` scales the same contract across
+devices.
 """
 from __future__ import annotations
 
@@ -22,6 +49,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops as kops
+from repro.kernels.memory_topk import (MASK_GUIDE, MASK_VALID, padded_lanes,
+                                       padded_rows)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,13 +63,28 @@ class MemoryConfig:
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class MemoryState:
-    emb: jax.Array        # (C, E) f32, rows L2-normalized (or zero)
-    guide: jax.Array      # (C, G) int32
-    has_guide: jax.Array  # (C,) bool
-    hard: jax.Array       # (C,) bool
-    valid: jax.Array      # (C,) bool
-    added_at: jax.Array   # (C,) int32 logical time
-    ptr: jax.Array        # () int32 ring insert pointer
+    emb: jax.Array       # (Cp, Ep) f32 — persistent kernel layout; logical
+    #                      rows [0, C), L2-normalized (or zero), zero padding
+    mask: jax.Array      # (Cp, 1) int32 bit plane: MASK_VALID | MASK_GUIDE
+    guide: jax.Array     # (C, G) int32
+    hard: jax.Array      # (C,) bool
+    added_at: jax.Array  # (C,) int32 logical time
+    ptr: jax.Array       # () int32 ring insert pointer
+
+    @property
+    def capacity(self) -> int:
+        """Logical capacity C (the padded buffers hold Cp ≥ C rows)."""
+        return self.hard.shape[0]
+
+    @property
+    def valid(self) -> jax.Array:
+        """(C,) bool view decoded from the mask bit plane."""
+        return (self.mask[:self.capacity, 0] & MASK_VALID) != 0
+
+    @property
+    def has_guide(self) -> jax.Array:
+        """(C,) bool view decoded from the mask bit plane."""
+        return (self.mask[:self.capacity, 0] & MASK_GUIDE) != 0
 
     @property
     def size(self) -> int:
@@ -53,60 +97,62 @@ class MemoryState:
         """O(1) occupancy from the ring pointer: entries are only ever
         added (``valid`` is monotone), so size == min(ptr, capacity).
         Transfers one scalar instead of reducing the (C,) mask."""
-        return min(int(self.ptr), self.emb.shape[0])
+        return min(int(self.ptr), self.capacity)
 
 
 def init_memory(cfg: MemoryConfig) -> MemoryState:
     C, E, G = cfg.capacity, cfg.embed_dim, cfg.guide_len
+    Cp, Ep = padded_rows(C), padded_lanes(E)
     return MemoryState(
-        emb=jnp.zeros((C, E), jnp.float32),
+        emb=jnp.zeros((Cp, Ep), jnp.float32),
+        mask=jnp.zeros((Cp, 1), jnp.int32),
         guide=jnp.zeros((C, G), jnp.int32),
-        has_guide=jnp.zeros((C,), bool),
         hard=jnp.zeros((C,), bool),
-        valid=jnp.zeros((C,), bool),
         added_at=jnp.zeros((C,), jnp.int32),
         ptr=jnp.zeros((), jnp.int32),
     )
 
 
+def _pad_lanes(embs: jax.Array, ep: int) -> jax.Array:
+    """(…, E) → (…, Ep): zero-pad the lane dim. O(K·E) — commit-sized,
+    never store-sized."""
+    pad = [(0, 0)] * (embs.ndim - 1) + [(0, ep - embs.shape[-1])]
+    return jnp.pad(embs.astype(jnp.float32), pad)
+
+
+def _mask_bits(has_guide: jax.Array) -> jax.Array:
+    return MASK_VALID + jnp.where(has_guide, MASK_GUIDE, 0).astype(jnp.int32)
+
+
 @jax.jit
-def add(state: MemoryState, emb: jax.Array, guide: jax.Array,
-        has_guide: jax.Array, hard: jax.Array,
-        now: jax.Array) -> MemoryState:
-    """Insert one entry at the ring pointer (FIFO eviction)."""
-    i = state.ptr % state.emb.shape[0]
+def _add_jit(state: MemoryState, emb: jax.Array, guide: jax.Array,
+             has_guide: jax.Array, hard: jax.Array,
+             now: jax.Array) -> MemoryState:
+    i = state.ptr % state.capacity
     return MemoryState(
-        emb=state.emb.at[i].set(emb),
+        emb=state.emb.at[i].set(_pad_lanes(emb, state.emb.shape[1])),
+        mask=state.mask.at[i, 0].set(_mask_bits(has_guide)),
         guide=state.guide.at[i].set(guide),
-        has_guide=state.has_guide.at[i].set(has_guide),
         hard=state.hard.at[i].set(hard),
-        valid=state.valid.at[i].set(True),
         added_at=state.added_at.at[i].set(now),
         ptr=state.ptr + 1,
     )
 
 
 @jax.jit
-def add_batch(state: MemoryState, embs: jax.Array, guides: jax.Array,
-              has_guide: jax.Array, hard: jax.Array,
-              now: jax.Array) -> MemoryState:
-    """Insert K entries at consecutive ring slots in one jitted call — the
-    microbatch commit (all of a batch's shadow-inference writes land
-    together). embs (K, E); guides (K, G); has_guide/hard (K,) bool;
-    now (K,) int32 per-entry logical times. Equivalent to K sequential
-    :func:`add` calls for K ≤ capacity (slot indices are then distinct, so
-    the scatter order cannot matter)."""
-    K, C = embs.shape[0], state.emb.shape[0]
+def _add_batch_jit(state: MemoryState, embs: jax.Array, guides: jax.Array,
+                   has_guide: jax.Array, hard: jax.Array,
+                   now: jax.Array) -> MemoryState:
+    K, C = embs.shape[0], state.capacity
     if K > C:
         raise ValueError(f"microbatch commit of {K} entries exceeds "
                          f"memory capacity {C}")
     idx = (state.ptr + jnp.arange(K, dtype=jnp.int32)) % C
     return MemoryState(
-        emb=state.emb.at[idx].set(embs),
+        emb=state.emb.at[idx].set(_pad_lanes(embs, state.emb.shape[1])),
+        mask=state.mask.at[idx, 0].set(_mask_bits(has_guide)),
         guide=state.guide.at[idx].set(guides),
-        has_guide=state.has_guide.at[idx].set(has_guide),
         hard=state.hard.at[idx].set(hard),
-        valid=state.valid.at[idx].set(True),
         added_at=state.added_at.at[idx].set(now),
         ptr=state.ptr + K,
     )
@@ -115,66 +161,168 @@ def add_batch(state: MemoryState, embs: jax.Array, guides: jax.Array,
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class QueryResult:
-    index: jax.Array      # () int32 — argmax row (undefined if sim < -1)
-    sim: jax.Array        # () f32 cosine of best row (-2 if store empty)
-    has_guide: jax.Array
-    hard: jax.Array
-    guide: jax.Array      # (G,) int32
-    added_at: jax.Array
+    """Top-1 result with its metadata epilogue fused into two arrays.
+
+    ``sim`` is (…,) f32; ``meta`` is (…, 4 + G) int32 packing
+    [index, has_guide, hard, added_at, guide₀…guide_{G-1}] — a single
+    host-transferable struct (one :meth:`device_get` per microbatch phase
+    instead of ~6 per-field transfers). The per-field views below work on
+    device arrays and on host numpy alike."""
+    sim: jax.Array        # (…,) f32 cosine of best row (-2 if view empty)
+    meta: jax.Array       # (…, 4 + G) int32 packed epilogue
+
+    @property
+    def index(self):
+        return self.meta[..., 0]
+
+    @property
+    def has_guide(self):
+        return self.meta[..., 1].astype(bool)
+
+    @property
+    def hard(self):
+        return self.meta[..., 2].astype(bool)
+
+    @property
+    def added_at(self):
+        return self.meta[..., 3]
+
+    @property
+    def guide(self):
+        return self.meta[..., 4:]
+
+    def device_get(self) -> "QueryResult":
+        """Pull the whole result to the host in one transfer."""
+        sim, meta = jax.device_get((self.sim, self.meta))
+        return QueryResult(sim, meta)
+
+
+def pack_meta_parts(idx: jax.Array, bits: jax.Array, hard: jax.Array,
+                    added_at: jax.Array, guide: jax.Array) -> jax.Array:
+    """THE packed-meta layout — [index, has_guide, hard, added_at,
+    guide₀…] — single source of truth for every store flavour. ``bits``
+    are the winning rows' mask-plane values; ``hard``/``added_at``/
+    ``guide`` are gathered here by ``idx``."""
+    head = jnp.stack([idx.astype(jnp.int32),
+                      (bits & MASK_GUIDE) // MASK_GUIDE,
+                      hard[idx].astype(jnp.int32),
+                      added_at[idx]], axis=-1)
+    return jnp.concatenate([head, guide[idx]], axis=-1)
+
+
+# the sharded store's epilogue dispatch (its kernel+combine is a separate
+# shard_map jit; this keeps the metadata gathers one fused call, not ~5
+# eager ops per query)
+pack_meta_jit = jax.jit(pack_meta_parts)
+
+
+def pack_meta(state: MemoryState, idx: jax.Array) -> jax.Array:
+    """Fused query epilogue: gather the metadata of row(s) ``idx`` into the
+    packed int32 struct (called inside the jitted query)."""
+    return pack_meta_parts(idx, state.mask[idx, 0], state.hard,
+                           state.added_at, state.guide)
+
+
+def required_bits(guides_only: bool) -> int:
+    """Mask-plane bit set a row must carry to join the query's view."""
+    return MASK_VALID | (MASK_GUIDE if guides_only else 0)
 
 
 @partial(jax.jit, static_argnames=("guides_only",))
-def query(state: MemoryState, emb: jax.Array,
-          guides_only: bool = False) -> QueryResult:
-    """Top-1 cosine search. ``guides_only`` restricts to guide entries
-    (the guide-memory view used during shadow inference)."""
-    mask = state.valid
-    if guides_only:
-        mask = mask & state.has_guide
-    sims, idx = kops.memory_top1(state.emb, emb, mask)
-    return QueryResult(
-        index=idx,
-        sim=sims,
-        has_guide=state.has_guide[idx],
-        hard=state.hard[idx],
-        guide=state.guide[idx],
-        added_at=state.added_at[idx],
-    )
+def _query_jit(state: MemoryState, emb: jax.Array,
+               guides_only: bool = False) -> QueryResult:
+    sims, idx = kops.memory_top1_padded(state.emb, emb, state.mask,
+                                        required_bits(guides_only))
+    return QueryResult(sim=sims, meta=pack_meta(state, idx))
 
 
 @partial(jax.jit, static_argnames=("guides_only",))
-def query_batch(state: MemoryState, embs: jax.Array,
-                guides_only: bool = False) -> QueryResult:
-    """Top-1 cosine search for a whole microbatch of queries in one store
-    pass. embs (B, E) → QueryResult with per-field leading B axis. All
-    queries see the same snapshot of the store (reads happen at microbatch
-    start; writes commit at microbatch end via :func:`add_batch`)."""
-    mask = state.valid
-    if guides_only:
-        mask = mask & state.has_guide
-    sims, idx = kops.memory_top1_batch(state.emb, embs, mask)
-    return QueryResult(
-        index=idx,
-        sim=sims,
-        has_guide=state.has_guide[idx],
-        hard=state.hard[idx],
-        guide=state.guide[idx],
-        added_at=state.added_at[idx],
-    )
+def _query_batch_jit(state: MemoryState, embs: jax.Array,
+                     guides_only: bool = False) -> QueryResult:
+    sims, idx = kops.memory_top1_batch_padded(state.emb, embs, state.mask,
+                                              required_bits(guides_only))
+    return QueryResult(sim=sims, meta=pack_meta(state, idx))
 
 
 @jax.jit
-def mark_soft(state: MemoryState, index: jax.Array) -> MemoryState:
-    """Clear a hard flag after a successful re-probe (Case 3 → Case 1/2).
-    ``index`` may be a scalar or a (K,) batch of indices (the microbatch
-    commit's flag pass)."""
+def _mark_soft_jit(state: MemoryState, index: jax.Array) -> MemoryState:
     return dataclasses.replace(state, hard=state.hard.at[index].set(False))
 
 
 @jax.jit
-def touch(state: MemoryState, index: jax.Array,
-          now: jax.Array) -> MemoryState:
-    """Refresh an entry's timestamp (restarts the re-probe cool-down).
-    ``index``/``now`` may be scalars or matching (K,) batches."""
+def _touch_jit(state: MemoryState, index: jax.Array,
+               now: jax.Array) -> MemoryState:
     return dataclasses.replace(state,
                                added_at=state.added_at.at[index].set(now))
+
+
+# ---------------------------------------------------------------------------
+# Public API — thin dispatchers so the controllers (``core.rar`` /
+# ``core.pipeline``) serve identically against the single-device
+# MemoryState (functional, jitted) or a ``core.memory_sharded``
+# ShardedMemory (method-based, returns itself after in-place update).
+# ---------------------------------------------------------------------------
+
+
+def query(state, emb: jax.Array, guides_only: bool = False) -> QueryResult:
+    """Top-1 cosine search. ``guides_only`` restricts to guide entries
+    (the guide-memory view used during shadow inference) via the mask bit
+    plane — same single store pass, no mask combine. Kernel + metadata
+    epilogue are one jitted call returning one packed struct."""
+    if isinstance(state, MemoryState):
+        return _query_jit(state, emb, guides_only=guides_only)
+    return state.query(emb, guides_only=guides_only)
+
+
+def query_batch(state, embs: jax.Array,
+                guides_only: bool = False) -> QueryResult:
+    """Top-1 cosine search for a whole microbatch of queries in one store
+    pass. embs (B, E) → QueryResult with leading B axis. All queries see
+    the same snapshot of the store (reads happen at microbatch start;
+    writes commit at microbatch end via :func:`add_batch`)."""
+    if isinstance(state, MemoryState):
+        return _query_batch_jit(state, embs, guides_only=guides_only)
+    return state.query_batch(embs, guides_only=guides_only)
+
+
+def add(state, emb: jax.Array, guide: jax.Array, has_guide: jax.Array,
+        hard: jax.Array, now: jax.Array):
+    """Insert one entry at the ring pointer (FIFO eviction). Scatters one
+    padded row in place — the store is never re-materialized."""
+    if isinstance(state, MemoryState):
+        return _add_jit(state, emb, guide, has_guide, hard, now)
+    state.add(emb, guide, has_guide, hard, now)
+    return state
+
+
+def add_batch(state, embs: jax.Array, guides: jax.Array,
+              has_guide: jax.Array, hard: jax.Array, now: jax.Array):
+    """Insert K entries at consecutive ring slots in one jitted call — the
+    microbatch commit (all of a batch's shadow-inference writes land
+    together). embs (K, E); guides (K, G); has_guide/hard (K,) bool;
+    now (K,) int32 per-entry logical times. Equivalent to K sequential
+    :func:`add` calls for K ≤ capacity (slot indices are then distinct, so
+    the scatter order cannot matter)."""
+    if isinstance(state, MemoryState):
+        return _add_batch_jit(state, embs, guides, has_guide, hard, now)
+    state.add_batch(embs, guides, has_guide, hard, now)
+    return state
+
+
+def mark_soft(state, index: jax.Array):
+    """Clear a hard flag after a successful re-probe (Case 3 → Case 1/2).
+    ``index`` may be a scalar or a (K,) batch of indices (the microbatch
+    commit's flag pass)."""
+    if isinstance(state, MemoryState):
+        return _mark_soft_jit(state, index)
+    state.mark_soft(index)
+    return state
+
+
+def touch(state, index: jax.Array, now: jax.Array):
+    """Refresh an entry's timestamp (restarts the re-probe cool-down).
+    ``index``/``now`` may be scalars or matching (K,) batches."""
+    if isinstance(state, MemoryState):
+        return _touch_jit(state, index, now)
+    state.touch(index, now)
+    return state

@@ -106,14 +106,16 @@ class MicrobatchRAR(RAR):
         else:
             embs = np.asarray(embs)
 
-        # ---- phase 1: one batched memory read (snapshot at batch start)
-        q = mem.query_batch(self.memory, jnp.asarray(embs))
-        sims = np.asarray(q.sim)
-        hards = np.asarray(q.hard)
-        has_guides = np.asarray(q.has_guide)
-        hit_guides = np.asarray(q.guide)
-        added_ats = np.asarray(q.added_at)
-        hit_idxs = np.asarray(q.index)
+        # ---- phase 1: one batched memory read (snapshot at batch start).
+        # One dispatch (kernel + fused metadata epilogue) and one host
+        # transfer of the packed struct — not a per-field gather each.
+        q = mem.query_batch(self.memory, jnp.asarray(embs)).device_get()
+        sims = q.sim
+        hards = q.hard
+        has_guides = q.has_guide
+        hit_guides = q.guide
+        added_ats = q.added_at
+        hit_idxs = q.index
 
         # ---- phase 2: partition
         outcomes: list[Outcome | None] = [None] * B
@@ -207,9 +209,9 @@ class MicrobatchRAR(RAR):
         if pending:
             gq = mem.query_batch(self.memory,
                                  jnp.asarray(embs[[s.req for s in pending]]),
-                                 guides_only=True)
-            gsims = np.asarray(gq.sim)
-            gguides = np.asarray(gq.guide)
+                                 guides_only=True).device_get()
+            gsims = gq.sim
+            gguides = gq.guide
             probes, probe_shadows, probe_guides = [], [], []
             for j, s in enumerate(pending):
                 if gsims[j] >= self.cfg.guide_sim_threshold:
@@ -274,7 +276,7 @@ class MicrobatchRAR(RAR):
         overwritten: set[int] = set()
         if records:
             records.sort(key=lambda r: r[0])
-            C = self.memory.emb.shape[0]
+            C = self.memory.capacity
             base_ptr = int(self.memory.ptr)
             overwritten = {(base_ptr + j) % C for j in range(len(records))}
             self.memory = mem.add_batch(

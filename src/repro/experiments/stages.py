@@ -10,6 +10,7 @@ Figs. 4–6.
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import numpy as np
 
@@ -58,7 +59,8 @@ def run_rar_experiment(system: TrainedSystem, pool: list[Sample], *,
                        strong_tier=None,
                        prepopulate_from: list[Sample] | None = None,
                        microbatch: int = 1,
-                       verbose: bool = False
+                       verbose: bool = False,
+                       progress_every: int = 0
                        ) -> tuple[list[StageResult], RAR]:
     """One experiment (one shuffle). Returns per-stage results + the RAR
     instance (memory inspectable).
@@ -71,6 +73,11 @@ def run_rar_experiment(system: TrainedSystem, pool: list[Sample], *,
     the paper's sequential stream via ``RAR.process``; > 1 routes through
     the batched data plane (``MicrobatchRAR.process_batch``) with
     microbatch-commit memory semantics.
+
+    ``progress_every``: print a throughput/memory-occupancy line every N
+    served requests (0 = off). Deliberately throttled: the occupancy read
+    (``memory.size_fast``) transfers a device scalar, so reporting it
+    per request would force a host sync into every serve step.
     """
     suite = system.suite
     strong = strong_tier or system.strong
@@ -116,6 +123,25 @@ def run_rar_experiment(system: TrainedSystem, pool: list[Sample], *,
     rng = np.random.default_rng(seed)
     order = rng.permutation(len(pool))
 
+    served = 0
+    t_serve = time.time()
+
+    def progress(batch: int) -> None:
+        """Throttled serve-loop reporting: fires only when the counter
+        crosses a ``progress_every`` boundary, so the ``size_fast`` scalar
+        transfer happens every N requests instead of every request."""
+        nonlocal served
+        before = served
+        served += batch
+        if not progress_every:
+            return
+        if served // progress_every > before // progress_every:
+            dt = time.time() - t_serve
+            print(f"      [{served}/{n_stages * len(pool)}] "
+                  f"{1e3 * dt / served:.1f} ms/request, "
+                  f"memory {rar.memory.size_fast}/"
+                  f"{rar.cfg.memory.capacity}")
+
     results = []
     for stage in range(n_stages):
         aligned = strong_calls = gmem = gfresh = 0
@@ -142,11 +168,13 @@ def run_rar_experiment(system: TrainedSystem, pool: list[Sample], *,
                     keys=chunk, embs=embs[chunk])
                 for i, out in zip(chunk, outs):
                     tally(i, out)
+                progress(len(chunk))
         else:
             for i in order:
                 current["emb"] = emb_by_key[int(i)]
                 out = rar.process(prompts[int(i)], greqs[int(i)], key=int(i))
                 tally(int(i), out)
+                progress(1)
         results.append(StageResult(
             n=len(pool), aligned=aligned, strong_calls=strong_calls,
             guides_from_memory=gmem, guides_fresh=gfresh, cases=cases))

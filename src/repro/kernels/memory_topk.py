@@ -8,23 +8,43 @@ the similarity on the MXU, and carries the running (best sim, best index)
 in SMEM across grid steps — one HBM pass, no (capacity,) score vector ever
 written back.
 
-Block shape: (BLOCK_C, E). E is 384 → zero-padded to 512 by the wrapper so
-the lane dim is a multiple of 128; BLOCK_C defaults to 1024 rows →
-1024×512×4 B = 2 MiB per block in VMEM.
+Padded-layout invariant (the zero-copy contract)
+------------------------------------------------
+The hot-path entry points (:func:`memory_top1_padded_pallas`,
+:func:`memory_top1_batch_padded_pallas`) take the store **already in kernel
+layout** and touch each store byte exactly once per query:
 
-Two entry points share the streaming layout:
+* ``mem`` is (Cp, Ep) f32 with rows padded to a multiple of 8 (f32 sublane
+  tile) and lanes to a multiple of 128; padding rows/lanes are zero.
+* ``mask`` is a (Cp, 1) int32 *bit plane*: bit 0 = valid, bit 1 =
+  has_guide (:data:`MASK_VALID`/:data:`MASK_GUIDE`). Padding rows are 0,
+  i.e. never valid. A query passes ``required`` — the bit set a row must
+  carry to participate — so the ``guides_only`` view costs nothing (no
+  per-query (C,) mask combine).
 
-* :func:`memory_top1_pallas` — one query, running best carried in SMEM.
-* :func:`memory_top1_batch_pallas` — the microbatched data plane
-  (``core.pipeline``): all B queries stay resident in VMEM while the store
-  makes the same single HBM pass; each (BLOCK_C, E)×(B, E)ᵀ product lands
-  on the MXU and the per-query running (best sim, best index) pair is a
-  (1, B) VMEM accumulator updated with a vector compare. One pass serves
-  the whole microbatch — the HBM traffic is amortised B-fold, which is
-  exactly the paper's per-request vector-DB lookup cost divided by the
-  serving batch size. Microbatch-commit semantics (reads at batch start,
-  writes once at batch end) live in ``core.memory.add_batch``; this kernel
-  is the read side.
+:class:`repro.core.memory.MemoryState` maintains this layout persistently
+and incrementally (scatters update rows in place), so no per-query
+re-padding copy of the store exists anywhere on the dispatch path. The
+legacy wrappers (:func:`memory_top1_pallas`,
+:func:`memory_top1_batch_pallas`) keep the old compact-layout signature for
+shape sweeps and one-off calls; they convert eagerly via
+:func:`to_padded_layout` *outside* any jitted function and are not the
+serving path.
+
+Two kernel bodies share the streaming layout:
+
+* single query — running best carried in SMEM;
+* multi-query (the microbatched data plane, ``core.pipeline``) — all B
+  queries stay resident in VMEM while the store makes the same single HBM
+  pass; each (BLOCK_C, E)×(B, E)ᵀ product lands on the MXU and the
+  per-query running (best sim, best index) pair is a (1, B) VMEM
+  accumulator updated with a vector compare. Microbatch-commit semantics
+  (reads at batch start, writes once at batch end) live in
+  ``core.memory.add_batch``; this kernel is the read side.
+
+Sharding: the same kernels run per-shard under ``shard_map`` in
+``core.memory_sharded`` — each device streams only its (Cp/S, Ep) shard and
+an all-gather/argmax combine produces the global (sim, idx).
 """
 from __future__ import annotations
 
@@ -37,8 +57,70 @@ from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_BLOCK_C = 1024
 
+# mask bit plane (shared with core.memory / kernels.ref)
+MASK_VALID = 1
+MASK_GUIDE = 2
 
-def _top1_kernel(q_ref, mem_ref, mask_ref, sim_ref, idx_ref, *, block_c: int):
+_ROW_TILE = 8        # f32 sublane tile: padded row counts are multiples
+
+
+def padded_rows(c: int, block_c: int = DEFAULT_BLOCK_C) -> int:
+    """Row count of the persistent kernel layout for a capacity-``c``
+    store: always a multiple of the row tile (so a block size exists for
+    any ``block_c``), up to one full block."""
+    tile = min(block_c, _round_up(c, _ROW_TILE))
+    return _round_up(c, _round_up(tile, _ROW_TILE))
+
+
+def padded_lanes(e: int) -> int:
+    """Lane count of the persistent kernel layout for embed dim ``e``."""
+    return _round_up(e, 128)
+
+
+def _round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def _pick_block(cp: int, block_c: int) -> int:
+    """Largest row-tile multiple ≤ block_c that divides the padded row
+    count (cp being a multiple of the tile guarantees a solution — at
+    worst one tile per block)."""
+    if cp % _ROW_TILE:
+        raise ValueError(f"padded row count {cp} is not a multiple of the "
+                         f"row tile {_ROW_TILE}; build the store with "
+                         f"padded_rows()/to_padded_layout()")
+    bc = max(min(block_c, cp) // _ROW_TILE * _ROW_TILE, _ROW_TILE)
+    while cp % bc:
+        bc -= _ROW_TILE
+    return bc
+
+
+def to_padded_layout(mem: jax.Array, mask: jax.Array,
+                     *, block_c: int = DEFAULT_BLOCK_C
+                     ) -> tuple[jax.Array, jax.Array]:
+    """One-time layout conversion: compact (C, E) store + (C,) mask →
+    padded (Cp, Ep) store + (Cp, 1) int32 bit plane. This is the *only*
+    place the full store is copied; it runs at init/import time (or in the
+    legacy wrappers), never per query."""
+    C, E = mem.shape
+    Cp = padded_rows(C, block_c)
+    Ep = padded_lanes(E)
+    memp = jnp.pad(mem, ((0, Cp - C), (0, Ep - E)))
+    if mask.dtype == jnp.bool_ or mask.dtype == bool:
+        bits = mask.astype(jnp.int32) * MASK_VALID
+    else:
+        bits = mask.astype(jnp.int32)
+    maskp = jnp.pad(bits, (0, Cp - C))[:, None]
+    return memp, maskp
+
+
+# ---------------------------------------------------------------------------
+# Kernel bodies
+# ---------------------------------------------------------------------------
+
+
+def _top1_kernel(q_ref, mem_ref, mask_ref, sim_ref, idx_ref, *,
+                 block_c: int, required: int):
     i = pl.program_id(0)
 
     @pl.when(i == 0)
@@ -50,7 +132,7 @@ def _top1_kernel(q_ref, mem_ref, mask_ref, sim_ref, idx_ref, *, block_c: int):
     q = q_ref[...].astype(jnp.float32)                # (1, E)
     sims = jax.lax.dot_general(block, q, (((1,), (1,)), ((), ())),
                                preferred_element_type=jnp.float32)  # (BC, 1)
-    valid = mask_ref[...] != 0                        # (BC, 1)
+    valid = (mask_ref[...] & required) == required    # (BC, 1)
     sims = jnp.where(valid, sims, -2.0)
 
     rows = jax.lax.broadcasted_iota(jnp.int32, sims.shape, 0)
@@ -64,24 +146,57 @@ def _top1_kernel(q_ref, mem_ref, mask_ref, sim_ref, idx_ref, *, block_c: int):
         idx_ref[0, 0] = (i * block_c + best_row).astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
-def memory_top1_pallas(mem: jax.Array, q: jax.Array, mask: jax.Array,
-                       *, block_c: int = DEFAULT_BLOCK_C,
-                       interpret: bool = False
-                       ) -> tuple[jax.Array, jax.Array]:
-    """mem: (C, E); q: (E,); mask: (C,) bool → (sim (), idx ())."""
-    C, E = mem.shape
-    bc = min(block_c, C)
-    # pad rows to a multiple of the block, lanes to a multiple of 128
-    Cp = ((C + bc - 1) // bc) * bc
-    Ep = ((E + 127) // 128) * 128
-    memp = jnp.zeros((Cp, Ep), mem.dtype).at[:C, :E].set(mem)
+def _top1_batch_kernel(q_ref, mem_ref, mask_ref, sim_ref, idx_ref, *,
+                       block_c: int, required: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        sim_ref[...] = jnp.full(sim_ref.shape, -2.0, jnp.float32)
+        idx_ref[...] = jnp.zeros(idx_ref.shape, jnp.int32)
+
+    block = mem_ref[...].astype(jnp.float32)          # (BC, E)
+    qs = q_ref[...].astype(jnp.float32)               # (B, E)
+    sims = jax.lax.dot_general(block, qs, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)  # (BC, B)
+    valid = (mask_ref[...] & required) == required    # (BC, 1)
+    sims = jnp.where(valid, sims, -2.0)
+
+    rows = jax.lax.broadcasted_iota(jnp.int32, sims.shape, 0)
+    best = jnp.max(sims, axis=0)                      # (B,)
+    # lowest row index achieving each column's max (deterministic tie-break)
+    best_row = jnp.min(jnp.where(sims >= best[None, :], rows,
+                                 jnp.int32(2 ** 30)), axis=0)       # (B,)
+    prev = sim_ref[0, :]
+    take = best > prev
+    sim_ref[0, :] = jnp.where(take, best, prev)
+    idx_ref[0, :] = jnp.where(take,
+                              (i * block_c + best_row).astype(jnp.int32),
+                              idx_ref[0, :])
+
+
+# ---------------------------------------------------------------------------
+# Zero-copy entry points — store already in kernel layout
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("required", "block_c", "interpret"))
+def memory_top1_padded_pallas(mem: jax.Array, q: jax.Array, mask: jax.Array,
+                              *, required: int = MASK_VALID,
+                              block_c: int = DEFAULT_BLOCK_C,
+                              interpret: bool = False
+                              ) -> tuple[jax.Array, jax.Array]:
+    """mem: (Cp, Ep) padded store; q: (E,); mask: (Cp, 1) int32 bit plane
+    → (sim (), idx ()). Zero-copy: only the (1, E) query is padded."""
+    Cp, Ep = mem.shape
+    E = q.shape[0]
     qp = jnp.zeros((1, Ep), jnp.float32).at[0, :E].set(q.astype(jnp.float32))
-    maskp = jnp.zeros((Cp, 1), jnp.int32).at[:C, 0].set(mask.astype(jnp.int32))
+    bc = _pick_block(Cp, block_c)
 
     grid = (Cp // bc,)
     sim, idx = pl.pallas_call(
-        functools.partial(_top1_kernel, block_c=bc),
+        functools.partial(_top1_kernel, block_c=bc, required=required),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, Ep), lambda i: (0, 0)),
@@ -99,69 +214,35 @@ def memory_top1_pallas(mem: jax.Array, q: jax.Array, mask: jax.Array,
             jax.ShapeDtypeStruct((1, 1), jnp.int32),
         ],
         interpret=interpret,
-    )(qp, memp, maskp)
+    )(qp, mem, mask)
     return sim[0, 0], idx[0, 0]
 
 
-# ---------------------------------------------------------------------------
-# Multi-query top-1 — the batched data plane
-# ---------------------------------------------------------------------------
-
-
-def _top1_batch_kernel(q_ref, mem_ref, mask_ref, sim_ref, idx_ref, *,
-                       block_c: int):
-    i = pl.program_id(0)
-
-    @pl.when(i == 0)
-    def _init():
-        sim_ref[...] = jnp.full(sim_ref.shape, -2.0, jnp.float32)
-        idx_ref[...] = jnp.zeros(idx_ref.shape, jnp.int32)
-
-    block = mem_ref[...].astype(jnp.float32)          # (BC, E)
-    qs = q_ref[...].astype(jnp.float32)               # (B, E)
-    sims = jax.lax.dot_general(block, qs, (((1,), (1,)), ((), ())),
-                               preferred_element_type=jnp.float32)  # (BC, B)
-    valid = mask_ref[...] != 0                        # (BC, 1)
-    sims = jnp.where(valid, sims, -2.0)
-
-    rows = jax.lax.broadcasted_iota(jnp.int32, sims.shape, 0)
-    best = jnp.max(sims, axis=0)                      # (B,)
-    # lowest row index achieving each column's max (deterministic tie-break)
-    best_row = jnp.min(jnp.where(sims >= best[None, :], rows,
-                                 jnp.int32(2 ** 30)), axis=0)       # (B,)
-    prev = sim_ref[0, :]
-    take = best > prev
-    sim_ref[0, :] = jnp.where(take, best, prev)
-    idx_ref[0, :] = jnp.where(take,
-                              (i * block_c + best_row).astype(jnp.int32),
-                              idx_ref[0, :])
-
-
-@functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
-def memory_top1_batch_pallas(mem: jax.Array, qs: jax.Array, mask: jax.Array,
-                             *, block_c: int = DEFAULT_BLOCK_C,
-                             interpret: bool = False
-                             ) -> tuple[jax.Array, jax.Array]:
-    """mem: (C, E); qs: (B, E); mask: (C,) bool → (sims (B,), idx (B,)).
+@functools.partial(jax.jit,
+                   static_argnames=("required", "block_c", "interpret"))
+def memory_top1_batch_padded_pallas(mem: jax.Array, qs: jax.Array,
+                                    mask: jax.Array,
+                                    *, required: int = MASK_VALID,
+                                    block_c: int = DEFAULT_BLOCK_C,
+                                    interpret: bool = False
+                                    ) -> tuple[jax.Array, jax.Array]:
+    """mem: (Cp, Ep) padded store; qs: (B, E); mask: (Cp, 1) int32 bit
+    plane → (sims (B,), idx (B,)). Zero-copy: only the (B, E) query block
+    is padded — O(B·E), independent of capacity.
 
     The B queries are VMEM-resident for the whole store pass; the running
     per-query best is a (1, B) VMEM accumulator revisited every grid step.
     """
-    C, E = mem.shape
-    B = qs.shape[0]
-    bc = min(block_c, C)
-    # rows to a multiple of the block; lanes (E and B) to multiples of 128
-    Cp = ((C + bc - 1) // bc) * bc
-    Ep = ((E + 127) // 128) * 128
-    Bp = ((B + 127) // 128) * 128
-    memp = jnp.zeros((Cp, Ep), mem.dtype).at[:C, :E].set(mem)
+    Cp, Ep = mem.shape
+    B, E = qs.shape
+    Bp = _round_up(B, 128)
     qp = jnp.zeros((Bp, Ep), jnp.float32).at[:B, :E].set(
         qs.astype(jnp.float32))
-    maskp = jnp.zeros((Cp, 1), jnp.int32).at[:C, 0].set(mask.astype(jnp.int32))
+    bc = _pick_block(Cp, block_c)
 
     grid = (Cp // bc,)
     sims, idx = pl.pallas_call(
-        functools.partial(_top1_batch_kernel, block_c=bc),
+        functools.partial(_top1_batch_kernel, block_c=bc, required=required),
         grid=grid,
         in_specs=[
             pl.BlockSpec((Bp, Ep), lambda i: (0, 0)),
@@ -177,5 +258,32 @@ def memory_top1_batch_pallas(mem: jax.Array, qs: jax.Array, mask: jax.Array,
             jax.ShapeDtypeStruct((1, Bp), jnp.int32),
         ],
         interpret=interpret,
-    )(qp, memp, maskp)
+    )(qp, mem, mask)
     return sims[0, :B], idx[0, :B]
+
+
+# ---------------------------------------------------------------------------
+# Legacy compact-layout wrappers (shape sweeps / one-off calls only).
+# Deliberately NOT jitted: the layout conversion runs eagerly, outside any
+# per-query jitted function — the serving path never goes through here.
+# ---------------------------------------------------------------------------
+
+
+def memory_top1_pallas(mem: jax.Array, q: jax.Array, mask: jax.Array,
+                       *, block_c: int = DEFAULT_BLOCK_C,
+                       interpret: bool = False
+                       ) -> tuple[jax.Array, jax.Array]:
+    """mem: (C, E); q: (E,); mask: (C,) bool → (sim (), idx ())."""
+    memp, maskp = to_padded_layout(mem, mask, block_c=block_c)
+    return memory_top1_padded_pallas(memp, q, maskp, block_c=block_c,
+                                     interpret=interpret)
+
+
+def memory_top1_batch_pallas(mem: jax.Array, qs: jax.Array, mask: jax.Array,
+                             *, block_c: int = DEFAULT_BLOCK_C,
+                             interpret: bool = False
+                             ) -> tuple[jax.Array, jax.Array]:
+    """mem: (C, E); qs: (B, E); mask: (C,) bool → (sims (B,), idx (B,))."""
+    memp, maskp = to_padded_layout(mem, mask, block_c=block_c)
+    return memory_top1_batch_padded_pallas(memp, qs, maskp, block_c=block_c,
+                                           interpret=interpret)

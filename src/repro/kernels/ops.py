@@ -1,10 +1,18 @@
 """Jit'd dispatch layer over the Pallas kernels and their jnp oracles.
 
 Selection order:
-* ``REPRO_KERNEL_IMPL=ref|pallas|interpret`` env var wins,
+* an explicit :func:`set_impl` override (tests) wins,
+* then ``REPRO_KERNEL_IMPL=ref|pallas|interpret`` env var,
 * otherwise: ``pallas`` on TPU backends, ``ref`` elsewhere (this CPU
   container). ``interpret`` runs the Pallas kernel bodies in Python — used
   by the test suite to validate the TPU kernels against the oracles.
+
+The selection is resolved **once** and memoized: the old per-dispatch
+``os.environ`` read + ``jax.default_backend()`` probe sat on the hot loop
+(every memory query / attention call paid it). Resolution is lazy — first
+dispatch, not import — so importing this module never touches jax backend
+state. Tests flip implementations via :func:`set_impl`; ``set_impl(None)``
+re-resolves from the environment.
 """
 from __future__ import annotations
 
@@ -16,19 +24,43 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.memory_topk import (memory_top1_batch_pallas,
+from repro.kernels.memory_topk import (MASK_VALID,
+                                       memory_top1_batch_padded_pallas,
+                                       memory_top1_batch_pallas,
+                                       memory_top1_padded_pallas,
                                        memory_top1_pallas)
+
+_impl_cache: str | None = None
+
+
+def set_impl(impl: str | None) -> None:
+    """Override the kernel implementation (``ref``/``pallas``/
+    ``interpret``), or ``None`` to re-resolve from the environment on the
+    next dispatch. The explicit hook for tests — mutating
+    ``REPRO_KERNEL_IMPL`` after the first dispatch has no effect."""
+    global _impl_cache
+    if impl not in (None, "ref", "pallas", "interpret"):
+        raise ValueError(f"unknown kernel impl {impl!r}")
+    _impl_cache = impl
 
 
 def _default_impl() -> str:
-    env = os.environ.get("REPRO_KERNEL_IMPL")
-    if env:
-        return env
-    try:
-        platform = jax.default_backend()
-    except RuntimeError:
-        platform = "cpu"
-    return "pallas" if platform == "tpu" else "ref"
+    global _impl_cache
+    if _impl_cache is None:
+        env = os.environ.get("REPRO_KERNEL_IMPL")
+        if env:
+            if env not in ("ref", "pallas", "interpret"):
+                raise ValueError(
+                    f"REPRO_KERNEL_IMPL={env!r}: expected "
+                    f"ref|pallas|interpret")
+            _impl_cache = env
+        else:
+            try:
+                platform = jax.default_backend()
+            except RuntimeError:
+                platform = "cpu"
+            _impl_cache = "pallas" if platform == "tpu" else "ref"
+    return _impl_cache
 
 
 def memory_top1(mem: jax.Array, q: jax.Array, mask: jax.Array,
@@ -48,6 +80,32 @@ def memory_top1_batch(mem: jax.Array, qs: jax.Array, mask: jax.Array,
         return ref.memory_top1_batch(mem, qs, mask)
     return memory_top1_batch_pallas(mem, qs, mask,
                                     interpret=(impl == "interpret"))
+
+
+def memory_top1_padded(mem: jax.Array, q: jax.Array, mask: jax.Array,
+                       required: int = MASK_VALID,
+                       impl: str | None = None
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Zero-copy top-1 over a store already in kernel layout: mem (Cp, Ep),
+    mask (Cp, 1) int32 bit plane, ``required`` the bit set a row must carry
+    (see ``kernels.memory_topk``). The serving dispatch path."""
+    impl = impl or _default_impl()
+    if impl == "ref":
+        return ref.memory_top1_padded(mem, q, mask, required)
+    return memory_top1_padded_pallas(mem, q, mask, required=required,
+                                     interpret=(impl == "interpret"))
+
+
+def memory_top1_batch_padded(mem: jax.Array, qs: jax.Array, mask: jax.Array,
+                             required: int = MASK_VALID,
+                             impl: str | None = None
+                             ) -> tuple[jax.Array, jax.Array]:
+    """Zero-copy multi-query top-1 over the padded kernel layout."""
+    impl = impl or _default_impl()
+    if impl == "ref":
+        return ref.memory_top1_batch_padded(mem, qs, mask, required)
+    return memory_top1_batch_padded_pallas(mem, qs, mask, required=required,
+                                           interpret=(impl == "interpret"))
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, scale=None,

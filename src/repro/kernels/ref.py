@@ -29,6 +29,39 @@ def memory_top1(mem: jax.Array, q: jax.Array, mask: jax.Array
     return sims[idx], idx
 
 
+def memory_top1_padded(mem: jax.Array, q: jax.Array, mask: jax.Array,
+                       required: int = 1) -> tuple[jax.Array, jax.Array]:
+    """Padded-layout oracle (the zero-copy contract of
+    ``kernels.memory_topk``): mem (Cp, Ep) with zero padding rows/lanes;
+    q (E,) — zero-padded to Ep here, an O(E) copy; mask (Cp, 1) int32 bit
+    plane. A row participates iff it carries every bit of ``required``
+    (padding rows are 0 → never valid). Ties break to the lowest row."""
+    Ep = mem.shape[1]
+    qp = jnp.zeros((Ep,), jnp.float32).at[:q.shape[0]].set(
+        q.astype(jnp.float32))
+    sims = mem.astype(jnp.float32) @ qp
+    sims = jnp.where((mask[:, 0] & required) == required, sims, -2.0)
+    idx = jnp.argmax(sims).astype(jnp.int32)
+    return sims[idx], idx
+
+
+def memory_top1_batch_padded(mem: jax.Array, qs: jax.Array, mask: jax.Array,
+                             required: int = 1
+                             ) -> tuple[jax.Array, jax.Array]:
+    """Padded-layout multi-query oracle: qs (B, E) → (sims (B,), idx (B,)).
+    Only the query block is padded (O(B·E), capacity-independent)."""
+    B, E = qs.shape
+    Ep = mem.shape[1]
+    qp = jnp.zeros((B, Ep), jnp.float32).at[:, :E].set(
+        qs.astype(jnp.float32))
+    sims = qp @ mem.astype(jnp.float32).T                       # (B, Cp)
+    sims = jnp.where(((mask[:, 0] & required) == required)[None, :],
+                     sims, -2.0)
+    idx = jnp.argmax(sims, axis=1).astype(jnp.int32)
+    return jnp.take_along_axis(sims, idx[:, None].astype(jnp.int32),
+                               axis=1)[:, 0], idx
+
+
 def memory_top1_batch(mem: jax.Array, qs: jax.Array, mask: jax.Array
                       ) -> tuple[jax.Array, jax.Array]:
     """Multi-query variant: qs (B, E) unit-norm rows. Returns

@@ -33,6 +33,11 @@ def main() -> None:
     ap.add_argument("--router", default="oracle",
                     choices=["oracle", "learned"])
     ap.add_argument("--sim-threshold", type=float, default=0.2)
+    ap.add_argument("--log-every", type=int, default=64,
+                    help="serve-loop progress every N requests (0 = off); "
+                         "throttled because the memory-occupancy read "
+                         "syncs a device scalar — per-request logging "
+                         "would stall the pipeline on every request")
     ap.add_argument("--json-out", default=None)
     args = ap.parse_args()
 
@@ -47,7 +52,8 @@ def main() -> None:
     t0 = time.time()
     results, rar = run_rar_experiment(
         system, pool, n_stages=args.stages, rar_cfg=cfg,
-        router_kind=args.router, microbatch=args.microbatch, verbose=True)
+        router_kind=args.router, microbatch=args.microbatch, verbose=True,
+        progress_every=args.log_every)
     dt = time.time() - t0
 
     total = args.stages * len(pool)

@@ -7,8 +7,11 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.memory_topk import (memory_top1_batch_pallas,
-                                       memory_top1_pallas)
+from repro.kernels.memory_topk import (MASK_GUIDE, MASK_VALID,
+                                       memory_top1_batch_padded_pallas,
+                                       memory_top1_batch_pallas,
+                                       memory_top1_padded_pallas,
+                                       memory_top1_pallas, to_padded_layout)
 
 TOL = {np.float32: 2e-5, jnp.bfloat16: 2e-2}
 
@@ -124,6 +127,102 @@ def test_memory_top1_batch_exact_hits(rng):
 
 
 # ---------------------------------------------------------------------------
+# memory_top1 padded entry points (the zero-copy serving path)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("C", [64, 300, 1024])
+@pytest.mark.parametrize("E", [128, 384])
+def test_memory_top1_padded_matches_oracle(rng, C, E):
+    """Padded Pallas entry == padded oracle == legacy oracle, for both the
+    valid view and the valid+guide view of the mask bit plane."""
+    mem = rng.normal(size=(C, E)).astype(np.float32)
+    mem /= np.linalg.norm(mem, axis=1, keepdims=True)
+    q = rng.normal(size=(E,)).astype(np.float32)
+    q /= np.linalg.norm(q)
+    valid = rng.random(C) < 0.7
+    has_guide = rng.random(C) < 0.4
+    valid[int(rng.integers(0, C))] = True
+    bits = (valid.astype(np.int32) * MASK_VALID
+            + (valid & has_guide).astype(np.int32) * MASK_GUIDE)
+    memp, maskp = to_padded_layout(jnp.asarray(mem), jnp.asarray(bits),
+                                   block_c=128)
+    for required, legacy_mask in ((MASK_VALID, valid),
+                                  (MASK_VALID | MASK_GUIDE,
+                                   valid & has_guide)):
+        if not legacy_mask.any():
+            continue
+        s_l, i_l = ref.memory_top1(jnp.asarray(mem), jnp.asarray(q),
+                                   jnp.asarray(legacy_mask))
+        s_o, i_o = ref.memory_top1_padded(memp, jnp.asarray(q), maskp,
+                                          required)
+        s_p, i_p = memory_top1_padded_pallas(memp, jnp.asarray(q), maskp,
+                                             required=required, block_c=128,
+                                             interpret=True)
+        assert int(i_l) == int(i_o) == int(i_p)
+        np.testing.assert_allclose(float(s_l), float(s_p), atol=1e-5)
+        np.testing.assert_allclose(float(s_o), float(s_p), atol=1e-5)
+
+
+@pytest.mark.parametrize("B", [1, 5, 32])
+def test_memory_top1_batch_padded_matches_oracle(rng, B):
+    C, E = 300, 384
+    mem = rng.normal(size=(C, E)).astype(np.float32)
+    mem /= np.linalg.norm(mem, axis=1, keepdims=True)
+    qs = rng.normal(size=(B, E)).astype(np.float32)
+    qs /= np.linalg.norm(qs, axis=1, keepdims=True)
+    valid = rng.random(C) < 0.7
+    has_guide = rng.random(C) < 0.4
+    valid[int(rng.integers(0, C))] = True
+    has_guide[valid.argmax()] = True
+    bits = (valid.astype(np.int32) * MASK_VALID
+            + (valid & has_guide).astype(np.int32) * MASK_GUIDE)
+    memp, maskp = to_padded_layout(jnp.asarray(mem), jnp.asarray(bits),
+                                   block_c=128)
+    for required, legacy_mask in ((MASK_VALID, valid),
+                                  (MASK_VALID | MASK_GUIDE,
+                                   valid & has_guide)):
+        s_l, i_l = ref.memory_top1_batch(jnp.asarray(mem), jnp.asarray(qs),
+                                         jnp.asarray(legacy_mask))
+        s_o, i_o = ref.memory_top1_batch_padded(memp, jnp.asarray(qs),
+                                                maskp, required)
+        s_p, i_p = memory_top1_batch_padded_pallas(
+            memp, jnp.asarray(qs), maskp, required=required, block_c=128,
+            interpret=True)
+        np.testing.assert_array_equal(np.asarray(i_l), np.asarray(i_p))
+        np.testing.assert_array_equal(np.asarray(i_o), np.asarray(i_p))
+        np.testing.assert_allclose(np.asarray(s_l), np.asarray(s_p),
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(s_o), np.asarray(s_p),
+                                   atol=1e-5)
+
+
+def test_query_path_is_zero_copy():
+    """No store-sized buffer is materialized inside the jitted query: no
+    jaxpr equation *produces* a (Cp, Ep)-shaped value — the store only
+    enters as an input operand (the old wrappers created a second
+    full-size buffer via zeros+scatter on every call)."""
+    import re
+
+    import jax
+
+    from repro.core import memory as cmem
+
+    cfg = cmem.MemoryConfig(capacity=1024, embed_dim=384, guide_len=4)
+    state = cmem.init_memory(cfg)
+    q = jnp.zeros((cfg.embed_dim,), jnp.float32)
+    qs = jnp.zeros((8, cfg.embed_dim), jnp.float32)
+    Cp, Ep = state.emb.shape
+    # equation outputs print as `name:f32[Cp,Ep] = prim ...`
+    produced = re.compile(rf":f32\[{Cp},{Ep}\] =")
+    for jaxpr in (jax.make_jaxpr(
+                      lambda s, e: cmem._query_jit(s, e))(state, q),
+                  jax.make_jaxpr(
+                      lambda s, e: cmem._query_batch_jit(s, e))(state, qs)):
+        assert not produced.search(str(jaxpr)), jaxpr
+
+
+# ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------
 
@@ -208,3 +307,48 @@ def test_decode_matches_flash_at_full_length(rng):
                                   block_m=64, interpret=True)
     np.testing.assert_allclose(np.asarray(dec), np.asarray(full[:, -1]),
                                rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# dispatch-layer impl selection
+# ---------------------------------------------------------------------------
+
+
+def test_impl_selection_memoized_with_override(monkeypatch):
+    """ops resolves the kernel impl once (no per-dispatch env/backend
+    probe); set_impl is the explicit override hook and set_impl(None)
+    re-resolves from the environment."""
+    from repro.kernels import ops
+
+    saved = ops._impl_cache
+    try:
+        monkeypatch.setenv("REPRO_KERNEL_IMPL", "interpret")
+        ops.set_impl(None)
+        assert ops._default_impl() == "interpret"
+        # memoized: flipping the env after first resolution has no effect
+        monkeypatch.setenv("REPRO_KERNEL_IMPL", "ref")
+        assert ops._default_impl() == "interpret"
+        # the override hook wins immediately
+        ops.set_impl("ref")
+        assert ops._default_impl() == "ref"
+        with pytest.raises(ValueError):
+            ops.set_impl("bogus")
+    finally:
+        ops._impl_cache = saved
+
+
+def test_odd_block_c_never_crashes(rng):
+    """block_c values that are not row-tile multiples (or smaller than the
+    tile) must still produce a valid blocking, not a ZeroDivisionError."""
+    C, E = 100, 128
+    mem = rng.normal(size=(C, E)).astype(np.float32)
+    q = rng.normal(size=(E,)).astype(np.float32)
+    mask = np.ones(C, bool)
+    s_ref, i_ref = ref.memory_top1(jnp.asarray(mem), jnp.asarray(q),
+                                   jnp.asarray(mask))
+    for bc in (4, 12, 100):
+        s, i = memory_top1_pallas(jnp.asarray(mem), jnp.asarray(q),
+                                  jnp.asarray(mask), block_c=bc,
+                                  interpret=True)
+        assert int(i) == int(i_ref)
+        np.testing.assert_allclose(float(s), float(s_ref), atol=1e-5)

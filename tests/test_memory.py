@@ -118,9 +118,12 @@ def test_add_batch_ring_wraparound(rng):
     state = mem.add_batch(state, jnp.asarray(embs), jnp.asarray(guides),
                           jnp.asarray(has_guide), jnp.asarray(hard),
                           jnp.asarray(now))
-    # slots C-2, C-1 then 0, 1, 2 hold the batch
+    # slots C-2, C-1 then 0, 1, 2 hold the batch (emb rows live in the
+    # padded kernel layout: logical lanes first, zero padding after)
     slots = [CFG.capacity - 2, CFG.capacity - 1, 0, 1, 2]
-    np.testing.assert_array_equal(np.asarray(state.emb)[slots], embs)
+    emb_rows = np.asarray(state.emb)[slots]
+    np.testing.assert_array_equal(emb_rows[:, :CFG.embed_dim], embs)
+    assert not emb_rows[:, CFG.embed_dim:].any()
     np.testing.assert_array_equal(np.asarray(state.added_at)[slots], now)
     assert int(state.ptr) == CFG.capacity + 3
     assert state.size_fast == CFG.capacity       # full ring
@@ -199,3 +202,123 @@ def test_property_flags_roundtrip(seed, has_guide, hard):
     q = mem.query(state, jnp.asarray(e))
     assert bool(q.has_guide) == has_guide
     assert bool(q.hard) == hard
+
+
+# ---------------------------------------------------------------------------
+# Padded-layout invariants and edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_empty_store_query_batch():
+    """query_batch on a never-written store returns the sentinel for every
+    query, with index 0 and empty metadata."""
+    state = mem.init_memory(CFG)
+    qs = np.eye(4, CFG.embed_dim, dtype=np.float32)
+    q = mem.query_batch(state, jnp.asarray(qs)).device_get()
+    np.testing.assert_array_equal(q.sim, np.full(4, -2.0))
+    np.testing.assert_array_equal(q.index, np.zeros(4))
+    assert not np.asarray(q.has_guide).any()
+    assert not np.asarray(q.hard).any()
+
+
+def test_guides_only_with_no_guide_entries(rng):
+    """guides_only on a store holding only bare-skill entries must return
+    the empty sentinel, not a bare entry."""
+    state = mem.init_memory(CFG)
+    zero_g = jnp.zeros(4, jnp.int32)
+    e = rand_unit(rng)
+    for i in range(5):
+        state = mem.add(state, jnp.asarray(rand_unit(rng) if i else e),
+                        zero_g, jnp.asarray(False), jnp.asarray(False),
+                        jnp.int32(i))
+    q = mem.query(state, jnp.asarray(e), guides_only=True)
+    assert float(q.sim) == -2.0
+    qb = mem.query_batch(state, jnp.asarray(e)[None], guides_only=True)
+    assert float(np.asarray(qb.sim)[0]) == -2.0
+    # the unrestricted view still finds the exact hit
+    assert float(mem.query(state, jnp.asarray(e)).sim) > 0.999
+
+
+def test_padded_layout_invariants(rng):
+    """emb stays permanently in kernel layout: rows a multiple of the row
+    tile, lanes a multiple of 128, padding always zero, mask bit plane in
+    sync with the valid/has_guide views."""
+    from repro.kernels.memory_topk import (MASK_GUIDE, MASK_VALID,
+                                           padded_lanes, padded_rows)
+
+    state = mem.init_memory(CFG)
+    C, E = CFG.capacity, CFG.embed_dim
+    assert state.emb.shape == (padded_rows(C), padded_lanes(E))
+    assert state.mask.shape == (padded_rows(C), 1)
+    for i in range(C + 3):       # through a wraparound
+        state = mem.add(state, jnp.asarray(rand_unit(rng)),
+                        jnp.zeros(4, jnp.int32), jnp.asarray(i % 2 == 0),
+                        jnp.asarray(False), jnp.int32(i))
+        emb = np.asarray(state.emb)
+        bits = np.asarray(state.mask)[:, 0]
+        assert not emb[:, E:].any()          # lane padding stays zero
+        assert not emb[C:].any()             # row padding stays zero
+        assert not bits[C:].any()            # padding rows never valid
+        np.testing.assert_array_equal((bits[:C] & MASK_VALID) != 0,
+                                      np.asarray(state.valid))
+        np.testing.assert_array_equal((bits[:C] & MASK_GUIDE) != 0,
+                                      np.asarray(state.has_guide))
+
+
+def test_padded_oracle_matches_legacy_oracle(rng):
+    """ref.memory_top1_padded on the persistent layout == ref.memory_top1
+    on the compact store, for both mask views (the padded/legacy oracle
+    equivalence that keeps CPU CI honest about the TPU kernel contract)."""
+    from repro.kernels import ref
+    from repro.kernels.memory_topk import MASK_GUIDE, MASK_VALID
+
+    state = mem.init_memory(CFG)
+    for j in range(20):
+        state = mem.add(state, jnp.asarray(rand_unit(rng)),
+                        jnp.asarray(np.full(4, j, np.int32)),
+                        jnp.asarray(j % 3 == 0), jnp.asarray(False),
+                        jnp.int32(j))
+    C, E = CFG.capacity, CFG.embed_dim
+    compact = np.asarray(state.emb)[:C, :E]
+    valid = np.asarray(state.valid)
+    has_guide = np.asarray(state.has_guide)
+    qs = np.stack([rand_unit(rng) for _ in range(5)])
+    qs[0] = compact[7]                       # exact hit
+    for required, legacy_mask in ((MASK_VALID, valid),
+                                  (MASK_VALID | MASK_GUIDE,
+                                   valid & has_guide)):
+        for b in range(5):
+            s_l, i_l = ref.memory_top1(jnp.asarray(compact),
+                                       jnp.asarray(qs[b]),
+                                       jnp.asarray(legacy_mask))
+            s_p, i_p = ref.memory_top1_padded(state.emb, jnp.asarray(qs[b]),
+                                              state.mask, required)
+            assert int(i_l) == int(i_p)
+            assert float(s_l) == float(s_p)
+        s_l, i_l = ref.memory_top1_batch(jnp.asarray(compact),
+                                         jnp.asarray(qs),
+                                         jnp.asarray(legacy_mask))
+        s_p, i_p = ref.memory_top1_batch_padded(state.emb, jnp.asarray(qs),
+                                                state.mask, required)
+        np.testing.assert_array_equal(np.asarray(i_l), np.asarray(i_p))
+        np.testing.assert_array_equal(np.asarray(s_l), np.asarray(s_p))
+
+
+def test_query_result_single_transfer_struct(rng):
+    """The fused epilogue packs everything into (sim, meta): field views
+    agree before and after one device_get round-trip."""
+    state = mem.init_memory(CFG)
+    e = rand_unit(rng)
+    state = mem.add(state, jnp.asarray(e), jnp.asarray([9, 8, 7, 6],
+                                                       jnp.int32),
+                    jnp.asarray(True), jnp.asarray(True), jnp.int32(42))
+    q = mem.query(state, jnp.asarray(e))
+    host = q.device_get()
+    assert isinstance(host.sim, np.ndarray) or np.isscalar(host.sim)
+    for field in ("index", "has_guide", "hard", "added_at", "guide"):
+        np.testing.assert_array_equal(np.asarray(getattr(q, field)),
+                                      np.asarray(getattr(host, field)),
+                                      field)
+    assert int(host.index) == 0 and bool(host.has_guide) \
+        and bool(host.hard) and int(host.added_at) == 42
+    np.testing.assert_array_equal(np.asarray(host.guide), [9, 8, 7, 6])
