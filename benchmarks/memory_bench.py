@@ -7,9 +7,10 @@ wrappers re-materialized the store with a ``jnp.zeros(...).at[...].set``
 full copy on *every* call), across capacities and single/batched queries.
 
 Emits ``BENCH_memory.json`` (per-capacity us/query for the zero-copy path
-vs. the legacy re-pad path, the derived TPU rooflines, and a multi-shard
-parity check run in a subprocess with forced host devices) plus a CSV
-summary to stdout.
+vs. the legacy re-pad path, the top-k read path at k = TOPK — tracking
+the k>1 cost curve of multi-guide retrieval against the top-1 kernel —
+the derived TPU rooflines, and a multi-shard parity check run in a
+subprocess with forced host devices) plus a CSV summary to stdout.
 
     PYTHONPATH=src python -m benchmarks.memory_bench [--smoke] [--out f]
 
@@ -37,6 +38,7 @@ from repro.kernels.memory_topk import MASK_VALID
 from repro.launch.mesh import HBM_BW
 
 BATCH = 32
+TOPK = 4          # the tracked k>1 operating point (multi-guide serving)
 
 
 def _filled_state(cfg: mem.MemoryConfig, rng) -> mem.MemoryState:
@@ -146,6 +148,10 @@ def main() -> None:
             lambda: mem.query(state, q).sim, iters)
         dispatch_b = _time_us(
             lambda: mem.query_batch(state, qs).sim, iters)
+        topk_1 = _time_us(
+            lambda: mem.query_topk(state, q, TOPK).sim, iters)
+        topk_b = _time_us(
+            lambda: mem.query_topk_batch(state, qs, TOPK).sim, iters)
         legacy_1 = _time_us(
             lambda: _legacy_repad_query(compact, q, mask_bool)[0], iters)
         legacy_b = _time_us(
@@ -165,12 +171,20 @@ def main() -> None:
             "us_per_query_batch32": round(dispatch_b / BATCH, 2),
             "us_per_query_batch32_legacy_repad": round(legacy_b / BATCH, 2),
             "speedup_batch32": round(legacy_b / dispatch_b, 2),
+            # top-k read path (same one-pass contract; cost over top-1 is
+            # the k-deep accumulator merge, not extra store traffic)
+            f"us_per_query_topk{TOPK}": round(topk_1, 1),
+            f"us_per_query_batch32_topk{TOPK}": round(topk_b / BATCH, 2),
+            f"topk{TOPK}_over_top1_single": round(topk_1 / dispatch_1, 2),
+            f"topk{TOPK}_over_top1_batch32": round(topk_b / dispatch_b, 2),
             "tpu_roofline_us": round(tpu_padded_us, 2),
             "tpu_roofline_us_legacy_repad": round(tpu_legacy_us, 2),
         })
         print(f"# C={C}: {dispatch_1:.0f}us vs legacy {legacy_1:.0f}us "
               f"({legacy_1 / dispatch_1:.2f}x); batch32 "
-              f"{dispatch_b / BATCH:.1f}us/q vs {legacy_b / BATCH:.1f}us/q",
+              f"{dispatch_b / BATCH:.1f}us/q vs {legacy_b / BATCH:.1f}us/q"
+              f"; topk{TOPK} batch32 {topk_b / BATCH:.1f}us/q "
+              f"({topk_b / dispatch_b:.2f}x top-1)",
               file=sys.stderr)
     emit(rows)
 
@@ -183,17 +197,22 @@ def main() -> None:
         "host_impl": "ref (jnp oracle on this CPU container; the Pallas "
                      "kernel shares the padded-layout contract)",
         "batch": BATCH,
+        "topk": TOPK,
         "capacities": list(capacities),
         "rows": rows,
         "speedup_zero_copy_single_Cmax": top["speedup_single"],
         "speedup_zero_copy_batch32_Cmax": top["speedup_batch32"],
+        f"topk{TOPK}_over_top1_batch32_Cmax":
+            top[f"topk{TOPK}_over_top1_batch32"],
         "sharded_parity": sharded,
     }
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1)
     print(f"# zero-copy speedup at C={top['capacity']}: "
           f"{top['speedup_single']}x single, {top['speedup_batch32']}x "
-          f"batch32; sharded bit_identical="
+          f"batch32; topk{TOPK} batch32 "
+          f"{top[f'topk{TOPK}_over_top1_batch32']}x top-1; "
+          f"sharded bit_identical="
           f"{sharded.get('bit_identical')} → {args.out}", file=sys.stderr)
 
 

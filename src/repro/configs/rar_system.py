@@ -17,6 +17,7 @@ exist so the full e2e evaluation runs on CPU.
 import dataclasses
 
 from repro.core.embedder import EmbedderConfig
+from repro.core.rar import RARConfig
 from repro.data.tokenizer import Vocab
 from repro.models.config import ModelConfig
 
@@ -67,3 +68,24 @@ EMBEDDER = EmbedderConfig(
 
 FULL = STRONG  # registry convention
 SMOKE = dataclasses.replace(WEAK, name="rar-weak-smoke", num_layers=2)
+
+
+def make_rar_config(*, sim_threshold: float = 0.6,
+                    guide_sim_threshold: float | None = None,
+                    retrieval_k: int = 1, max_guides: int | None = None,
+                    **kw) -> RARConfig:
+    """The system's RARConfig defaults in one place (thresholds calibrated
+    to ``EMBEDDER``, see :class:`repro.core.rar.RARConfig`). The
+    multi-guide knobs plumb straight through: ``retrieval_k`` widens every
+    memory read to the top-k entries and ``max_guides`` (default: follow
+    retrieval_k) caps how many retrieved guides are spliced into the weak
+    FM's prompt. Used by ``launch.serve`` and the experiment stages so the
+    serving CLI and the evaluation suite can't drift apart."""
+    if guide_sim_threshold is None:
+        guide_sim_threshold = sim_threshold
+    if max_guides is None:
+        max_guides = retrieval_k
+    return RARConfig(sim_threshold=sim_threshold,
+                     guide_sim_threshold=guide_sim_threshold,
+                     retrieval_k=retrieval_k, max_guides=max_guides,
+                     **kw)

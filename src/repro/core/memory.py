@@ -36,9 +36,12 @@ and :func:`query` routes through its jnp reference on CPU. The query
 epilogue (metadata gathers + ``guides_only`` handling) is fused into the
 same jitted call and returns a :class:`QueryResult` packing everything
 into two arrays — one ``device_get`` moves a whole microbatch of results
-to the host. Eviction is FIFO (ring pointer), the capacity is a config
-knob. :mod:`repro.core.memory_sharded` scales the same contract across
-devices.
+to the host. :func:`query_topk` / :func:`query_topk_batch` widen the same
+single-pass read to the top-k entries (packed :class:`TopKResult`, sorted
+by sim desc / row asc; k = 1 is bit-identical to the top-1 read) — the
+multi-guide serving path. Eviction is FIFO (ring pointer), the capacity
+is a config knob. :mod:`repro.core.memory_sharded` scales the same
+contract across devices.
 """
 from __future__ import annotations
 
@@ -49,7 +52,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops as kops
-from repro.kernels.memory_topk import (MASK_GUIDE, MASK_VALID, padded_lanes,
+from repro.kernels.memory_topk import (DEFAULT_BLOCK_C, MASK_GUIDE,
+                                       MASK_VALID, padded_lanes,
                                        padded_rows)
 
 
@@ -158,18 +162,10 @@ def _add_batch_jit(state: MemoryState, embs: jax.Array, guides: jax.Array,
     )
 
 
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass(frozen=True)
-class QueryResult:
-    """Top-1 result with its metadata epilogue fused into two arrays.
-
-    ``sim`` is (…,) f32; ``meta`` is (…, 4 + G) int32 packing
-    [index, has_guide, hard, added_at, guide₀…guide_{G-1}] — a single
-    host-transferable struct (one :meth:`device_get` per microbatch phase
-    instead of ~6 per-field transfers). The per-field views below work on
-    device arrays and on host numpy alike."""
-    sim: jax.Array        # (…,) f32 cosine of best row (-2 if view empty)
-    meta: jax.Array       # (…, 4 + G) int32 packed epilogue
+class _MetaViews:
+    """Per-field views over the packed int32 ``meta`` epilogue
+    [index, has_guide, hard, added_at, guide₀…guide_{G-1}]; work on device
+    arrays and host numpy alike, for any leading shape."""
 
     @property
     def index(self):
@@ -191,10 +187,37 @@ class QueryResult:
     def guide(self):
         return self.meta[..., 4:]
 
-    def device_get(self) -> "QueryResult":
+    def device_get(self):
         """Pull the whole result to the host in one transfer."""
         sim, meta = jax.device_get((self.sim, self.meta))
-        return QueryResult(sim, meta)
+        return type(self)(sim, meta)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class QueryResult(_MetaViews):
+    """Top-1 result with its metadata epilogue fused into two arrays.
+
+    ``sim`` is (…,) f32; ``meta`` is (…, 4 + G) int32 packing
+    [index, has_guide, hard, added_at, guide₀…guide_{G-1}] — a single
+    host-transferable struct (one :meth:`device_get` per microbatch phase
+    instead of ~6 per-field transfers)."""
+    sim: jax.Array        # (…,) f32 cosine of best row (-2 if view empty)
+    meta: jax.Array       # (…, 4 + G) int32 packed epilogue
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TopKResult(_MetaViews):
+    """Top-k result — the multi-guide read path's packed struct.
+
+    ``sim`` is (…, k) f32 and ``meta`` is (…, k, 4 + G) int32, entries
+    sorted by (sim desc, store row asc); entries past the view's
+    population carry the -2.0 sentinel. Same one-host-transfer contract
+    as :class:`QueryResult` (one :meth:`device_get` per controller
+    phase); the field views gain a trailing k axis."""
+    sim: jax.Array        # (…, k) f32
+    meta: jax.Array       # (…, k, 4 + G) int32
 
 
 def pack_meta_parts(idx: jax.Array, bits: jax.Array, hard: jax.Array,
@@ -244,6 +267,22 @@ def _query_batch_jit(state: MemoryState, embs: jax.Array,
     return QueryResult(sim=sims, meta=pack_meta(state, idx))
 
 
+@partial(jax.jit, static_argnames=("k", "guides_only"))
+def _query_topk_jit(state: MemoryState, emb: jax.Array, k: int,
+                    guides_only: bool = False) -> TopKResult:
+    sims, idx = kops.memory_topk_padded(state.emb, emb, state.mask, k,
+                                        required_bits(guides_only))
+    return TopKResult(sim=sims, meta=pack_meta(state, idx))
+
+
+@partial(jax.jit, static_argnames=("k", "guides_only"))
+def _query_topk_batch_jit(state: MemoryState, embs: jax.Array, k: int,
+                          guides_only: bool = False) -> TopKResult:
+    sims, idx = kops.memory_topk_batch_padded(state.emb, embs, state.mask,
+                                              k, required_bits(guides_only))
+    return TopKResult(sim=sims, meta=pack_meta(state, idx))
+
+
 @jax.jit
 def _mark_soft_jit(state: MemoryState, index: jax.Array) -> MemoryState:
     return dataclasses.replace(state, hard=state.hard.at[index].set(False))
@@ -283,6 +322,43 @@ def query_batch(state, embs: jax.Array,
     if isinstance(state, MemoryState):
         return _query_batch_jit(state, embs, guides_only=guides_only)
     return state.query_batch(embs, guides_only=guides_only)
+
+
+def _check_k(k: int, capacity: int) -> None:
+    # the upper bound holds on every backend: the Pallas kernel's (k, B)
+    # accumulator must fit one grid-step merge (k <= kernel block), and
+    # capping here also bounds the ref oracle's k unrolled selection
+    # rounds — the dispatch contract cannot depend on which impl runs
+    bound = min(capacity, DEFAULT_BLOCK_C)
+    if not 1 <= k <= bound:
+        raise ValueError(f"retrieval k={k} must be in [1, {bound}] "
+                         f"(min of capacity={capacity} and the kernel "
+                         f"block {DEFAULT_BLOCK_C})")
+
+
+def query_topk(state, emb: jax.Array, k: int,
+               guides_only: bool = False) -> TopKResult:
+    """Top-k cosine search in the same single store pass as :func:`query`
+    (k = 1 is bit-identical to it). Entries arrive sorted by
+    (sim desc, store row asc); slots past the view's population carry the
+    -2.0 sentinel. The multi-guide serving read
+    (``core.rar.splice_guides``)."""
+    _check_k(k, state.capacity)
+    if isinstance(state, MemoryState):
+        return _query_topk_jit(state, emb, k, guides_only=guides_only)
+    return state.query_topk(emb, k, guides_only=guides_only)
+
+
+def query_topk_batch(state, embs: jax.Array, k: int,
+                     guides_only: bool = False) -> TopKResult:
+    """Top-k search for a whole microbatch in one store pass: embs (B, E)
+    → TopKResult with (B, k) leading axes. Snapshot semantics match
+    :func:`query_batch`."""
+    _check_k(k, state.capacity)
+    if isinstance(state, MemoryState):
+        return _query_topk_batch_jit(state, embs, k,
+                                     guides_only=guides_only)
+    return state.query_topk_batch(embs, k, guides_only=guides_only)
 
 
 def add(state, emb: jax.Array, guide: jax.Array, has_guide: jax.Array,

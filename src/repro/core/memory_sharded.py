@@ -19,6 +19,16 @@ single-device kernel (same f32 row dot products, same lowest-global-row
 tie-break; asserted in ``tests/test_memory_sharded.py``). At S scalars per
 query the gather is equivalent to a psum-tree combine and simpler.
 
+Top-k (:meth:`ShardedMemory.query_topk` / :meth:`query_topk_batch`): each
+shard computes its local top-k with the same zero-copy kernel, the S·k
+(sim, global row, mask bits) candidate triples are all-gathered and
+re-selected by the shared (sim desc, row asc) extraction rule
+(:func:`_merge_topk` — the same total order as the kernel accumulator and
+the ref oracle), so the global top-k is bit-identical to single-device,
+ties included. k is capped at Cs rows so a shard's candidates can never
+include local padding rows, whose global slot numbers would collide with
+the next shard's.
+
 Writes: FIFO ring-pointer arithmetic maps a global slot g to
 (shard g // Cs, row g mod Cs). A microbatch commit broadcasts the K padded
 rows + mask bits with their global slots; every shard turns the slots into
@@ -49,7 +59,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import memory as mem
 from repro.kernels import ops as kops
-from repro.kernels.memory_topk import MASK_VALID, padded_lanes, padded_rows
+from repro.kernels.memory_topk import (MASK_VALID, _select_topk,
+                                       padded_lanes, padded_rows)
 
 AXIS = "mem"
 
@@ -103,6 +114,71 @@ def _query_batch_sharded(mesh: Mesh, cs: int, required: int,
         s = jnp.argmax(sims, axis=0)                  # (B,)
         take = lambda a: jnp.take_along_axis(a, s[None], axis=0)[0]  # noqa: E731
         return take(sims), s.astype(jnp.int32) * cs + take(idxs), take(bitss)
+
+    return shard_map(local, mesh=mesh,
+                     in_specs=(P(AXIS, None), P(AXIS, None), P()),
+                     out_specs=(P(), P(), P()), check_rep=False
+                     )(emb, mask, qs)
+
+
+def _merge_topk(sims: jax.Array, rows: jax.Array, bits: jax.Array, k: int
+                ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Global top-k of the (S·k, …) per-shard candidates via the
+    kernel's own selection rule (:func:`…memory_topk._select_topk` —
+    sim desc, global row asc), so the combined result is bit-identical
+    to single-device, ties included. Global rows are unique across
+    candidates (shards own disjoint slot ranges and k ≤ Cs keeps local
+    padding rows out of the per-shard top-k), so the winners' mask bits
+    recover through a one-hot row-match sum."""
+    out_s, out_r = _select_topk(sims, rows, k)
+    hit = rows[None] == out_r[:, None]             # (k, S·k, …) one-hot
+    out_b = jnp.sum(jnp.where(hit, bits[None], 0), axis=1)
+    return out_s, out_r, out_b
+
+
+@partial(jax.jit, static_argnames=("mesh", "cs", "k", "required"))
+def _query_topk_sharded(mesh: Mesh, cs: int, k: int, required: int,
+                        emb: jax.Array, mask: jax.Array, q: jax.Array
+                        ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Single query → replicated (sims (k,), global idx (k,), bits (k,))."""
+
+    def local(emb_s, mask_s, q):
+        sims, idx = kops.memory_topk_padded(emb_s, q, mask_s, k, required)
+        bits = mask_s[idx, 0]
+        s = jax.lax.axis_index(AXIS)
+        S = jax.lax.psum(1, AXIS)
+        cand_s = jax.lax.all_gather(sims, AXIS).reshape(S * k)
+        cand_r = jax.lax.all_gather(s.astype(jnp.int32) * cs + idx,
+                                    AXIS).reshape(S * k)
+        cand_b = jax.lax.all_gather(bits, AXIS).reshape(S * k)
+        return _merge_topk(cand_s, cand_r, cand_b, k)
+
+    return shard_map(local, mesh=mesh,
+                     in_specs=(P(AXIS, None), P(AXIS, None), P()),
+                     out_specs=(P(), P(), P()), check_rep=False
+                     )(emb, mask, q)
+
+
+@partial(jax.jit, static_argnames=("mesh", "cs", "k", "required"))
+def _query_topk_batch_sharded(mesh: Mesh, cs: int, k: int, required: int,
+                              emb: jax.Array, mask: jax.Array,
+                              qs: jax.Array
+                              ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Batched queries → replicated ((B, k) sims, idx, bits)."""
+
+    def local(emb_s, mask_s, qs):
+        sims, idx = kops.memory_topk_batch_padded(emb_s, qs, mask_s, k,
+                                                  required)      # (B, k)
+        bits = mask_s[idx, 0]
+        s = jax.lax.axis_index(AXIS)
+        S = jax.lax.psum(1, AXIS)
+        B = qs.shape[0]
+        gather = lambda a: jax.lax.all_gather(                 # noqa: E731
+            a.T, AXIS).reshape(S * k, B)                       # (S·k, B)
+        out_s, out_r, out_b = _merge_topk(
+            gather(sims), gather(s.astype(jnp.int32) * cs + idx),
+            gather(bits), k)                                   # (k, B)
+        return out_s.T, out_r.T, out_b.T
 
     return shard_map(local, mesh=mesh,
                      in_specs=(P(AXIS, None), P(AXIS, None), P()),
@@ -199,6 +275,36 @@ class ShardedMemory:
                                                self.emb, self.mask,
                                                jnp.asarray(embs))
         return mem.QueryResult(
+            sim=sims, meta=mem.pack_meta_jit(idx, bits, self.hard,
+                                             self.added_at, self.guide))
+
+    def _check_topk(self, k: int) -> None:
+        mem._check_k(k, self.capacity)
+        if k > self.cs:
+            # each shard must supply k real (non-padding) local rows so
+            # the global merge never sees a local padding row, whose
+            # global slot number would collide with the next shard's
+            raise ValueError(f"retrieval k={k} exceeds the {self.cs} "
+                             f"logical rows per shard ({self.shards} "
+                             f"shards over capacity {self.capacity})")
+
+    def query_topk(self, emb: jax.Array, k: int,
+                   guides_only: bool = False) -> mem.TopKResult:
+        self._check_topk(k)
+        sims, idx, bits = _query_topk_sharded(
+            self.mesh, self.cs, k, mem.required_bits(guides_only),
+            self.emb, self.mask, jnp.asarray(emb))
+        return mem.TopKResult(
+            sim=sims, meta=mem.pack_meta_jit(idx, bits, self.hard,
+                                             self.added_at, self.guide))
+
+    def query_topk_batch(self, embs: jax.Array, k: int,
+                         guides_only: bool = False) -> mem.TopKResult:
+        self._check_topk(k)
+        sims, idx, bits = _query_topk_batch_sharded(
+            self.mesh, self.cs, k, mem.required_bits(guides_only),
+            self.emb, self.mask, jnp.asarray(embs))
+        return mem.TopKResult(
             sim=sims, meta=mem.pack_meta_jit(idx, bits, self.hard,
                                              self.added_at, self.guide))
 
@@ -306,6 +412,8 @@ def parity_selftest(capacity: int = 64, embed_dim: int = 16,
         qs = rng.normal(size=(n_queries, embed_dim)).astype(np.float32)
         qs /= np.linalg.norm(qs, axis=1, keepdims=True)
         qs[0] = embs[0]                # exact stored row (duplicated above)
+        topks = [k for k in (1, 2, 4, 8)
+                 if k <= capacity // sharded.shards]
         for guides_only in (False, True):
             a = mem.query_batch(single, jnp.asarray(qs),
                                 guides_only=guides_only).device_get()
@@ -320,9 +428,30 @@ def parity_selftest(capacity: int = 64, embed_dim: int = 16,
             assert float(a1.sim) == float(b1.sim)
             assert np.array_equal(a1.meta, b1.meta)
             checks += 2 * n_queries + 2
+            # top-k: global merge of per-shard candidates must stay
+            # bit-identical to the single-device kernel, ties included
+            for k in topks:
+                ak = mem.query_topk_batch(single, jnp.asarray(qs), k,
+                                          guides_only=guides_only
+                                          ).device_get()
+                bk = sharded.query_topk_batch(jnp.asarray(qs), k,
+                                              guides_only=guides_only
+                                              ).device_get()
+                assert np.array_equal(ak.sim, bk.sim), (step, k, ak.sim,
+                                                        bk.sim)
+                assert np.array_equal(ak.meta, bk.meta), (step, k)
+                a1k = mem.query_topk(single, jnp.asarray(qs[0]), k,
+                                     guides_only=guides_only).device_get()
+                b1k = sharded.query_topk(jnp.asarray(qs[0]), k,
+                                         guides_only=guides_only
+                                         ).device_get()
+                assert np.array_equal(a1k.sim, b1k.sim), (step, k)
+                assert np.array_equal(a1k.meta, b1k.meta), (step, k)
+                checks += 2 * n_queries * k + 2 * k
     assert sharded.size_fast == single.size_fast
     return {"shards": sharded.shards, "capacity": capacity,
-            "checks": checks, "bit_identical": True}
+            "checks": checks, "topk_checked": topks,
+            "bit_identical": True}
 
 
 if __name__ == "__main__":

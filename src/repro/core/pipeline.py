@@ -7,9 +7,11 @@ every layer touches the device once per microbatch instead of once per
 request:
 
 1. **Embed** the whole microbatch (or accept precomputed embeddings).
-2. **Query memory once** — the multi-query top-1 kernel
-   (:func:`repro.core.memory.query_batch`) streams the store through VMEM
-   a single time for all B queries.
+2. **Query memory once** — the multi-query top-k kernel
+   (:func:`repro.core.memory.query_topk_batch`, k =
+   ``cfg.retrieval_k``) streams the store through VMEM a single time for
+   all B queries; entry 0 per request is the top-1 routing decision and
+   the tail entries feed multi-guide splicing (``cfg.max_guides``).
 3. **Partition** requests into {memory_hard, memory_guide, memory_skill,
    router_weak, shadow} by the batched similarities and the static router.
 4. **Serve each group with one sweep per FM tier**: strong answers for
@@ -42,7 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import memory as mem
-from repro.core.rar import RAR, Outcome, splice_guide
+from repro.core.rar import RAR, Outcome, select_guides, splice_guides
 
 
 def _answers(tier, prompts: list[np.ndarray]) -> np.ndarray:
@@ -82,6 +84,16 @@ class MicrobatchRAR(RAR):
     adds :meth:`process_batch`."""
 
     # ------------------------------------------------------------------
+    def _lookup_batch(self, embs, guides_only: bool = False
+                      ) -> mem.TopKResult:
+        """One batched memory read: top-``retrieval_k`` entries per
+        query, fused epilogue, one host transfer (the batched analog of
+        ``RAR._lookup``)."""
+        return mem.query_topk_batch(self.memory, jnp.asarray(embs),
+                                    self.cfg.retrieval_k,
+                                    guides_only=guides_only).device_get()
+
+    # ------------------------------------------------------------------
     def process_batch(self, prompts: list[np.ndarray],
                       guide_requests: list[np.ndarray],
                       keys: list | None = None,
@@ -106,16 +118,17 @@ class MicrobatchRAR(RAR):
         else:
             embs = np.asarray(embs)
 
-        # ---- phase 1: one batched memory read (snapshot at batch start).
-        # One dispatch (kernel + fused metadata epilogue) and one host
-        # transfer of the packed struct — not a per-field gather each.
-        q = mem.query_batch(self.memory, jnp.asarray(embs)).device_get()
-        sims = q.sim
-        hards = q.hard
-        has_guides = q.has_guide
-        hit_guides = q.guide
-        added_ats = q.added_at
-        hit_idxs = q.index
+        # ---- phase 1: one batched top-k memory read (snapshot at batch
+        # start). One dispatch (kernel + fused metadata epilogue) and one
+        # host transfer of the packed struct — not a per-field gather
+        # each. Entry [i, 0] is request i's top-1 routing decision; the
+        # tail entries feed multi-guide splicing.
+        q = self._lookup_batch(embs)
+        sims = q.sim[:, 0]
+        hards = q.hard[:, 0]
+        has_guides = q.has_guide[:, 0]
+        added_ats = q.added_at[:, 0]
+        hit_idxs = q.index[:, 0]
 
         # ---- phase 2: partition
         outcomes: list[Outcome | None] = [None] * B
@@ -156,7 +169,11 @@ class MicrobatchRAR(RAR):
         weak_prompts: list[np.ndarray] = []
         weak_tags: list[tuple[str, object]] = []
         for i in g_guide:
-            weak_prompts.append(splice_guide(prompts[i], hit_guides[i]))
+            weak_prompts.append(splice_guides(
+                prompts[i], select_guides(q.sim[i], q.has_guide[i],
+                                          q.guide[i],
+                                          self.cfg.sim_threshold,
+                                          self.cfg.max_guides)))
             weak_tags.append(("guide", i))
         for i in g_skill:
             weak_prompts.append(prompts[i])
@@ -207,17 +224,21 @@ class MicrobatchRAR(RAR):
         # the same batch-start snapshot)
         still: list[_Shadow] = []
         if pending:
-            gq = mem.query_batch(self.memory,
-                                 jnp.asarray(embs[[s.req for s in pending]]),
-                                 guides_only=True).device_get()
-            gsims = gq.sim
-            gguides = gq.guide
+            gq = self._lookup_batch(embs[[s.req for s in pending]],
+                                    guides_only=True)
             probes, probe_shadows, probe_guides = [], [], []
             for j, s in enumerate(pending):
-                if gsims[j] >= self.cfg.guide_sim_threshold:
-                    probes.append(splice_guide(prompts[s.req], gguides[j]))
+                if gq.sim[j, 0] >= self.cfg.guide_sim_threshold:
+                    guides = select_guides(gq.sim[j], gq.has_guide[j],
+                                           gq.guide[j],
+                                           self.cfg.guide_sim_threshold,
+                                           self.cfg.max_guides)
+                    probes.append(splice_guides(prompts[s.req], guides))
                     probe_shadows.append(s)
-                    probe_guides.append(gguides[j])
+                    # on success the *top* guide is recorded (one guide
+                    # block per stored entry), matching the sequential
+                    # controller
+                    probe_guides.append(guides[0])
                 else:
                     still.append(s)
             if probes:
@@ -243,7 +264,7 @@ class MicrobatchRAR(RAR):
                             [guide_requests[s.req] for s in still],
                             self.cfg.memory.guide_len)
             probe_ans = _answers(self.weak,
-                                 [splice_guide(prompts[s.req], g)
+                                 [splice_guides(prompts[s.req], [g])
                                   for s, g in zip(still, fresh)])
             for s, g, a in zip(still, fresh, probe_ans):
                 if self.aligned_fn(int(a), s.strong_ans):

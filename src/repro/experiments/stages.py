@@ -59,6 +59,8 @@ def run_rar_experiment(system: TrainedSystem, pool: list[Sample], *,
                        strong_tier=None,
                        prepopulate_from: list[Sample] | None = None,
                        microbatch: int = 1,
+                       retrieval_k: int | None = None,
+                       max_guides: int | None = None,
                        verbose: bool = False,
                        progress_every: int = 0
                        ) -> tuple[list[StageResult], RAR]:
@@ -74,6 +76,12 @@ def run_rar_experiment(system: TrainedSystem, pool: list[Sample], *,
     the batched data plane (``MicrobatchRAR.process_batch``) with
     microbatch-commit memory semantics.
 
+    ``retrieval_k``/``max_guides``: override the multi-guide knobs of
+    ``rar_cfg`` — every memory read returns the top-k entries and up to
+    ``max_guides`` (default: follow retrieval_k) retrieved guides are
+    spliced into the weak FM's prompt. ``None`` keeps what ``rar_cfg``
+    says (top-1 by default, the paper's procedure).
+
     ``progress_every``: print a throughput/memory-occupancy line every N
     served requests (0 = off). Deliberately throttled: the occupancy read
     (``memory.size_fast``) transfers a device scalar, so reporting it
@@ -83,6 +91,13 @@ def run_rar_experiment(system: TrainedSystem, pool: list[Sample], *,
     strong = strong_tier or system.strong
     rar_cfg = rar_cfg or RARConfig(
         reprobe_period=2 * len(pool))  # re-probe roughly every other stage
+    if retrieval_k is not None:
+        rar_cfg = dataclasses.replace(
+            rar_cfg, retrieval_k=retrieval_k,
+            max_guides=max_guides if max_guides is not None
+            else retrieval_k)
+    elif max_guides is not None:
+        rar_cfg = dataclasses.replace(rar_cfg, max_guides=max_guides)
     prompts, greqs = _prompts(system, pool)
 
     # scoring reference: the strong FM's answers (quality is measured as

@@ -45,6 +45,40 @@ Two kernel bodies share the streaming layout:
 Sharding: the same kernels run per-shard under ``shard_map`` in
 ``core.memory_sharded`` — each device streams only its (Cp/S, Ep) shard and
 an all-gather/argmax combine produces the global (sim, idx).
+
+Top-k retrieval (the multi-guide read path)
+-------------------------------------------
+:func:`memory_topk_padded_pallas` / :func:`memory_topk_batch_padded_pallas`
+generalize the same one-pass contract to k > 1 results per query (the
+guided in-context serving path splices several retrieved guides into one
+weak-FM prompt, ``core.rar.splice_guides``).
+
+Accumulator layout: the running best-k is a **(k, B) pair of VMEM
+accumulators** (sims f32, global row idx int32) revisited on every grid
+step — row j holds the j-th best candidate seen so far, kept
+insertion-sorted by the total order
+
+    (sim descending, global row ascending)
+
+so equal similarities (duplicate store rows) deterministically rank by
+lowest global row, exactly like the top-1 kernels' tie-break. Slots that
+no store row has filled yet carry the below-any-data sentinel
+(-3.0, 2**30); masked-out rows enter at sim -2.0, so "fewer than k rows
+in the view" degrades to -2.0 sentinel results exactly like the top-1
+kernels' empty-view case.
+
+Merge rule per grid step: the (BLOCK_C, B) masked block similarities are
+concatenated with the (k, B) accumulator and the new best-k is re-selected
+by k selection-extraction rounds — take the column max, resolve ties to
+the lowest global row, consume that candidate (set its sim to -3.0),
+repeat. Every round is a vectorized compare over the candidate axis (no
+data-dependent control flow), the merged result is written back sorted,
+and because each round applies the same (sim desc, row asc) order the
+final (k, B) output is **bit-identical** to the reference oracle's global
+selection — including the order of tied entries (property-swept in
+``tests/test_kernels.py``). ``core.memory_sharded`` reuses the identical
+rule to merge per-shard top-k candidates into the global top-k, which is
+what keeps the sharded result bit-identical to single-device.
 """
 from __future__ import annotations
 
@@ -175,6 +209,50 @@ def _top1_batch_kernel(q_ref, mem_ref, mask_ref, sim_ref, idx_ref, *,
                               idx_ref[0, :])
 
 
+def _select_topk(sims, rows, k: int):
+    """k selection-extraction rounds over the leading candidate axis: each
+    round takes the max sim, resolves ties to the lowest row, then consumes
+    that candidate. Returns ((k, ...) sims, (k, ...) rows) sorted by
+    (sim desc, row asc) — THE top-k total order, shared verbatim with the
+    reference oracle and the sharded cross-device merge so all three
+    produce bit-identical results (ties included)."""
+    out_s, out_r = [], []
+    for _ in range(k):
+        best = jnp.max(sims, axis=0)
+        best_row = jnp.min(jnp.where(sims >= best[None], rows,
+                                     jnp.int32(2 ** 30)), axis=0)
+        out_s.append(best)
+        out_r.append(best_row)
+        consumed = (sims >= best[None]) & (rows == best_row[None])
+        sims = jnp.where(consumed, jnp.float32(-3.0), sims)
+    return jnp.stack(out_s), jnp.stack(out_r)
+
+
+def _topk_batch_kernel(q_ref, mem_ref, mask_ref, sim_ref, idx_ref, *,
+                       block_c: int, k: int, required: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        sim_ref[...] = jnp.full(sim_ref.shape, -3.0, jnp.float32)
+        idx_ref[...] = jnp.full(idx_ref.shape, 2 ** 30, jnp.int32)
+
+    block = mem_ref[...].astype(jnp.float32)          # (BC, E)
+    qs = q_ref[...].astype(jnp.float32)               # (B, E)
+    sims = jax.lax.dot_general(block, qs, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)  # (BC, B)
+    valid = (mask_ref[...] & required) == required    # (BC, 1)
+    sims = jnp.where(valid, sims, -2.0)
+    rows = jax.lax.broadcasted_iota(jnp.int32, sims.shape, 0) + i * block_c
+
+    # merge block candidates into the (k, B) running-best accumulator
+    cand_s = jnp.concatenate([sim_ref[...], sims], axis=0)   # (k + BC, B)
+    cand_r = jnp.concatenate([idx_ref[...], rows], axis=0)
+    new_s, new_r = _select_topk(cand_s, cand_r, k)
+    sim_ref[...] = new_s
+    idx_ref[...] = new_r
+
+
 # ---------------------------------------------------------------------------
 # Zero-copy entry points — store already in kernel layout
 # ---------------------------------------------------------------------------
@@ -260,6 +338,73 @@ def memory_top1_batch_padded_pallas(mem: jax.Array, qs: jax.Array,
         interpret=interpret,
     )(qp, mem, mask)
     return sims[0, :B], idx[0, :B]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "required", "block_c", "interpret"))
+def memory_topk_batch_padded_pallas(mem: jax.Array, qs: jax.Array,
+                                    mask: jax.Array, *, k: int,
+                                    required: int = MASK_VALID,
+                                    block_c: int = DEFAULT_BLOCK_C,
+                                    interpret: bool = False
+                                    ) -> tuple[jax.Array, jax.Array]:
+    """mem: (Cp, Ep) padded store; qs: (B, E); mask: (Cp, 1) int32 bit
+    plane → (sims (B, k), idx (B, k)) sorted by (sim desc, row asc).
+    Same zero-copy single-pass contract as the top-1 batch kernel; the
+    running best-k is a (k, B) VMEM accumulator pair (see module
+    docstring for the layout and merge rule)."""
+    Cp, Ep = mem.shape
+    B, E = qs.shape
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
+    bc = _pick_block(Cp, block_c)
+    if k > bc:
+        raise ValueError(f"k={k} exceeds the kernel block of {bc} rows; "
+                         f"raise block_c (or shrink k)")
+    Bp = _round_up(B, 128)
+    qp = jnp.zeros((Bp, Ep), jnp.float32).at[:B, :E].set(
+        qs.astype(jnp.float32))
+
+    grid = (Cp // bc,)
+    sims, idx = pl.pallas_call(
+        functools.partial(_topk_batch_kernel, block_c=bc, k=k,
+                          required=required),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((Bp, Ep), lambda i: (0, 0)),
+            pl.BlockSpec((bc, Ep), lambda i: (i, 0)),
+            pl.BlockSpec((bc, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((k, Bp), lambda i: (0, 0)),
+            pl.BlockSpec((k, Bp), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, Bp), jnp.float32),
+            jax.ShapeDtypeStruct((k, Bp), jnp.int32),
+        ],
+        interpret=interpret,
+    )(qp, mem, mask)
+    return sims[:, :B].T, idx[:, :B].T
+
+
+def memory_topk_padded_pallas(mem: jax.Array, q: jax.Array, mask: jax.Array,
+                              *, k: int, required: int = MASK_VALID,
+                              block_c: int = DEFAULT_BLOCK_C,
+                              interpret: bool = False
+                              ) -> tuple[jax.Array, jax.Array]:
+    """Single-query top-k: mem (Cp, Ep); q (E,); mask (Cp, 1) →
+    (sims (k,), idx (k,)) sorted by (sim desc, row asc). Shares the batch
+    kernel body (one query column resident in VMEM); the jit cache is the
+    batch entry's. The result order is bit-identical to the matvec-shaped
+    reference oracle; the sim *values* may differ in the last ulp on CPU
+    hosts (the lane-padded query block takes BLAS's gemm path where a bare
+    (E,) query takes gemv) — ties can't be affected, since tied rows are
+    bitwise-equal dot products within either path."""
+    sims, idx = memory_topk_batch_padded_pallas(
+        mem, q[None, :], mask, k=k, required=required, block_c=block_c,
+        interpret=interpret)
+    return sims[0], idx[0]
 
 
 # ---------------------------------------------------------------------------

@@ -28,7 +28,9 @@ from repro.kernels.memory_topk import (MASK_VALID,
                                        memory_top1_batch_padded_pallas,
                                        memory_top1_batch_pallas,
                                        memory_top1_padded_pallas,
-                                       memory_top1_pallas)
+                                       memory_top1_pallas,
+                                       memory_topk_batch_padded_pallas,
+                                       memory_topk_padded_pallas)
 
 _impl_cache: str | None = None
 
@@ -105,6 +107,34 @@ def memory_top1_batch_padded(mem: jax.Array, qs: jax.Array, mask: jax.Array,
     if impl == "ref":
         return ref.memory_top1_batch_padded(mem, qs, mask, required)
     return memory_top1_batch_padded_pallas(mem, qs, mask, required=required,
+                                           interpret=(impl == "interpret"))
+
+
+def memory_topk_padded(mem: jax.Array, q: jax.Array, mask: jax.Array,
+                       k: int, required: int = MASK_VALID,
+                       impl: str | None = None
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Zero-copy top-k over the padded kernel layout: (sims (k,),
+    idx (k,)) sorted by (sim desc, row asc). The multi-guide serving
+    dispatch path (``core.memory.query_topk``)."""
+    impl = impl or _default_impl()
+    if impl == "ref":
+        return ref.memory_topk_padded(mem, q, mask, k, required)
+    return memory_topk_padded_pallas(mem, q, mask, k=k, required=required,
+                                     interpret=(impl == "interpret"))
+
+
+def memory_topk_batch_padded(mem: jax.Array, qs: jax.Array, mask: jax.Array,
+                             k: int, required: int = MASK_VALID,
+                             impl: str | None = None
+                             ) -> tuple[jax.Array, jax.Array]:
+    """Zero-copy multi-query top-k over the padded kernel layout:
+    (sims (B, k), idx (B, k))."""
+    impl = impl or _default_impl()
+    if impl == "ref":
+        return ref.memory_topk_batch_padded(mem, qs, mask, k, required)
+    return memory_topk_batch_padded_pallas(mem, qs, mask, k=k,
+                                           required=required,
                                            interpret=(impl == "interpret"))
 
 

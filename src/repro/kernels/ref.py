@@ -74,13 +74,72 @@ def memory_top1_batch(mem: jax.Array, qs: jax.Array, mask: jax.Array
                                axis=1)[:, 0], idx
 
 
+def _topk_select(sims: jax.Array, rows: jax.Array, k: int
+                 ) -> tuple[jax.Array, jax.Array]:
+    """Select the top-k candidates over the leading axis by the order
+    (sim descending, row ascending): k rounds of max → lowest-row
+    tie-break → consume. This is the ground-truth definition of the top-k
+    total order; the Pallas kernel's (k, B) accumulator merge and the
+    sharded cross-device combine must both reproduce it bit-for-bit
+    (±0.0 similarities compare equal, so only the row decides their
+    order — IEEE compare, not the total-order sort of ``lax.top_k``)."""
+    out_s, out_r = [], []
+    for _ in range(k):
+        best = jnp.max(sims, axis=0)
+        at_best = sims >= best[None]
+        best_row = jnp.min(jnp.where(at_best, rows, jnp.int32(2 ** 30)),
+                           axis=0)
+        out_s.append(best)
+        out_r.append(best_row)
+        sims = jnp.where(at_best & (rows == best_row[None]),
+                         jnp.float32(-3.0), sims)
+    return jnp.stack(out_s), jnp.stack(out_r)
+
+
 def memory_topk(mem: jax.Array, q: jax.Array, mask: jax.Array, k: int
                 ) -> tuple[jax.Array, jax.Array]:
-    """Top-k variant. Returns (sims (k,), idx (k,)) sorted descending."""
+    """Compact-layout top-k: mem (C, E); q (E,); mask (C,) bool →
+    (sims (k,), idx (k,)) sorted by (sim desc, row asc)."""
     sims = mem.astype(jnp.float32) @ q.astype(jnp.float32)
     sims = jnp.where(mask, sims, -2.0)
-    top_sims, top_idx = jax.lax.top_k(sims, k)
-    return top_sims, top_idx.astype(jnp.int32)
+    rows = jnp.arange(sims.shape[0], dtype=jnp.int32)
+    top_sims, top_idx = _topk_select(sims, rows, k)
+    return top_sims, top_idx
+
+
+def memory_topk_padded(mem: jax.Array, q: jax.Array, mask: jax.Array,
+                       k: int, required: int = 1
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Padded-layout top-k oracle: mem (Cp, Ep) zero-padded; q (E,);
+    mask (Cp, 1) int32 bit plane → (sims (k,), idx (k,)) sorted by
+    (sim desc, row asc). Slots past the view's population surface as the
+    -2.0 sentinel on the lowest masked-out rows (same degradation as the
+    top-1 oracle's empty-view case)."""
+    Ep = mem.shape[1]
+    qp = jnp.zeros((Ep,), jnp.float32).at[:q.shape[0]].set(
+        q.astype(jnp.float32))
+    sims = mem.astype(jnp.float32) @ qp
+    sims = jnp.where((mask[:, 0] & required) == required, sims, -2.0)
+    rows = jnp.arange(sims.shape[0], dtype=jnp.int32)
+    return _topk_select(sims, rows, k)
+
+
+def memory_topk_batch_padded(mem: jax.Array, qs: jax.Array, mask: jax.Array,
+                             k: int, required: int = 1
+                             ) -> tuple[jax.Array, jax.Array]:
+    """Padded-layout multi-query top-k oracle: qs (B, E) →
+    (sims (B, k), idx (B, k)), each query's k results sorted by
+    (sim desc, row asc)."""
+    B, E = qs.shape
+    Ep = mem.shape[1]
+    qp = jnp.zeros((B, Ep), jnp.float32).at[:, :E].set(
+        qs.astype(jnp.float32))
+    sims = mem.astype(jnp.float32) @ qp.T                       # (Cp, B)
+    sims = jnp.where(((mask[:, 0] & required) == required)[:, None],
+                     sims, -2.0)
+    rows = jax.lax.broadcasted_iota(jnp.int32, sims.shape, 0)
+    top_sims, top_idx = _topk_select(sims, rows, k)             # (k, B)
+    return top_sims.T, top_idx.T
 
 
 # ---------------------------------------------------------------------------

@@ -17,7 +17,7 @@ import time
 
 import numpy as np
 
-from repro.core.rar import RARConfig
+from repro.configs.rar_system import make_rar_config
 from repro.experiments.setup import build_system, failing_pool
 from repro.experiments.stages import run_rar_experiment
 
@@ -33,6 +33,13 @@ def main() -> None:
     ap.add_argument("--router", default="oracle",
                     choices=["oracle", "learned"])
     ap.add_argument("--sim-threshold", type=float, default=0.2)
+    ap.add_argument("--retrieval-k", type=int, default=1,
+                    help="memory entries retrieved per query (one store "
+                         "pass regardless of k); >1 enables multi-guide "
+                         "serving")
+    ap.add_argument("--max-guides", type=int, default=None,
+                    help="retrieved guides spliced into the weak FM's "
+                         "prompt (default: --retrieval-k)")
     ap.add_argument("--log-every", type=int, default=64,
                     help="serve-loop progress every N requests (0 = off); "
                          "throttled because the memory-occupancy read "
@@ -44,11 +51,13 @@ def main() -> None:
     system = build_system()
     pool = failing_pool(system, args.domain, n=args.requests)
     print(f"[serve] {len(pool)} requests (weak-FM-failing pool, "
-          f"domain {args.domain}); router={args.router}")
+          f"domain {args.domain}); router={args.router}, "
+          f"retrieval_k={args.retrieval_k}")
 
-    cfg = RARConfig(sim_threshold=args.sim_threshold,
-                    guide_sim_threshold=args.sim_threshold,
-                    reprobe_period=2 * len(pool))
+    cfg = make_rar_config(sim_threshold=args.sim_threshold,
+                          retrieval_k=args.retrieval_k,
+                          max_guides=args.max_guides,
+                          reprobe_period=2 * len(pool))
     t0 = time.time()
     results, rar = run_rar_experiment(
         system, pool, n_stages=args.stages, rar_cfg=cfg,

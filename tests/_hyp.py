@@ -3,7 +3,7 @@ minimal deterministic fallback so the property tests still run (each
 ``@given`` test executes ``max_examples`` seeded samples).
 
 Only the strategy surface this suite uses is implemented: ``integers``,
-``booleans``, ``lists``.
+``booleans``, ``lists``, ``sampled_from``.
 """
 from __future__ import annotations
 
@@ -27,6 +27,12 @@ except ImportError:
         @staticmethod
         def booleans():
             return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(
+                lambda rng: elements[int(rng.integers(0, len(elements)))])
 
         @staticmethod
         def lists(elements, min_size=0, max_size=10):

@@ -1,8 +1,11 @@
 """Pallas kernel validation: shape/dtype sweeps in interpret mode against
-the pure-jnp oracles in repro.kernels.ref."""
+the pure-jnp oracles in repro.kernels.ref, plus the property-based top-k
+parity sweep (random shapes, k, mask patterns and duplicate-similarity
+ties — results must be bit-identical, tie-break order included)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hyp import given, settings, strategies as st
 
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention_pallas
@@ -11,7 +14,10 @@ from repro.kernels.memory_topk import (MASK_GUIDE, MASK_VALID,
                                        memory_top1_batch_padded_pallas,
                                        memory_top1_batch_pallas,
                                        memory_top1_padded_pallas,
-                                       memory_top1_pallas, to_padded_layout)
+                                       memory_top1_pallas,
+                                       memory_topk_batch_padded_pallas,
+                                       memory_topk_padded_pallas,
+                                       to_padded_layout)
 
 TOL = {np.float32: 2e-5, jnp.bfloat16: 2e-2}
 
@@ -198,10 +204,10 @@ def test_memory_top1_batch_padded_matches_oracle(rng, B):
 
 
 def test_query_path_is_zero_copy():
-    """No store-sized buffer is materialized inside the jitted query: no
-    jaxpr equation *produces* a (Cp, Ep)-shaped value — the store only
-    enters as an input operand (the old wrappers created a second
-    full-size buffer via zeros+scatter on every call)."""
+    """No store-sized buffer is materialized inside the jitted query —
+    top-1 or top-k: no jaxpr equation *produces* a (Cp, Ep)-shaped value;
+    the store only enters as an input operand (the old wrappers created a
+    second full-size buffer via zeros+scatter on every call)."""
     import re
 
     import jax
@@ -218,8 +224,154 @@ def test_query_path_is_zero_copy():
     for jaxpr in (jax.make_jaxpr(
                       lambda s, e: cmem._query_jit(s, e))(state, q),
                   jax.make_jaxpr(
-                      lambda s, e: cmem._query_batch_jit(s, e))(state, qs)):
+                      lambda s, e: cmem._query_batch_jit(s, e))(state, qs),
+                  jax.make_jaxpr(
+                      lambda s, e: cmem._query_topk_jit(s, e, 4))(state, q),
+                  jax.make_jaxpr(
+                      lambda s, e: cmem._query_topk_batch_jit(s, e, 4))(
+                          state, qs)):
         assert not produced.search(str(jaxpr)), jaxpr
+
+
+# ---------------------------------------------------------------------------
+# memory_topk (the multi-guide read path)
+# ---------------------------------------------------------------------------
+
+
+def _topk_store(rng, C, E, density, n_dups):
+    """Random store with controlled mask density and ``n_dups`` exact
+    duplicates of row 0 (duplicate similarities → the tie-break path)."""
+    mem = rng.normal(size=(C, E)).astype(np.float32)
+    norms = np.linalg.norm(mem, axis=1, keepdims=True)
+    mem /= np.where(norms > 0, norms, 1.0)
+    dup_rows = 1 + (np.arange(n_dups) * max(1, (C - 1) // (n_dups + 1))
+                    ) % max(C - 1, 1)
+    mem[dup_rows] = mem[0]
+    valid = rng.random(C) < density
+    has_guide = rng.random(C) < 0.5
+    bits = (valid.astype(np.int32) * MASK_VALID
+            + (valid & has_guide).astype(np.int32) * MASK_GUIDE)
+    return mem, bits
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1),
+       st.sampled_from([1, 2, 4, 8]),                  # k
+       st.sampled_from([17, 64, 100, 300]),            # C (odd → padding)
+       st.sampled_from([16, 128, 384]),                # E
+       st.sampled_from([1, 2, 5, 32]),                 # B
+       st.sampled_from([0.0, 0.2, 0.7, 1.0]),          # mask density
+       st.sampled_from([0, 3, 7]),                     # duplicate rows
+       st.booleans())                                  # guides-only view
+def test_property_topk_pallas_matches_oracle(seed, k, C, E, B, density,
+                                             n_dups, guides_only):
+    """Property sweep: the Pallas top-k kernel must reproduce the ref
+    oracle's *retrieval* bit-for-bit — the returned rows, their order
+    (duplicate-similarity ties resolve to ascending store row in both)
+    and the -2.0 sentinel fill when k exceeds the view's population.
+    Similarities are exact to 1 ulp across the two implementations (the
+    kernel's lane-padded query block takes a different BLAS gemm shape
+    than the oracle's compact one — bitwise-equal dot products across
+    matmul shapes are not a portable property of any backend) and
+    *bitwise* equal within each implementation at tied rows, which is
+    what makes the tie order deterministic. The dispatch-path pins
+    (k=1 ≡ top-1, sharded ≡ single-device) compare like against like
+    and are asserted fully bitwise elsewhere."""
+    rng = np.random.default_rng(seed)
+    mem, bits = _topk_store(rng, C, E, density, n_dups)
+    qs = rng.normal(size=(B, E)).astype(np.float32)
+    qs /= np.linalg.norm(qs, axis=1, keepdims=True)
+    qs[0] = mem[0]                     # exact hit on the duplicated row
+    memp, maskp = to_padded_layout(jnp.asarray(mem), jnp.asarray(bits),
+                                   block_c=128)
+    required = MASK_VALID | (MASK_GUIDE if guides_only else 0)
+
+    s_o, i_o = ref.memory_topk_batch_padded(memp, jnp.asarray(qs), maskp,
+                                            k, required)
+    s_p, i_p = memory_topk_batch_padded_pallas(
+        memp, jnp.asarray(qs), maskp, k=k, required=required, block_c=128,
+        interpret=True)
+    np.testing.assert_array_equal(np.asarray(i_o), np.asarray(i_p))
+    np.testing.assert_allclose(np.asarray(s_o), np.asarray(s_p),
+                               atol=1e-6)
+
+    s1_o, i1_o = ref.memory_topk_padded(memp, jnp.asarray(qs[0]), maskp,
+                                        k, required)
+    s1_p, i1_p = memory_topk_padded_pallas(
+        memp, jnp.asarray(qs[0]), maskp, k=k, required=required,
+        block_c=128, interpret=True)
+    np.testing.assert_array_equal(np.asarray(i1_o), np.asarray(i1_p))
+    np.testing.assert_allclose(np.asarray(s1_o), np.asarray(s1_p),
+                               atol=1e-6)
+
+    # structural invariants of the result order, in BOTH implementations:
+    # sims strictly descending except at ties, ties in ascending row
+    # order with bitwise-equal sims
+    for s_row, i_row in ((np.asarray(s_o), np.asarray(i_o)),
+                         (np.asarray(s_p), np.asarray(i_p)),
+                         (np.asarray(s1_o)[None], np.asarray(i1_o)[None]),
+                         (np.asarray(s1_p)[None], np.asarray(i1_p)[None])):
+        for b in range(s_row.shape[0]):
+            for j in range(k - 1):
+                assert (s_row[b, j] > s_row[b, j + 1]
+                        or (s_row[b, j] == s_row[b, j + 1]
+                            and i_row[b, j] < i_row[b, j + 1]))
+
+
+def test_topk_tie_order_is_lowest_row_first(rng):
+    """Duplicated store rows must surface in ascending row order, in both
+    the oracle and the kernel, at every k that spans the duplicates."""
+    C, E = 96, 64
+    mem = rng.normal(size=(C, E)).astype(np.float32)
+    mem /= np.linalg.norm(mem, axis=1, keepdims=True)
+    dups = [5, 17, 40, 77]
+    mem[dups] = mem[dups[0]]
+    bits = np.full(C, MASK_VALID, np.int32)
+    memp, maskp = to_padded_layout(jnp.asarray(mem), jnp.asarray(bits),
+                                   block_c=32)
+    q = jnp.asarray(mem[dups[0]])
+    for k in (1, 2, 4):
+        s_o, i_o = ref.memory_topk_padded(memp, q, maskp, k, MASK_VALID)
+        _, i_p = memory_topk_padded_pallas(memp, q, maskp, k=k,
+                                           required=MASK_VALID, block_c=32,
+                                           interpret=True)
+        assert list(np.asarray(i_o))[:min(k, 4)] == dups[:min(k, 4)]
+        np.testing.assert_array_equal(np.asarray(i_o), np.asarray(i_p))
+        assert float(np.asarray(s_o)[0]) > 0.999
+
+
+def test_topk_k1_matches_top1_kernels(rng):
+    """k=1 output must match the top-1 kernels row for row (the top-1
+    data plane is the k=1 special case, not a separate contract)."""
+    C, E, B = 200, 128, 6
+    mem = rng.normal(size=(C, E)).astype(np.float32)
+    mem /= np.linalg.norm(mem, axis=1, keepdims=True)
+    qs = rng.normal(size=(B, E)).astype(np.float32)
+    qs /= np.linalg.norm(qs, axis=1, keepdims=True)
+    valid = rng.random(C) < 0.6
+    valid[3] = True
+    bits = valid.astype(np.int32) * MASK_VALID
+    memp, maskp = to_padded_layout(jnp.asarray(mem), jnp.asarray(bits),
+                                   block_c=64)
+    s1, i1 = memory_top1_batch_padded_pallas(memp, jnp.asarray(qs), maskp,
+                                             block_c=64, interpret=True)
+    sk, ik = memory_topk_batch_padded_pallas(memp, jnp.asarray(qs), maskp,
+                                             k=1, required=MASK_VALID,
+                                             block_c=64, interpret=True)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(ik)[:, 0])
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(sk)[:, 0])
+
+
+def test_topk_rejects_bad_k():
+    memp = jnp.zeros((64, 128), jnp.float32)
+    maskp = jnp.zeros((64, 1), jnp.int32)
+    q = jnp.zeros((128,), jnp.float32)
+    with pytest.raises(ValueError):
+        memory_topk_padded_pallas(memp, q, maskp, k=0, interpret=True)
+    with pytest.raises(ValueError):
+        # k beyond the kernel block cannot keep the accumulator exact
+        memory_topk_padded_pallas(memp, q, maskp, k=16, block_c=8,
+                                  interpret=True)
 
 
 # ---------------------------------------------------------------------------

@@ -108,6 +108,59 @@ def test_multi_shard_parity_subprocess():
     assert report["shards"] == 4
     assert report["bit_identical"] is True
     assert report["checks"] > 0
+    # the selftest must have exercised the top-k merge across shards
+    # (global top-k == single-device top-k on the same ring, ties incl.)
+    assert report["topk_checked"] == [1, 2, 4, 8]
+
+
+def test_single_shard_topk_matches_memory_state(rng):
+    """Sharded top-k agrees bit-for-bit with MemoryState on this host's
+    mesh (1 shard in CI; the 4-shard merge runs in the subprocess test)."""
+    single = mem.init_memory(CFG)
+    sharded = ShardedMemory(CFG)
+    embs = np.stack([rand_unit(rng) for _ in range(12)])
+    embs[5] = embs[1]              # duplicate row → tie-break path
+    guides = np.arange(48, dtype=np.int32).reshape(12, 4)
+    hg = np.arange(12) % 2 == 0
+    hd = np.arange(12) % 3 == 0
+    now = np.arange(12, dtype=np.int32)
+    args = (jnp.asarray(embs), jnp.asarray(guides), jnp.asarray(hg),
+            jnp.asarray(hd), jnp.asarray(now))
+    single = mem.add_batch(single, *args)
+    sharded.add_batch(*args)
+    qs = np.stack([rand_unit(rng) for _ in range(4)])
+    qs[0] = embs[1]
+    for guides_only in (False, True):
+        for k in (1, 2, 4, 8):
+            a = mem.query_topk_batch(single, jnp.asarray(qs), k,
+                                     guides_only=guides_only).device_get()
+            b = sharded.query_topk_batch(jnp.asarray(qs), k,
+                                         guides_only=guides_only
+                                         ).device_get()
+            np.testing.assert_array_equal(a.sim, b.sim)
+            np.testing.assert_array_equal(a.meta, b.meta)
+            a1 = mem.query_topk(single, jnp.asarray(qs[0]), k,
+                                guides_only=guides_only).device_get()
+            b1 = sharded.query_topk(jnp.asarray(qs[0]), k,
+                                    guides_only=guides_only).device_get()
+            np.testing.assert_array_equal(a1.sim, b1.sim)
+            np.testing.assert_array_equal(a1.meta, b1.meta)
+
+
+def test_sharded_topk_rejects_k_past_shard_rows():
+    """k must not exceed the logical rows per shard (the merge would see
+    local padding rows whose global slots collide with the next shard)."""
+    import jax
+
+    sharded = ShardedMemory(CFG)
+    if len(jax.devices()) == 1:
+        # single shard: the capacity bound is the only limit
+        with pytest.raises(ValueError):
+            sharded.query_topk(jnp.zeros(16), CFG.capacity + 1)
+    else:
+        with pytest.raises(ValueError):
+            sharded.query_topk(jnp.zeros(16),
+                               CFG.capacity // len(jax.devices()) + 1)
 
 
 def build_batched(memory=None, **cfg_kw):

@@ -1,12 +1,16 @@
 """Microbatched controller: exact batch-of-1 equivalence with the
 sequential ``RAR.process`` (Outcome stream, memory state, FM-call counts),
-plus batched-mode behaviour at B > 1."""
+batched-mode behaviour at B > 1, the PR-2 regression pin (retrieval_k=1
+byte-identical to the top-1 read path), and multi-guide serving over the
+top-k read."""
+import jax.numpy as jnp
 import numpy as np
 import pytest
 from test_rar_controller import FakeTier, greq, make_cfg, prompt, skill_emb
 
+from repro.core import memory as mem
 from repro.core.pipeline import MicrobatchRAR
-from repro.core.rar import RAR
+from repro.core.rar import RAR, splice_guides
 
 MEM_FIELDS = ("emb", "guide", "has_guide", "hard", "valid", "added_at",
               "ptr")
@@ -65,6 +69,9 @@ SCENARIOS = [
     dict(weak_known=set(), weak_follows_guides=False,
          reprobe_period=4),                         # case3 + re-probe
     dict(weak_known={0, 1, 2}, reprobe_period=3, allow_fresh_guides=False),
+    # top-k retrieval: B=1 equivalence must hold on the widened read too
+    dict(weak_known={0, 1}, retrieval_k=4, max_guides=2),
+    dict(weak_known=set(), retrieval_k=8, max_guides=8, reprobe_period=4),
 ]
 
 
@@ -83,6 +90,90 @@ def test_batch1_identical_to_sequential(kw):
     assert bat.strong.engine.calls == seq.strong.engine.calls
     assert bat.guides_from_memory == seq.guides_from_memory
     assert bat.guides_generated == seq.guides_generated
+
+
+# ---------------------------------------------------------------------------
+# PR-2 regression pin: retrieval_k=1 / max_guides=1 must be byte-identical
+# to the top-1 read path
+# ---------------------------------------------------------------------------
+
+
+class _Top1RAR(RAR):
+    """Sequential comparator whose memory reads take the PR-2 top-1 path
+    (``mem.query``), re-shaped to the k=1 TopKResult contract."""
+
+    def _lookup(self, emb, guides_only=False):
+        q = mem.query(self.memory, emb,
+                      guides_only=guides_only).device_get()
+        return mem.TopKResult(sim=np.asarray(q.sim)[None],
+                              meta=np.asarray(q.meta)[None])
+
+
+class _Top1MicrobatchRAR(MicrobatchRAR):
+    """Batched comparator on the PR-2 top-1 batch read
+    (``mem.query_batch``)."""
+
+    def _lookup_batch(self, embs, guides_only=False):
+        q = mem.query_batch(self.memory, jnp.asarray(embs),
+                            guides_only=guides_only).device_get()
+        return mem.TopKResult(sim=np.asarray(q.sim)[:, None],
+                              meta=np.asarray(q.meta)[:, None])
+
+
+@pytest.mark.parametrize("kw", SCENARIOS[:4])
+@pytest.mark.parametrize("batch", [1, 4])
+def test_retrieval_k1_byte_identical_to_top1_path(kw, batch):
+    """With the default retrieval_k=1 / max_guides=1 the controller must
+    reproduce the PR-2 top-1 data plane byte for byte: same Outcome
+    stream, same memory state, same FM-call counts — single-request and
+    microbatched. (The comparators' reads literally call the PR-2
+    ``query``/``query_batch`` dispatch.)"""
+    stream = make_stream()
+    if batch == 1:
+        new, new_outs = run_sequential(stream, **kw)
+    else:
+        new, new_outs = run_batched(stream, batch, **kw)
+    old_cls = _Top1RAR if batch == 1 else _Top1MicrobatchRAR
+    old, holder = build(old_cls, **kw)
+    old_outs = []
+    if batch == 1:
+        for s, x in stream:
+            holder["emb"] = skill_emb(s)
+            old_outs.append(old.process(prompt(s, x), greq(s), key=(s, x)))
+    else:
+        for start in range(0, len(stream), batch):
+            chunk = stream[start:start + batch]
+            old_outs += old.process_batch(
+                [prompt(s, x) for s, x in chunk],
+                [greq(s) for s, _ in chunk], keys=chunk,
+                embs=np.stack([skill_emb(s) for s, _ in chunk]))
+    assert new_outs == old_outs
+    for f in MEM_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(new.memory, f)),
+            np.asarray(getattr(old.memory, f)), f)
+    assert new.weak.engine.calls == old.weak.engine.calls
+    assert new.strong.engine.calls == old.strong.engine.calls
+    assert new.guides_from_memory == old.guides_from_memory
+    assert new.guides_generated == old.guides_generated
+
+
+def test_query_topk_k1_pins_query_on_dispatch_path(rng):
+    """query_topk(k=1) ≡ query, asserted at the controller's own store
+    after a real serving run (not just on synthetic stores)."""
+    ctrl, _ = build(MicrobatchRAR, weak_known={0, 1})
+    stream = make_stream(n_skills=5, reps=2)
+    ctrl.process_batch([prompt(s, x) for s, x in stream],
+                       [greq(s) for s, _ in stream],
+                       embs=np.stack([skill_emb(s) for s, _ in stream]))
+    qs = np.stack([skill_emb(s) for s in range(5)])
+    for guides_only in (False, True):
+        a = mem.query_batch(ctrl.memory, jnp.asarray(qs),
+                            guides_only=guides_only).device_get()
+        b = mem.query_topk_batch(ctrl.memory, jnp.asarray(qs), 1,
+                                 guides_only=guides_only).device_get()
+        np.testing.assert_array_equal(a.sim, b.sim[:, 0])
+        np.testing.assert_array_equal(a.meta, b.meta[:, 0])
 
 
 def test_batched_mode_learns_and_matches_cost_profile():
@@ -159,6 +250,144 @@ def test_commit_eviction_does_not_corrupt_flag_updates():
     out = ctrl.process_batch([prompt(5, 2)], [greq(5)],
                              embs=skill_emb(5)[None])[0]
     assert out.case == "memory_skill"
+
+
+# ---------------------------------------------------------------------------
+# Multi-guide serving (retrieval_k > 1)
+# ---------------------------------------------------------------------------
+
+from repro.core.rar import select_guides  # noqa: E402
+from repro.data import tokenizer as tk    # noqa: E402
+
+
+class MultiGuideWeak:
+    """Weak tier that understands several spliced guide blocks: answers
+    correctly iff ANY guide hint encodes the right skill."""
+
+    def __init__(self):
+        self.engine = type("E", (), {"calls": 0})()
+
+    def answer_batch(self, prompts):
+        out = []
+        for p in prompts:
+            self.engine.calls += 1
+            p = list(p)
+            skill, x = p[-2], p[-1]
+            hints = [p[i + 1] for i, t in enumerate(p[:-2])
+                     if t == tk.GUIDE_START]
+            out.append((skill + x) % 4
+                       if any(h == skill + 100 for h in hints) else -1)
+        return np.asarray(out)
+
+
+def _guide(hint):
+    g = np.zeros(8, np.int32)
+    g[0], g[1], g[2] = tk.GUIDE_START, hint, tk.GUIDE_END
+    return g
+
+
+def test_splice_guides_format_and_order():
+    """Multiple guide blocks land after BOS best-first, PAD-stripped; one
+    guide reproduces the single-guide format exactly."""
+    p = prompt(3, 1)
+    gA, gB = _guide(700), _guide(800)
+    spliced = splice_guides(p, [gA, gB])
+    assert list(spliced) == [tk.BOS,
+                             tk.GUIDE_START, 700, tk.GUIDE_END,
+                             tk.GUIDE_START, 800, tk.GUIDE_END, 3, 1]
+    from repro.core.rar import splice_guide
+    np.testing.assert_array_equal(splice_guides(p, [gA]),
+                                  splice_guide(p, gA))
+
+
+def test_select_guides_threshold_and_cap():
+    sims = np.asarray([0.99, 0.95, 0.7, 0.5])
+    has_guide = np.asarray([True, False, True, True])
+    guides = np.stack([_guide(h) for h in (1, 2, 3, 4)])
+    picked = select_guides(sims, has_guide, guides, 0.6, 4)
+    # entry 1 (no guide) and entry 3 (below threshold) are skipped
+    assert [g[1] for g in picked] == [1, 3]
+    assert [g[1] for g in select_guides(sims, has_guide, guides,
+                                        0.6, 1)] == [1]
+    # a zero cap means zero guides, not "all of them"
+    assert select_guides(sims, has_guide, guides, 0.6, 0) == []
+
+
+def test_rar_config_rejects_bad_guide_knobs():
+    from repro.core.rar import RARConfig
+
+    with pytest.raises(ValueError):
+        RARConfig(retrieval_k=0)
+    with pytest.raises(ValueError):
+        RARConfig(retrieval_k=4, max_guides=0)
+    with pytest.raises(ValueError):
+        RARConfig(retrieval_k=2, max_guides=3)
+
+
+def _multi_guide_rar(max_guides, retrieval_k=4):
+    """Controller whose memory holds two guide entries above threshold
+    for the probe skill: the closest carries a WRONG hint, the second a
+    RIGHT one — only multi-guide splicing can serve the request weak."""
+    skill = 3
+    q_emb = skill_emb(skill)
+    rng = np.random.default_rng(123)
+    off = rng.normal(size=q_emb.shape).astype(np.float32)
+    off -= (off @ q_emb) * q_emb
+    off /= np.linalg.norm(off)
+    second = (0.97 * q_emb + np.sqrt(1 - 0.97 ** 2) * off).astype(
+        np.float32)                       # cos(q, second) ≈ 0.97
+    weak = MultiGuideWeak()
+    strong = FakeTier(known=range(10_000), can_guide=True, name="strong")
+    cfg = make_cfg(sim_threshold=0.9, retrieval_k=retrieval_k,
+                   max_guides=max_guides)
+    ctrl = MicrobatchRAR(weak, strong, lambda p: q_emb,
+                         lambda e, k: False, cfg)
+    ctrl.memory = mem.add(ctrl.memory, jnp.asarray(q_emb),
+                          jnp.asarray(_guide(999)),       # wrong hint
+                          jnp.asarray(True), jnp.asarray(False),
+                          jnp.int32(1))
+    ctrl.memory = mem.add(ctrl.memory, jnp.asarray(second),
+                          jnp.asarray(_guide(skill + 100)),  # right hint
+                          jnp.asarray(True), jnp.asarray(False),
+                          jnp.int32(2))
+    return ctrl, skill
+
+
+@pytest.mark.parametrize("batched", [False, True])
+def test_multi_guide_hit_serves_weak_where_top1_fails(batched):
+    """memory_guide hit with retrieval_k=4: splicing the top-2 retrieved
+    guides lets the weak FM answer a request the top-1 guide alone gets
+    wrong — the paper's guided-generalization lever, now k-deep. With
+    max_guides=1 the same store serves the wrong answer."""
+    for max_guides, expect_correct in ((2, True), (1, False)):
+        ctrl, skill = _multi_guide_rar(max_guides)
+        if batched:
+            out = ctrl.process_batch([prompt(skill, 1)], [greq(skill)],
+                                     embs=skill_emb(skill)[None])[0]
+        else:
+            out = ctrl.process(prompt(skill, 1), greq(skill))
+        assert out.case == "memory_guide" and out.strong_calls == 0
+        assert (out.response == (skill + 1) % 4) is expect_correct
+
+
+def test_multi_guide_case2a_recovers_via_second_guide():
+    """Shadow case 2a with retrieval_k>1: the weak probe sees both
+    retrieved guides, aligns thanks to the second, and the TOP guide is
+    the one recorded (one guide block per stored entry)."""
+    ctrl, skill = _multi_guide_rar(2)
+    # miss the skill memory but hit the guide view: raise the routing
+    # threshold above the exact-hit sim so the request takes the shadow
+    # path, keep the guide threshold reachable
+    import dataclasses
+    ctrl.cfg = dataclasses.replace(ctrl.cfg, sim_threshold=1.5,
+                                   guide_sim_threshold=0.9)
+    out = ctrl.process_batch([prompt(skill, 1)], [greq(skill)],
+                             embs=skill_emb(skill)[None])[0]
+    assert out.case == "case2" and out.guide_source == "memory"
+    assert ctrl.guides_from_memory == 1
+    # the recorded entry carries the top-ranked (wrong-hint) guide block
+    newest = np.asarray(ctrl.memory.guide)[2]
+    assert newest[1] == 999
 
 
 def test_mixed_batch_covers_all_groups():
