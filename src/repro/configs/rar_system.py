@@ -73,19 +73,29 @@ SMOKE = dataclasses.replace(WEAK, name="rar-weak-smoke", num_layers=2)
 def make_rar_config(*, sim_threshold: float = 0.6,
                     guide_sim_threshold: float | None = None,
                     retrieval_k: int = 1, max_guides: int | None = None,
+                    shadow_mode: str = "inline",
+                    shadow_flush_every: int | None = None,
                     **kw) -> RARConfig:
     """The system's RARConfig defaults in one place (thresholds calibrated
     to ``EMBEDDER``, see :class:`repro.core.rar.RARConfig`). The
     multi-guide knobs plumb straight through: ``retrieval_k`` widens every
     memory read to the top-k entries and ``max_guides`` (default: follow
     retrieval_k) caps how many retrieved guides are spliced into the weak
-    FM's prompt. Used by ``launch.serve`` and the experiment stages so the
-    serving CLI and the evaluation suite can't drift apart."""
+    FM's prompt. ``shadow_mode``/``shadow_flush_every`` schedule the
+    shadow plane (inline per batch, deferred at barriers, or on a
+    background drainer thread — :mod:`repro.core.shadow`); the flush
+    cadence defaults to every batch. Used by ``launch.serve`` and the
+    experiment stages so the serving CLI and the evaluation suite can't
+    drift apart."""
     if guide_sim_threshold is None:
         guide_sim_threshold = sim_threshold
     if max_guides is None:
         max_guides = retrieval_k
+    if shadow_flush_every is None:
+        shadow_flush_every = 1
     return RARConfig(sim_threshold=sim_threshold,
                      guide_sim_threshold=guide_sim_threshold,
                      retrieval_k=retrieval_k, max_guides=max_guides,
+                     shadow_mode=shadow_mode,
+                     shadow_flush_every=shadow_flush_every,
                      **kw)

@@ -1,7 +1,9 @@
 from repro.core.rar import RAR, RARConfig, Outcome, splice_guide
 from repro.core.pipeline import MicrobatchRAR
+from repro.core.shadow import ShadowItem, ShadowQueue
 from repro.core.fm import FMTier
 from repro.core import memory, embedder, router
 
 __all__ = ["RAR", "RARConfig", "Outcome", "splice_guide", "MicrobatchRAR",
-           "FMTier", "memory", "embedder", "router"]
+           "ShadowItem", "ShadowQueue", "FMTier", "memory", "embedder",
+           "router"]

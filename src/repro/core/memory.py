@@ -296,6 +296,145 @@ def _touch_jit(state: MemoryState, index: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Epoch-versioned commit buffer — the shadow plane's write staging area
+# ---------------------------------------------------------------------------
+
+
+class CommitBuffer:
+    """Staging area for shadow-plane memory writes, applied in epochs.
+
+    The async shadow queue (:mod:`repro.core.shadow`) decouples learning
+    (weak probes, guide generation, memory commits) from the serve sweep.
+    All memory *writes* it produces are staged here — inserts
+    (:meth:`stage_add`), re-probe flag clears (:meth:`stage_soft_clear`)
+    and timestamp refreshes (:meth:`stage_touch`) — and land on the store
+    in one :meth:`apply` call per drain **epoch**:
+
+    * **Atomicity** — within an epoch, all staged writes become visible
+      together. For the functional :class:`MemoryState` the new store is
+      built first and swapped in as one reference assignment; for the
+      mutable sharded store the caller serializes :meth:`apply` against
+      readers (the shadow queue's ``store_lock``). A concurrent query can
+      therefore never observe a partially-applied shadow batch (the
+      hypothesis sweep in ``tests/test_shadow.py`` pins this).
+    * **Determinism / order-independence** — staged ops are keyed by
+      their request's logical time ``now`` (unique per request) and are
+      sorted before applying: inserts by ``now`` (FIFO ring order — the
+      same order the sequential controller would have written them),
+      soft-clears as a sorted index set, touches last-``now``-wins per
+      index. The final store state of an epoch is thus independent of the
+      order items were staged in.
+    * **Eviction guard** — flag updates target entries that existed when
+      their request was classified; a flag update is dropped if its slot
+      has been overwritten by any FIFO insert since then (it would
+      otherwise hit the unrelated fresh entry now in that slot). The
+      staging calls take the ring pointer observed at classification time
+      (``ptr_snapshot``) so the guard spans *intervening* drain epochs,
+      not just the applying epoch's own scatter — with no intervening
+      drains (inline / deferred flush-every-batch) this reduces exactly
+      to the PR-1 microbatch-commit rule.
+    * **Transfer-free accounting** — :attr:`entries_applied` counts
+      inserts ever applied on the host, so serve-loop progress logging
+      can report ring occupancy without the ``size_fast`` device-scalar
+      sync.
+
+    Single-writer discipline: one thread stages and applies at a time
+    (the drainer); readers only need :attr:`epoch`/:attr:`entries_applied`
+    which are plain ints under the GIL.
+    """
+
+    def __init__(self):
+        self._records: list[tuple] = []      # (now, emb, guide, hg, hard)
+        self._soft_clears: list[tuple] = []  # (now, index, ptr_snapshot)
+        self._touches: list[tuple] = []      # (now, index, ptr_snapshot)
+        self.epoch = 0                # bumped once per non-empty apply
+        self.entries_applied = 0      # inserts ever applied (host counter)
+
+    # -- staging --------------------------------------------------------
+    def stage_add(self, emb, guide, has_guide: bool, hard: bool,
+                  now: int) -> None:
+        """Stage one ring insert (a shadow pass's recorded entry)."""
+        self._records.append((int(now), emb, guide, bool(has_guide),
+                              bool(hard)))
+
+    def stage_soft_clear(self, index: int, now: int,
+                         ptr_snapshot: int | None = None) -> None:
+        """Stage a hard-flag clear after a successful re-probe.
+        ``ptr_snapshot`` is the ring pointer when the target entry was
+        observed (eviction guard; None = start of the applying epoch)."""
+        self._soft_clears.append((int(now), int(index), ptr_snapshot))
+
+    def stage_touch(self, index: int, now: int,
+                    ptr_snapshot: int | None = None) -> None:
+        """Stage a timestamp refresh (failed re-probe restarts the
+        cool-down); ``ptr_snapshot`` as in :meth:`stage_soft_clear`."""
+        self._touches.append((int(now), int(index), ptr_snapshot))
+
+    # -- inspection -----------------------------------------------------
+    @property
+    def pending(self) -> int:
+        return len(self._records) + len(self._soft_clears) + \
+            len(self._touches)
+
+    # -- apply ----------------------------------------------------------
+    def apply(self, state):
+        """Apply every staged op to ``state`` as one epoch; returns the
+        (new) store and the number of entries inserted. Ops land in
+        deterministic order (see class docstring); inserts are chunked at
+        ring capacity so an epoch larger than the ring degrades to the
+        sequential FIFO result instead of a self-overwriting scatter."""
+        import numpy as np
+
+        if not self.pending:
+            return state, 0
+        records = sorted(self._records, key=lambda r: r[0])
+        soft_clears, touches = self._soft_clears, self._touches
+        self._records, self._soft_clears, self._touches = [], [], []
+
+        C = state.capacity
+        base_ptr = int(jax.device_get(state.ptr))
+        end_ptr = base_ptr + len(records)
+
+        def evicted(idx: int, snap) -> bool:
+            """Has slot ``idx`` been overwritten by any insert between
+            the flag op's pointer snapshot and the end of this epoch's
+            scatter? (Clamping guards against a snapshot from a mirror
+            that missed out-of-band writes — over-covering only drops a
+            flag update, never corrupts an entry.)"""
+            snap = base_ptr if snap is None else min(int(snap), base_ptr)
+            covered = end_ptr - snap
+            return covered >= C or (idx - snap) % C < covered
+
+        for start in range(0, len(records), C):
+            chunk = records[start:start + C]
+            state = add_batch(
+                state,
+                jnp.asarray(np.stack([np.asarray(r[1]) for r in chunk])),
+                jnp.asarray(np.stack([np.asarray(r[2], np.int32)
+                                      for r in chunk])),
+                jnp.asarray(np.asarray([r[3] for r in chunk], bool)),
+                jnp.asarray(np.asarray([r[4] for r in chunk], bool)),
+                jnp.asarray(np.asarray([r[0] for r in chunk], np.int32)))
+        softs = sorted({idx for _, idx, snap in soft_clears
+                        if not evicted(idx, snap)})
+        if softs:
+            state = mark_soft(state, jnp.asarray(softs, jnp.int32))
+        # duplicate touch targets dedupe last-now-wins (scatter order for
+        # duplicate indices is implementation-defined)
+        by_idx = {idx: now for now, idx, snap in
+                  sorted(touches, key=lambda t: t[:2])
+                  if not evicted(idx, snap)}
+        if by_idx:
+            state = touch(state,
+                          jnp.asarray(sorted(by_idx), jnp.int32),
+                          jnp.asarray([by_idx[i] for i in sorted(by_idx)],
+                                      jnp.int32))
+        self.epoch += 1
+        self.entries_applied += len(records)
+        return state, len(records)
+
+
+# ---------------------------------------------------------------------------
 # Public API — thin dispatchers so the controllers (``core.rar`` /
 # ``core.pipeline``) serve identically against the single-device
 # MemoryState (functional, jitted) or a ``core.memory_sharded``

@@ -385,7 +385,12 @@ def parity_selftest(capacity: int = 64, embed_dim: int = 16,
     """Drive a single-device MemoryState and a ShardedMemory through the
     same commit stream (wraparound, duplicate rows for tie-breaks) and
     assert bit-identical (sim, idx) — and full metadata — on every query,
-    in both mask views. Returns a summary dict."""
+    in both mask views. Every other commit wave is routed through the
+    epoch-versioned :class:`repro.core.memory.CommitBuffer` (the shadow
+    queue's deferred-commit path, staged in shuffled order + flag updates
+    with duplicate targets) so the buffer's sorted apply is pinned
+    bit-identical across both store flavours too. Returns a summary
+    dict."""
     import numpy as np
 
     cfg = mem.MemoryConfig(capacity=capacity, embed_dim=embed_dim,
@@ -394,6 +399,7 @@ def parity_selftest(capacity: int = 64, embed_dim: int = 16,
     single = mem.init_memory(cfg)
     sharded = ShardedMemory(cfg)
     checks = 0
+    deferred_epochs = 0
     for step in range(n_commits):
         K = int(rng.integers(1, max(2, capacity // 2)))
         embs = rng.normal(size=(K, embed_dim)).astype(np.float32)
@@ -406,8 +412,29 @@ def parity_selftest(capacity: int = 64, embed_dim: int = 16,
         now = (np.arange(K) + step * capacity).astype(np.int32)
         args = (jnp.asarray(embs), jnp.asarray(guides), jnp.asarray(hg),
                 jnp.asarray(hd), jnp.asarray(now))
-        single = mem.add_batch(single, *args)
-        sharded.add_batch(*args)
+        if step % 2:
+            # deferred-commit sweep: stage in a shuffled order (the apply
+            # must sort by logical time), plus flag updates incl. a
+            # duplicate touch target (last-now-wins) — one epoch apply
+            # per store, then the usual bit-identical query checks below
+            order = rng.permutation(K)
+            stores = [single, sharded]
+            for si, store in enumerate(stores):
+                buf = mem.CommitBuffer()
+                for j in order:
+                    buf.stage_add(embs[j], guides[j], bool(hg[j]),
+                                  bool(hd[j]), int(now[j]))
+                t = int(now[-1])
+                buf.stage_touch(0, t + 1)
+                buf.stage_touch(0, t + 2)      # duplicate → later now wins
+                buf.stage_soft_clear(1, t + 1)
+                stores[si], n = buf.apply(store)
+                assert n == K and buf.epoch == 1 and buf.pending == 0
+            single, sharded = stores
+            deferred_epochs += 1
+        else:
+            single = mem.add_batch(single, *args)
+            sharded.add_batch(*args)
 
         qs = rng.normal(size=(n_queries, embed_dim)).astype(np.float32)
         qs /= np.linalg.norm(qs, axis=1, keepdims=True)
@@ -449,8 +476,10 @@ def parity_selftest(capacity: int = 64, embed_dim: int = 16,
                 assert np.array_equal(a1k.meta, b1k.meta), (step, k)
                 checks += 2 * n_queries * k + 2 * k
     assert sharded.size_fast == single.size_fast
+    assert deferred_epochs > 0, "deferred-commit sweep never ran"
     return {"shards": sharded.shards, "capacity": capacity,
             "checks": checks, "topk_checked": topks,
+            "deferred_commit_epochs": deferred_epochs,
             "bit_identical": True}
 
 

@@ -1,10 +1,14 @@
 """Microbatched RAR controller — the batched data plane over the §III
-procedure.
+procedure, with the shadow plane decoupled onto a queue.
 
 :class:`MicrobatchRAR` serves B requests per step with the *same* routing
 semantics as the sequential :class:`repro.core.rar.RAR`, restructured so
 every layer touches the device once per microbatch instead of once per
-request:
+request — and so that *learning* (shadow inference + memory commits) is
+scheduled separately from *serving*:
+
+**Serve plane** (:meth:`MicrobatchRAR.process_batch` — the user-facing
+critical path):
 
 1. **Embed** the whole microbatch (or accept precomputed embeddings).
 2. **Query memory once** — the multi-query top-k kernel
@@ -15,35 +19,49 @@ request:
 3. **Partition** requests into {memory_hard, memory_guide, memory_skill,
    router_weak, shadow} by the batched similarities and the static router.
 4. **Serve each group with one sweep per FM tier**: strong answers for
-   memory_hard + shadow come from one ``answer_batch``; all weak work
-   (guided hits, bare hits, router passthroughs, shadow weak-probes) is one
-   weak sweep through the length-bucketed serving path.
-5. **Shadow inference as three batched sweeps**: weak-alone probe,
-   guide-from-memory probe, fresh-guide probe (one ``generate_guides``
-   call for every request that needs one).
-6. **Commit once**: all memory inserts of the microbatch land in a single
-   :func:`repro.core.memory.add_batch` scatter, followed by the
-   re-probe ``mark_soft``/``touch`` updates.
+   memory_hard + shadow come from one ``answer_batch``; all weak *serve*
+   work (guided hits, bare hits, router passthroughs) is one weak sweep
+   through the length-bucketed serving path.
+5. **Enqueue shadow work**: each shadow request becomes a
+   :class:`repro.core.shadow.ShadowItem` on the controller's
+   :class:`~repro.core.shadow.ShadowQueue` and ``process_batch`` returns
+   — with ``cfg.shadow_mode="async"`` the serve step pays for the serve
+   sweeps alone.
 
-Microbatch-commit semantics (documented contract): within a microbatch all
-memory reads observe the store snapshot at step start and all writes commit
-at step end. At B = 1 this reduces *exactly* to ``RAR.process`` — identical
-Outcome stream, memory state and FM-call counts (asserted by
-``tests/test_pipeline.py``). At B > 1 a request cannot hit an entry written
-earlier in the same microbatch; duplicate skills inside one microbatch each
-run their own shadow pass and insert their own entry (first hit lands one
-microbatch later). This is the standard staleness/throughput trade of
-batched vector-DB serving and the basis for every future scaling PR
-(sharded memory, async shadow queues, multi-host serving).
+**Shadow plane** (:meth:`MicrobatchRAR._drain_shadow`, invoked by the
+queue per its drain mode — inline every batch, deferred at barriers, or
+on a background thread): coalesces pending items from one or more serve
+batches into a shadow-microbatch and runs the three batched sweeps
+(weak-alone probe, guide-from-memory probe, fresh-guide generation +
+probe). All memory writes are staged in an epoch-versioned
+:class:`repro.core.memory.CommitBuffer` and land atomically at the end of
+the drain, so a serve-plane query never observes a partially-applied
+shadow batch.
+
+Commit semantics (documented contract): within a microbatch all memory
+reads observe the store snapshot at step start; shadow writes commit at
+drain-epoch end. With ``shadow_mode="inline"`` (the default) every batch
+drains before ``process_batch`` returns and at B = 1 this reduces
+*exactly* to ``RAR.process`` — identical Outcome stream, memory state and
+FM-call counts (asserted by ``tests/test_pipeline.py``).
+``shadow_mode="deferred"`` with ``shadow_flush_every=1`` runs the
+identical schedule through the queue machinery and is byte-identical to
+inline (asserted by ``tests/test_shadow.py`` — the machine-checkable
+anchor async correctness hangs on). Deferring drains further (flush
+cadence > 1, or async) widens the staleness window: a request cannot hit
+an entry whose shadow pass has not drained yet, and duplicate skills
+enqueued before a drain each run their own shadow pass. This is the
+standard staleness/throughput trade of batched vector-DB serving; shadow
+requests return provisional ``case="shadow_pending"`` Outcomes that the
+drainer resolves in place (final after any ``flush_shadow`` barrier).
 """
 from __future__ import annotations
-
-import dataclasses
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import memory as mem
+from repro.core import shadow as shq
 from repro.core.rar import RAR, Outcome, select_guides, splice_guides
 
 
@@ -67,21 +85,25 @@ def _guides(tier, greqs: list[np.ndarray], guide_len: int) -> np.ndarray:
     return np.asarray(tier.generate_guides(greqs, guide_len))
 
 
-@dataclasses.dataclass
-class _Shadow:
-    """Per-request shadow-inference bookkeeping inside one microbatch."""
-    req: int                      # index into the microbatch
-    now: int                      # this request's logical time
-    reprobe_index: int | None     # hard entry being re-probed, if any
-    strong_ans: int = -1
-    strong_calls: int = 1
-    outcome: Outcome | None = None
-
-
 class MicrobatchRAR(RAR):
     """Batched controller. Inherits the sequential ``process`` (so a
     microbatch of 1 can also be served request-at-a-time if desired) and
-    adds :meth:`process_batch`."""
+    adds :meth:`process_batch` plus the queue-scheduled shadow plane."""
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.shadow = shq.ShadowQueue(runner=self._drain_shadow,
+                                      mode=self.cfg.shadow_mode,
+                                      flush_every=self.cfg.shadow_flush_every)
+
+    # ------------------------------------------------------------------
+    def flush_shadow(self) -> None:
+        """Barrier: drain all pending shadow items and apply their
+        commits; every outstanding Outcome is resolved on return."""
+        self.shadow.flush()
+
+    def close_shadow(self) -> None:
+        self.shadow.close()
 
     # ------------------------------------------------------------------
     def _lookup_batch(self, embs, guides_only: bool = False
@@ -93,6 +115,17 @@ class MicrobatchRAR(RAR):
                                     self.cfg.retrieval_k,
                                     guides_only=guides_only).device_get()
 
+    def _snapshot_lookup(self, embs, guides_only: bool = False
+                         ) -> mem.TopKResult:
+        """A read under the queue's store lock: the drainer's commit
+        apply and this snapshot serialize, so the result always reflects
+        a whole number of drain epochs (no torn multi-field reads on the
+        mutable sharded store)."""
+        with self.shadow.store_lock:
+            return self._lookup_batch(embs, guides_only=guides_only)
+
+    # ------------------------------------------------------------------
+    # Serve plane
     # ------------------------------------------------------------------
     def process_batch(self, prompts: list[np.ndarray],
                       guide_requests: list[np.ndarray],
@@ -122,8 +155,13 @@ class MicrobatchRAR(RAR):
         # start). One dispatch (kernel + fused metadata epilogue) and one
         # host transfer of the packed struct — not a per-field gather
         # each. Entry [i, 0] is request i's top-1 routing decision; the
-        # tail entries feed multi-guide splicing.
-        q = self._lookup_batch(embs)
+        # tail entries feed multi-guide splicing. The host-side ring
+        # pointer is captured under the same lock: re-probe flag updates
+        # staged later carry it so the commit buffer can drop them if an
+        # intervening drain epoch evicts the target slot.
+        with self.shadow.store_lock:
+            q = self._lookup_batch(embs)
+            ptr_snap = self._ptr_base + self._host_commits
         sims = q.sim[:, 0]
         hards = q.hard[:, 0]
         has_guides = q.has_guide[:, 0]
@@ -136,7 +174,7 @@ class MicrobatchRAR(RAR):
         g_guide: list[int] = []       # memory_guide → weak + stored guide
         g_skill: list[int] = []       # memory_skill → weak unaided
         g_router: list[int] = []      # router_weak  → weak unaided
-        shadows: list[_Shadow] = []   # strong serves + background probes
+        g_shadow: list[tuple[int, int | None]] = []   # (req, reprobe idx)
         for i in range(B):
             if sims[i] >= self.cfg.sim_threshold:
                 if bool(hards[i]):
@@ -144,7 +182,7 @@ class MicrobatchRAR(RAR):
                     if age < self.cfg.reprobe_period:
                         g_hard.append(i)
                     else:
-                        shadows.append(_Shadow(i, nows[i], int(hit_idxs[i])))
+                        g_shadow.append((i, int(hit_idxs[i])))
                 elif bool(has_guides[i]):
                     g_guide.append(i)
                 else:
@@ -152,22 +190,34 @@ class MicrobatchRAR(RAR):
             elif self.route_weak_fn(np.asarray(embs[i]), keys[i]):
                 g_router.append(i)
             else:
-                shadows.append(_Shadow(i, nows[i], None))
+                g_shadow.append((i, None))
 
-        # ---- phase 3: one strong sweep (memory_hard + shadow requests)
-        strong_reqs = g_hard + [s.req for s in shadows]
+        # ---- phase 3: one strong sweep (memory_hard + shadow requests).
+        # The shadow requests' strong answer is user-facing (§III-D: the
+        # strong FM serves while learning happens in the background), so
+        # it stays on the serve plane.
+        items: list[shq.ShadowItem] = []
+        strong_reqs = g_hard + [i for i, _ in g_shadow]
         if strong_reqs:
             strong_ans = _answers(self.strong, [prompts[i]
                                                 for i in strong_reqs])
             for i, a in zip(g_hard, strong_ans):
                 outcomes[i] = Outcome(int(a), "strong", 1, "memory_hard")
-            for s, a in zip(shadows, strong_ans[len(g_hard):]):
-                s.strong_ans = int(a)
+            for (i, reprobe), a in zip(g_shadow, strong_ans[len(g_hard):]):
+                out = Outcome(int(a), "strong", 1, shq.PENDING)
+                outcomes[i] = out
+                items.append(shq.ShadowItem(
+                    seq=self.shadow.next_seq(), now=nows[i],
+                    prompt=prompts[i], guide_request=guide_requests[i],
+                    emb=np.asarray(embs[i]), strong_ans=int(a),
+                    outcome=out, reprobe_index=reprobe,
+                    ptr_snapshot=ptr_snap))
 
-        # ---- phase 4: one weak sweep (guided hits, bare hits, router
-        # passthroughs, shadow weak-alone probes)
+        # ---- phase 4: one weak *serve* sweep (guided hits, bare hits,
+        # router passthroughs). Shadow weak probes are not serve work and
+        # run in the drain instead.
         weak_prompts: list[np.ndarray] = []
-        weak_tags: list[tuple[str, object]] = []
+        weak_tags: list[tuple[str, int]] = []
         for i in g_guide:
             weak_prompts.append(splice_guides(
                 prompts[i], select_guides(q.sim[i], q.has_guide[i],
@@ -181,147 +231,120 @@ class MicrobatchRAR(RAR):
         for i in g_router:
             weak_prompts.append(prompts[i])
             weak_tags.append(("router", i))
-        for s in shadows:
-            weak_prompts.append(prompts[s.req])
-            weak_tags.append(("shadow", s))
-
-        records: list[tuple[int, np.ndarray, np.ndarray, bool, bool, int]]
-        records = []          # (req, emb, guide, has_guide, hard, now)
-        soft_clears: list[tuple[int, int]] = []    # (req, memory index)
-        touches: list[tuple[int, int, int]] = []   # (req, index, now)
-        empty_guide = np.zeros((self.cfg.memory.guide_len,), np.int32)
-
-        def record(s: _Shadow, guide, has_guide, hard):
-            records.append((s.req, embs[s.req], guide, has_guide, hard,
-                            s.now))
-            if s.reprobe_index is not None and not hard:
-                soft_clears.append((s.req, s.reprobe_index))
-
-        pending: list[_Shadow] = []
         if weak_prompts:
             weak_ans = _answers(self.weak, weak_prompts)
-            for (tag, ref), a in zip(weak_tags, weak_ans):
+            for (tag, i), a in zip(weak_tags, weak_ans):
                 a = int(a)
                 if tag == "guide":
-                    outcomes[ref] = Outcome(a, "weak", 0, "memory_guide",
-                                            guide_source="memory")
+                    outcomes[i] = Outcome(a, "weak", 0, "memory_guide",
+                                          guide_source="memory")
                 elif tag == "skill":
-                    outcomes[ref] = Outcome(a, "weak", 0, "memory_skill")
-                elif tag == "router":
-                    outcomes[ref] = Outcome(a, "weak", 0, "router_weak")
-                else:                                  # shadow Case 1 probe
-                    s: _Shadow = ref
-                    if self.aligned_fn(a, s.strong_ans):
-                        record(s, empty_guide, False, False)
-                        s.outcome = Outcome(
-                            s.strong_ans, "strong", s.strong_calls,
-                            "case1_reprobe" if s.reprobe_index is not None
-                            else "case1")
-                    else:
-                        pending.append(s)
+                    outcomes[i] = Outcome(a, "weak", 0, "memory_skill")
+                else:
+                    outcomes[i] = Outcome(a, "weak", 0, "router_weak")
 
-        # ---- phase 5: shadow sweep 2 — guide-from-memory probes (against
-        # the same batch-start snapshot)
-        still: list[_Shadow] = []
+        # ---- phase 5: hand the shadow work to the queue. Inline mode
+        # drains here; deferred/async return after the serve sweeps alone.
+        self.shadow.submit(items)
+        return outcomes
+
+    # ------------------------------------------------------------------
+    # Shadow plane (runs wherever the queue schedules it)
+    # ------------------------------------------------------------------
+    def _drain_shadow(self, items: list[shq.ShadowItem]) -> None:
+        """Run the three batched shadow sweeps over one coalesced drain
+        epoch and apply all resulting memory writes atomically."""
+        buf = self.shadow.buffer
+        empty_guide = np.zeros((self.cfg.memory.guide_len,), np.int32)
+
+        def record(it: shq.ShadowItem, guide, has_guide, hard):
+            buf.stage_add(it.emb, guide, has_guide, hard, it.now)
+            if it.reprobe_index is not None and not hard:
+                buf.stage_soft_clear(it.reprobe_index, it.now,
+                                     it.ptr_snapshot)
+
+        def resolve(it: shq.ShadowItem, case: str, guide_source=None):
+            it.outcome.strong_calls = it.strong_calls
+            it.outcome.case = case
+            it.outcome.guide_source = guide_source
+
+        # ---- sweep 1: weak-alone probes (Case 1)
+        weak_ans = _answers(self.weak, [it.prompt for it in items])
+        pending: list[shq.ShadowItem] = []
+        for it, a in zip(items, weak_ans):
+            if self.aligned_fn(int(a), it.strong_ans):
+                record(it, empty_guide, False, False)
+                resolve(it, "case1_reprobe" if it.reprobe_index is not None
+                        else "case1")
+            else:
+                pending.append(it)
+
+        # ---- sweep 2: guide-from-memory probes (Case 2a), against the
+        # store snapshot at drain start
+        still: list[shq.ShadowItem] = []
         if pending:
-            gq = self._lookup_batch(embs[[s.req for s in pending]],
-                                    guides_only=True)
-            probes, probe_shadows, probe_guides = [], [], []
-            for j, s in enumerate(pending):
+            gq = self._snapshot_lookup(
+                np.stack([it.emb for it in pending]), guides_only=True)
+            probes, probe_items, probe_guides = [], [], []
+            for j, it in enumerate(pending):
                 if gq.sim[j, 0] >= self.cfg.guide_sim_threshold:
                     guides = select_guides(gq.sim[j], gq.has_guide[j],
                                            gq.guide[j],
                                            self.cfg.guide_sim_threshold,
                                            self.cfg.max_guides)
-                    probes.append(splice_guides(prompts[s.req], guides))
-                    probe_shadows.append(s)
+                    probes.append(splice_guides(it.prompt, guides))
+                    probe_items.append(it)
                     # on success the *top* guide is recorded (one guide
                     # block per stored entry), matching the sequential
                     # controller
                     probe_guides.append(guides[0])
                 else:
-                    still.append(s)
+                    still.append(it)
             if probes:
                 probe_ans = _answers(self.weak, probes)
-                for s, g, a in zip(probe_shadows, probe_guides, probe_ans):
-                    if self.aligned_fn(int(a), s.strong_ans):
+                for it, g, a in zip(probe_items, probe_guides, probe_ans):
+                    if self.aligned_fn(int(a), it.strong_ans):
                         self.guides_from_memory += 1
-                        record(s, g, True, False)
-                        s.outcome = Outcome(s.strong_ans, "strong",
-                                            s.strong_calls, "case2",
-                                            guide_source="memory")
+                        record(it, g, True, False)
+                        resolve(it, "case2", "memory")
                     else:
-                        still.append(s)
-            still.sort(key=lambda s: s.req)
+                        still.append(it)
+            still.sort(key=lambda it: it.seq)
 
-        # ---- phase 6: shadow sweep 3 — fresh guides (one strong
-        # generate_guides sweep) + guided weak probes
-        failed: list[_Shadow] = []
+        # ---- sweep 3: fresh guides (one strong generate_guides sweep)
+        # + guided weak probes (Case 2b)
+        failed: list[shq.ShadowItem] = []
         if still and self.cfg.allow_fresh_guides:
-            for s in still:
-                s.strong_calls += 1
+            for it in still:
+                it.strong_calls += 1
             fresh = _guides(self.strong,
-                            [guide_requests[s.req] for s in still],
+                            [it.guide_request for it in still],
                             self.cfg.memory.guide_len)
             probe_ans = _answers(self.weak,
-                                 [splice_guides(prompts[s.req], [g])
-                                  for s, g in zip(still, fresh)])
-            for s, g, a in zip(still, fresh, probe_ans):
-                if self.aligned_fn(int(a), s.strong_ans):
+                                 [splice_guides(it.prompt, [g])
+                                  for it, g in zip(still, fresh)])
+            for it, g, a in zip(still, fresh, probe_ans):
+                if self.aligned_fn(int(a), it.strong_ans):
                     self.guides_generated += 1
-                    record(s, g, True, False)
-                    s.outcome = Outcome(s.strong_ans, "strong",
-                                        s.strong_calls, "case2",
-                                        guide_source="fresh")
+                    record(it, g, True, False)
+                    resolve(it, "case2", "fresh")
                 else:
-                    failed.append(s)
+                    failed.append(it)
         else:
             failed = still
 
-        for s in failed:                               # Case 3
-            if s.reprobe_index is not None:
-                touches.append((s.req, s.reprobe_index, s.now))
+        for it in failed:                              # Case 3
+            if it.reprobe_index is not None:
+                buf.stage_touch(it.reprobe_index, it.now, it.ptr_snapshot)
             else:
-                record(s, empty_guide, False, True)
-            s.outcome = Outcome(s.strong_ans, "strong", s.strong_calls,
-                                "case3")
-        for s in shadows:
-            outcomes[s.req] = s.outcome
+                record(it, empty_guide, False, True)
+            resolve(it, "case3")
 
-        # ---- phase 7: one commit — adds first (matching sequential
-        # add-then-flag order), then re-probe flag updates, in request
-        # order. Flag updates target *pre-batch* entries; if the FIFO
-        # scatter just evicted one (full ring), the update would hit an
-        # unrelated fresh entry — e.g. clear the hard flag another request
-        # just recorded — so those are dropped.
-        overwritten: set[int] = set()
-        if records:
-            records.sort(key=lambda r: r[0])
-            C = self.memory.capacity
-            base_ptr = int(self.memory.ptr)
-            overwritten = {(base_ptr + j) % C for j in range(len(records))}
-            self.memory = mem.add_batch(
-                self.memory,
-                jnp.asarray(np.stack([r[1] for r in records])),
-                jnp.asarray(np.stack([np.asarray(r[2], np.int32)
-                                      for r in records])),
-                jnp.asarray(np.asarray([r[3] for r in records], bool)),
-                jnp.asarray(np.asarray([r[4] for r in records], bool)),
-                jnp.asarray(np.asarray([r[5] for r in records], np.int32)))
-        soft_clears = [s for s in soft_clears if s[1] not in overwritten]
-        if soft_clears:
-            self.memory = mem.mark_soft(
-                self.memory,
-                jnp.asarray(sorted({idx for _, idx in soft_clears}),
-                            jnp.int32))
-        # dedupe duplicate slots last-request-wins (scatter order for
-        # duplicate indices is implementation-defined) — matches the
-        # sequential controller, where the later touch lands last
-        by_idx = {idx: now for _, idx, now in sorted(touches)
-                  if idx not in overwritten}
-        if by_idx:
-            self.memory = mem.touch(
-                self.memory,
-                jnp.asarray(sorted(by_idx), jnp.int32),
-                jnp.asarray([by_idx[i] for i in sorted(by_idx)], jnp.int32))
-        return outcomes
+        # ---- one epoch apply: adds first (FIFO order by logical time,
+        # matching the sequential add-then-flag order), then re-probe
+        # flag updates; flag updates whose pre-epoch slot this epoch's
+        # scatter just evicted are dropped (CommitBuffer contract). The
+        # store swap serializes with serve-plane snapshot reads.
+        with self.shadow.store_lock:
+            self.memory, n = buf.apply(self.memory)
+            self._host_commits += n

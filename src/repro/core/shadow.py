@@ -1,0 +1,225 @@
+"""Async shadow queue — continuous learning off the serve critical path.
+
+RAR's adaptation loop (§III-D: weak-FM probes, strong-FM guide
+generation, memory commits) is auxiliary work: the user already holds the
+strong answer when it starts. The PR-1 microbatch controller ran it
+*inside* ``process_batch``, so user-facing latency paid for learning. The
+:class:`ShadowQueue` decouples the two planes: the serve sweep enqueues
+one :class:`ShadowItem` per shadow request and returns; a drainer
+coalesces pending items into shadow-microbatches, runs the three batched
+shadow sweeps (weak-alone, guide-from-memory, fresh-guide) and lands all
+memory writes through an epoch-versioned
+:class:`repro.core.memory.CommitBuffer`, so in-flight queries always read
+a consistent store snapshot.
+
+Drain modes (``RARConfig.shadow_mode``)
+---------------------------------------
+* ``"inline"`` — drain synchronously inside every ``process_batch``
+  (the PR-1 behaviour; the default).
+* ``"deferred"`` — items accumulate across batches and drain
+  synchronously at **barrier points**: automatically once
+  ``shadow_flush_every`` batches are pending (0 = only on explicit
+  :meth:`flush`). Because the drain runs the *identical schedule* on the
+  caller's thread, ``deferred`` with flush-every-batch is byte-identical
+  to ``inline`` — the machine-checkable equivalence hook that
+  ``tests/test_shadow.py`` pins async correctness against.
+* ``"async"`` — a daemon drainer thread wakes once ``shadow_flush_every``
+  batches are pending and drains in the background; :meth:`flush` is the
+  synchronous barrier (waits for the queue to empty and all commits to
+  apply, re-raising any drainer exception).
+
+Outcome resolution: shadow requests return immediately with the strong
+answer and a provisional ``case="shadow_pending"`` Outcome; the drainer
+mutates the same Outcome object in place (case, strong_calls,
+guide_source) when its shadow pass resolves. After a :meth:`flush`
+barrier every outstanding outcome is final.
+
+Consistency: all store mutations (the drainer's commit-buffer apply) and
+the serve path's snapshot reads happen under :attr:`store_lock`. For the
+functional ``MemoryState`` the apply is a single reference swap; for the
+mutable ``ShardedMemory`` the lock is what makes the multi-field update
+atomic with respect to readers.
+
+The queue itself is policy-free: the controller passes its drain function
+(``MicrobatchRAR._drain_shadow``) as ``runner``; the queue only schedules
+— coalescing, barriers, and the worker thread. ``drain_delay`` injects a
+sleep before each drain (stress/soak-test hook, keep 0 in production).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+
+import numpy as np
+
+from repro.core.rar import Outcome
+
+MODES = ("inline", "deferred", "async")
+
+#: provisional case label carried by a shadow request's Outcome until its
+#: drain resolves it to case1/case2/case3
+PENDING = "shadow_pending"
+
+
+@dataclasses.dataclass
+class ShadowItem:
+    """One shadow request in flight: everything the drainer needs to run
+    the three probe sweeps and resolve the provisional outcome."""
+    seq: int                      # global enqueue order (drain tie-break)
+    now: int                      # the request's logical time
+    prompt: np.ndarray
+    guide_request: np.ndarray
+    emb: np.ndarray
+    strong_ans: int               # user-facing answer, already served
+    outcome: Outcome              # provisional; resolved in place at drain
+    reprobe_index: int | None = None   # hard entry being re-probed, if any
+    ptr_snapshot: int | None = None    # ring pointer at classification —
+    #                                    eviction guard for the re-probe
+    #                                    flag update (CommitBuffer)
+    strong_calls: int = 1
+
+
+class ShadowQueue:
+    """Coalescing drain scheduler for the shadow plane (see module doc).
+
+    ``runner(items)`` performs the actual shadow sweeps + commit apply;
+    the queue guarantees each enqueued item is passed to ``runner``
+    exactly once, in enqueue order, coalesced per drain epoch.
+    """
+
+    def __init__(self, runner, mode: str = "inline", flush_every: int = 1,
+                 buffer=None, drain_delay: float = 0.0):
+        if mode not in MODES:
+            raise ValueError(f"shadow mode {mode!r} not in {MODES}")
+        from repro.core.memory import CommitBuffer
+        self.runner = runner
+        self.mode = mode
+        self.flush_every = flush_every
+        self.buffer = buffer if buffer is not None else CommitBuffer()
+        self.drain_delay = drain_delay
+        self.store_lock = threading.RLock()
+        self._cv = threading.Condition()
+        self._items: list[ShadowItem] = []
+        self._batches = 0             # batches pending since last drain
+        self._seq = 0
+        self._flush_requested = False
+        self._draining = False
+        self._stop = False
+        self._worker: threading.Thread | None = None
+        self._error: BaseException | None = None
+        # host-side stats (single GIL-protected writers)
+        self.items_enqueued = 0
+        self.items_drained = 0
+        self.drains = 0
+
+    # -- enqueue --------------------------------------------------------
+    def next_seq(self) -> int:
+        self._seq += 1
+        return self._seq
+
+    def submit(self, items: list[ShadowItem]) -> None:
+        """Enqueue one serve batch's shadow items (may be empty — an empty
+        batch still counts toward the flush cadence so drain latency is
+        bounded in requests, not in shadow traffic)."""
+        self._reraise()
+        if self.mode == "inline":
+            self.items_enqueued += len(items)
+            if items:
+                self._drain(items)
+            return
+        with self._cv:
+            self._items.extend(items)
+            self.items_enqueued += len(items)
+            self._batches += 1
+            due = self.flush_every > 0 and self._batches >= self.flush_every
+            if self.mode == "async":
+                if due:
+                    self._ensure_worker()
+                    self._cv.notify_all()
+                return
+        if due:                       # deferred: drain on caller thread
+            self.flush()
+
+    # -- barriers -------------------------------------------------------
+    def flush(self) -> None:
+        """Synchronous barrier: drain everything pending and apply all
+        commits before returning. In async mode, waits for the worker (and
+        re-raises any exception it hit)."""
+        if self.mode == "async" and self._worker is not None \
+                and self._worker.is_alive():
+            with self._cv:
+                self._flush_requested = True
+                self._cv.notify_all()
+                self._cv.wait_for(
+                    lambda: (not self._items and not self._draining)
+                    or self._error is not None)
+                self._flush_requested = False
+            self._reraise()
+            return
+        items = self._take()
+        if items:
+            self._drain(items)
+
+    def close(self) -> None:
+        """Flush, then stop the worker thread. Idempotent; a later submit
+        in async mode lazily restarts the worker."""
+        self.flush()
+        if self._worker is not None:
+            with self._cv:
+                self._stop = True
+                self._cv.notify_all()
+            self._worker.join(timeout=60)
+            self._worker = None
+            self._stop = False
+
+    # -- internals ------------------------------------------------------
+    def _take(self) -> list[ShadowItem]:
+        with self._cv:
+            items, self._items = self._items, []
+            self._batches = 0
+            return items
+
+    def _drain(self, items: list[ShadowItem]) -> None:
+        if self.drain_delay:
+            import time
+            time.sleep(self.drain_delay)
+        self.runner(items)
+        self.items_drained += len(items)
+        self.drains += 1
+
+    def _reraise(self) -> None:
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError("shadow drainer failed") from err
+
+    def _ensure_worker(self) -> None:
+        if self._worker is None or not self._worker.is_alive():
+            self._worker = threading.Thread(target=self._loop,
+                                            name="shadow-drainer",
+                                            daemon=True)
+            self._worker.start()
+
+    def _due_locked(self) -> bool:
+        if not self._items:
+            return False
+        return self._flush_requested or (
+            self.flush_every > 0 and self._batches >= self.flush_every)
+
+    def _loop(self) -> None:
+        while True:
+            with self._cv:
+                self._cv.wait_for(lambda: self._stop or self._due_locked())
+                if self._stop and not self._items:
+                    return
+                items, self._items = self._items, []
+                self._batches = 0
+                self._draining = True
+            try:
+                if items:
+                    self._drain(items)
+            except BaseException as e:   # surfaced at the next barrier
+                self._error = e
+            finally:
+                with self._cv:
+                    self._draining = False
+                    self._cv.notify_all()

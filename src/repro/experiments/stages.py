@@ -61,6 +61,8 @@ def run_rar_experiment(system: TrainedSystem, pool: list[Sample], *,
                        microbatch: int = 1,
                        retrieval_k: int | None = None,
                        max_guides: int | None = None,
+                       shadow_mode: str | None = None,
+                       shadow_flush_every: int | None = None,
                        verbose: bool = False,
                        progress_every: int = 0
                        ) -> tuple[list[StageResult], RAR]:
@@ -82,10 +84,19 @@ def run_rar_experiment(system: TrainedSystem, pool: list[Sample], *,
     spliced into the weak FM's prompt. ``None`` keeps what ``rar_cfg``
     says (top-1 by default, the paper's procedure).
 
+    ``shadow_mode``/``shadow_flush_every``: override the shadow-plane
+    scheduling of ``rar_cfg`` (microbatch > 1 only): ``"inline"`` runs
+    shadow inference inside every controller step (the default),
+    ``"deferred"``/``"async"`` take it off the serve path and drain every
+    ``shadow_flush_every`` batches (see :mod:`repro.core.shadow`). A
+    flush barrier runs at every stage end, so per-stage results are exact
+    (all provisional shadow outcomes resolved before tallying) in every
+    mode.
+
     ``progress_every``: print a throughput/memory-occupancy line every N
-    served requests (0 = off). Deliberately throttled: the occupancy read
-    (``memory.size_fast``) transfers a device scalar, so reporting it
-    per request would force a host sync into every serve step.
+    served requests (0 = off). The occupancy read is the controller's
+    host-side commit counter (``rar.memory_occupancy``), so progress
+    logging never syncs a device scalar into the serve loop.
     """
     suite = system.suite
     strong = strong_tier or system.strong
@@ -98,6 +109,15 @@ def run_rar_experiment(system: TrainedSystem, pool: list[Sample], *,
             else retrieval_k)
     elif max_guides is not None:
         rar_cfg = dataclasses.replace(rar_cfg, max_guides=max_guides)
+    if shadow_mode is not None:
+        rar_cfg = dataclasses.replace(
+            rar_cfg, shadow_mode=shadow_mode,
+            shadow_flush_every=shadow_flush_every
+            if shadow_flush_every is not None
+            else rar_cfg.shadow_flush_every)
+    elif shadow_flush_every is not None:
+        rar_cfg = dataclasses.replace(rar_cfg,
+                                      shadow_flush_every=shadow_flush_every)
     prompts, greqs = _prompts(system, pool)
 
     # scoring reference: the strong FM's answers (quality is measured as
@@ -142,9 +162,11 @@ def run_rar_experiment(system: TrainedSystem, pool: list[Sample], *,
     t_serve = time.time()
 
     def progress(batch: int) -> None:
-        """Throttled serve-loop reporting: fires only when the counter
-        crosses a ``progress_every`` boundary, so the ``size_fast`` scalar
-        transfer happens every N requests instead of every request."""
+        """Throttled serve-loop reporting. The occupancy figure comes
+        from the controller's host-side commit counter
+        (``memory_occupancy`` — fed by the shadow commit buffer on the
+        batched path), so this is transfer-free: no device-scalar sync
+        ever lands in the serve loop, at any ``progress_every``."""
         nonlocal served
         before = served
         served += batch
@@ -154,7 +176,7 @@ def run_rar_experiment(system: TrainedSystem, pool: list[Sample], *,
             dt = time.time() - t_serve
             print(f"      [{served}/{n_stages * len(pool)}] "
                   f"{1e3 * dt / served:.1f} ms/request, "
-                  f"memory {rar.memory.size_fast}/"
+                  f"memory {rar.memory_occupancy}/"
                   f"{rar.cfg.memory.capacity}")
 
     results = []
@@ -175,15 +197,21 @@ def run_rar_experiment(system: TrainedSystem, pool: list[Sample], *,
                 gfresh += 1
 
         if microbatch > 1:
+            stage_outs: list[tuple[int, object]] = []
             for start in range(0, len(order), microbatch):
                 chunk = [int(i) for i in order[start:start + microbatch]]
                 outs = rar.process_batch(
                     [prompts[i] for i in chunk],
                     [greqs[i] for i in chunk],
                     keys=chunk, embs=embs[chunk])
-                for i, out in zip(chunk, outs):
-                    tally(i, out)
+                stage_outs += zip(chunk, outs)
                 progress(len(chunk))
+            # stage-end barrier: deferred/async shadow outcomes are
+            # provisional until their drain; flush before tallying so
+            # StageResults are exact in every shadow mode (no-op inline)
+            rar.flush_shadow()
+            for i, out in stage_outs:
+                tally(i, out)
         else:
             for i in order:
                 current["emb"] = emb_by_key[int(i)]

@@ -40,6 +40,24 @@ def main() -> None:
     ap.add_argument("--max-guides", type=int, default=None,
                     help="retrieved guides spliced into the weak FM's "
                          "prompt (default: --retrieval-k)")
+    ap.add_argument("--shadow-mode", default="inline",
+                    choices=["inline", "deferred", "async"],
+                    help="where shadow inference (weak probes, guide "
+                         "generation, memory commits) runs relative to "
+                         "the serve sweep: 'inline' = inside every "
+                         "controller step (the reference behaviour); "
+                         "'deferred' = queued and drained synchronously "
+                         "every --shadow-flush-every batches; 'async' = "
+                         "drained by a background thread so user-facing "
+                         "latency pays for the serve sweep alone. "
+                         "Requires --microbatch > 1.")
+    ap.add_argument("--shadow-flush-every", type=int, default=1,
+                    help="drain the shadow queue every N batches "
+                         "(deferred/async modes; 0 = only at stage-end "
+                         "barriers). Larger values amortize drains at "
+                         "the cost of memory staleness: a request cannot "
+                         "hit a skill whose shadow pass has not drained "
+                         "yet")
     ap.add_argument("--log-every", type=int, default=64,
                     help="serve-loop progress every N requests (0 = off); "
                          "throttled because the memory-occupancy read "
@@ -52,17 +70,24 @@ def main() -> None:
     pool = failing_pool(system, args.domain, n=args.requests)
     print(f"[serve] {len(pool)} requests (weak-FM-failing pool, "
           f"domain {args.domain}); router={args.router}, "
-          f"retrieval_k={args.retrieval_k}")
+          f"retrieval_k={args.retrieval_k}, shadow={args.shadow_mode}")
 
+    if args.shadow_mode != "inline" and args.microbatch <= 1:
+        ap.error("--shadow-mode deferred/async requires --microbatch > 1 "
+                 "(the sequential reference interleaves shadow inference "
+                 "per request)")
     cfg = make_rar_config(sim_threshold=args.sim_threshold,
                           retrieval_k=args.retrieval_k,
                           max_guides=args.max_guides,
+                          shadow_mode=args.shadow_mode,
+                          shadow_flush_every=args.shadow_flush_every,
                           reprobe_period=2 * len(pool))
     t0 = time.time()
     results, rar = run_rar_experiment(
         system, pool, n_stages=args.stages, rar_cfg=cfg,
         router_kind=args.router, microbatch=args.microbatch, verbose=True,
         progress_every=args.log_every)
+    rar.close_shadow()
     dt = time.time() - t0
 
     total = args.stages * len(pool)

@@ -17,6 +17,7 @@ lowers at production shapes — the engine is the single-host driver of it.
 """
 from __future__ import annotations
 
+import threading
 from functools import partial
 from typing import Any, Sequence
 
@@ -70,17 +71,28 @@ class ServingEngine:
         self._jitted: dict[tuple, Any] = {}
         self.calls = 0          # inference calls served (RAR cost metric)
         self.tokens_processed = 0
+        # the async shadow drainer serves sweeps on its own thread while
+        # the serve plane keeps generating — the jit-cache dict and the
+        # cost counters (non-atomic read-modify-writes) need a lock to
+        # stay exact under that concurrency
+        self._lock = threading.Lock()
+
+    def _bill(self, calls: int, tokens: int) -> None:
+        with self._lock:
+            self.calls += calls
+            self.tokens_processed += tokens
 
     def generate(self, batch: dict, max_new: int) -> jax.Array:
         tokens = batch["tokens"]
         key = (tokens.shape, max_new) + tuple(sorted(
             k for k in batch if k != "tokens"))
-        if key not in self._jitted:
-            self._jitted[key] = jax.jit(
-                partial(greedy_generate, self.cfg, max_new=max_new))
-        out = self._jitted[key](params=self.params, batch=batch)
-        self.calls += tokens.shape[0]
-        self.tokens_processed += tokens.size + out.size
+        with self._lock:
+            fn = self._jitted.get(key)
+            if fn is None:
+                fn = self._jitted[key] = jax.jit(
+                    partial(greedy_generate, self.cfg, max_new=max_new))
+        out = fn(params=self.params, batch=batch)
+        self._bill(tokens.shape[0], tokens.size + out.size)
         return out
 
     def generate_bucketed(self, prompts: Sequence[np.ndarray],
@@ -106,7 +118,7 @@ class ServingEngine:
                              (Bp - B))
             got = np.asarray(self.generate({"tokens": jnp.asarray(batch)},
                                            max_new))
-            self.calls -= Bp - B          # padding rows are not requests
+            self._bill(-(Bp - B), 0)      # padding rows are not requests
             out[idxs] = got[:B]
         return out
 

@@ -111,6 +111,9 @@ def test_multi_shard_parity_subprocess():
     # the selftest must have exercised the top-k merge across shards
     # (global top-k == single-device top-k on the same ring, ties incl.)
     assert report["topk_checked"] == [1, 2, 4, 8]
+    # ... and the deferred-commit sweep: epoch-buffered commits (shuffled
+    # staging + flag updates) bit-identical across both store flavours
+    assert report["deferred_commit_epochs"] > 0
 
 
 def test_single_shard_topk_matches_memory_state(rng):
