@@ -6,14 +6,21 @@ multiple passes so the memory warms up) through:
 * the sequential ``RAR.process`` loop (batch-of-1 FM calls, one memory
   read/write round-trip per request),
 * ``MicrobatchRAR.process_batch`` at microbatch sizes 8 and 32 (one
-  multi-query memory pass + one sweep per FM tier per microbatch), and
+  multi-query memory pass + one sweep per FM tier per microbatch),
 * the same microbatch sizes with the shadow plane on the queue
   (``shadow_mode="deferred"`` with a drain barrier after every batch —
   the schedule byte-identical to inline): the serve sweep and the shadow
   drain are timed separately, so the report records **serve-only
   latency** (what an async drainer leaves on the user-facing path) next
   to **end-to-end latency** per request, at identical strong-call
-  counts.
+  counts, and
+* the replicated serving fabric at N ∈ {1, 2, 4} serve replicas
+  (``fabric_rN`` rows): the request pool is sharded into per-replica
+  streams (each question's repeats stay on one stream, so per-stream
+  request order — and therefore routing — is independent of N) and
+  microbatches dispatch to thread-per-replica workers over the shared
+  commit stream. Strong-call counts are asserted identical across all
+  replica counts and to the single-controller microbatch run.
 
 The FM tiers are the paper-analog WEAK/STRONG architectures with random
 (untrained) weights behind the real jitted serving engine — answer content
@@ -42,9 +49,13 @@ from repro.core.pipeline import MicrobatchRAR
 from repro.core.rar import RAR, RARConfig
 from repro.data.tokenizer import Vocab
 from repro.models import init_params
+from repro.serving.fabric import ServingFabric
 
 MICROBATCHES = (8, 32)
 N_PASSES = 2
+FABRIC_REPLICAS = (1, 2, 4)
+FABRIC_MB = 8       # microbatch per dispatch (matches microbatch_8 row)
+FABRIC_STREAMS = 4  # fixed stream shard count, independent of N
 
 
 def _make_tiers():
@@ -138,6 +149,37 @@ def _run_shadow(mode_batch: int, weak, strong, prompts, greqs, embs,
     return strong_calls, serve_s, drain_s
 
 
+def _run_fabric(n_replicas: int, weak, strong, prompts, greqs, embs,
+                cfg: RARConfig):
+    """One full serve of the stream through the replicated fabric.
+
+    The pool is sharded into ``FABRIC_STREAMS`` fixed streams by question
+    index; stream j's microbatches all dispatch to replica ``j % N`` in
+    submission order (per-replica FIFO), so every question's repeats
+    serve in the same relative order at any replica count — routing, and
+    therefore the strong-call count, is invariant in N. Returns total
+    strong calls."""
+    fabric = ServingFabric(weak, strong, lambda p: None,
+                           lambda e, k: False, cfg, replicas=n_replicas)
+    n = len(prompts)
+    streams = [[i for i in range(n) if i % FABRIC_STREAMS == j]
+               for j in range(FABRIC_STREAMS)]
+    tickets = []
+    for _ in range(N_PASSES):
+        for j, idxs in enumerate(streams):
+            for start in range(0, len(idxs), FABRIC_MB):
+                chunk = idxs[start:start + FABRIC_MB]
+                tickets.append(fabric.submit(
+                    [prompts[i] for i in chunk],
+                    [greqs[i] for i in chunk],
+                    keys=chunk, embs=embs[chunk],
+                    replica=j % n_replicas))
+    fabric.flush_shadow()
+    strong_calls = sum(o.strong_calls for t in tickets for o in t.wait())
+    fabric.close_shadow()
+    return strong_calls
+
+
 def main() -> None:
     pool_n = max(32, int(round(64 * min(1.0, SCALE * 2))))
     vocab, weak, strong = _make_tiers()
@@ -183,6 +225,25 @@ def main() -> None:
                       "serve_only_requests_per_sec": round(
                           total_requests / serve_s, 2)}
         rows.append({"mode": f"microbatch_{mb}_shadow", **shadow[mb]})
+
+    # replicated serving fabric: replica-scaling rows at identical routing
+    fabric = {}
+    for nr in FABRIC_REPLICAS:
+        _run_fabric(nr, weak, strong, prompts, greqs, embs, cfg)  # warm
+        t0 = time.perf_counter()
+        strong_calls = _run_fabric(nr, weak, strong, prompts, greqs,
+                                   embs, cfg)
+        dt = time.perf_counter() - t0
+        fabric[nr] = {"replicas": nr,
+                      "microbatch": FABRIC_MB,
+                      "streams": FABRIC_STREAMS,
+                      "requests": total_requests,
+                      "seconds": round(dt, 4),
+                      "requests_per_sec": round(total_requests / dt, 2),
+                      "strong_calls": strong_calls,
+                      "strong_call_ratio": round(
+                          strong_calls / total_requests, 4)}
+        rows.append({"mode": f"fabric_r{nr}", **fabric[nr]})
     emit(rows)
 
     seq, mb32 = results[1], results[32]
@@ -195,6 +256,12 @@ def main() -> None:
     # routing (the deferred schedule is byte-identical to inline)
     shadow_ratio = mb32_sh["end_to_end_ms_per_request"] / \
         mb32_sh["serve_only_ms_per_request"]
+    # replica scaling at identical routing: every fabric row (and the
+    # single-controller microbatch run at the same batch size) must
+    # agree on strong calls — the fabric changes placement, not routing
+    fabric_calls = {nr: fabric[nr]["strong_calls"] for nr in fabric}
+    fabric_match = all(c == results[FABRIC_MB]["strong_calls"]
+                       for c in fabric_calls.values())
     report = {
         "benchmark": "rar_throughput",
         "pool_size": pool_n,
@@ -207,6 +274,11 @@ def main() -> None:
         "serve_only_vs_end_to_end_mb32": round(shadow_ratio, 2),
         "shadow_strong_calls_match_inline_mb32":
             mb32_sh["strong_calls"] == results[32]["strong_calls"],
+        "fabric_replicas": list(FABRIC_REPLICAS),
+        "fabric_strong_calls_match": fabric_match,
+        "fabric_speedup_r4_vs_r1": round(
+            fabric[4]["requests_per_sec"] / fabric[1]["requests_per_sec"],
+            2),
     }
     out = os.environ.get("REPRO_BENCH_OUT", "BENCH_rar_throughput.json")
     with open(out, "w") as f:
@@ -215,7 +287,9 @@ def main() -> None:
           f"(strong-call rel err {rel_err:.2%}); serve-only latency "
           f"{shadow_ratio:.2f}x lower than end-to-end at mb32 "
           f"(strong calls match: "
-          f"{report['shadow_strong_calls_match_inline_mb32']}) → {out}")
+          f"{report['shadow_strong_calls_match_inline_mb32']}); "
+          f"fabric r4 vs r1: {report['fabric_speedup_r4_vs_r1']:.2f}x "
+          f"(strong calls match across replicas: {fabric_match}) → {out}")
 
 
 if __name__ == "__main__":

@@ -75,16 +75,19 @@ def make_rar_config(*, sim_threshold: float = 0.6,
                     retrieval_k: int = 1, max_guides: int | None = None,
                     shadow_mode: str = "inline",
                     shadow_flush_every: int | None = None,
+                    shadow_dedup_sim: float | None = None,
                     **kw) -> RARConfig:
     """The system's RARConfig defaults in one place (thresholds calibrated
     to ``EMBEDDER``, see :class:`repro.core.rar.RARConfig`). The
     multi-guide knobs plumb straight through: ``retrieval_k`` widens every
     memory read to the top-k entries and ``max_guides`` (default: follow
     retrieval_k) caps how many retrieved guides are spliced into the weak
-    FM's prompt. ``shadow_mode``/``shadow_flush_every`` schedule the
-    shadow plane (inline per batch, deferred at barriers, or on a
-    background drainer thread — :mod:`repro.core.shadow`); the flush
-    cadence defaults to every batch. Used by ``launch.serve`` and the
+    FM's prompt. ``shadow_mode``/``shadow_flush_every``/
+    ``shadow_dedup_sim`` schedule the shadow plane (inline per batch,
+    deferred at barriers, or on a background drainer thread, with
+    optional near-duplicate coalescing before each drain —
+    :mod:`repro.core.shadow`); the flush cadence defaults to every batch
+    and coalescing defaults to off. Used by ``launch.serve`` and the
     experiment stages so the serving CLI and the evaluation suite can't
     drift apart."""
     if guide_sim_threshold is None:
@@ -98,4 +101,5 @@ def make_rar_config(*, sim_threshold: float = 0.6,
                      retrieval_k=retrieval_k, max_guides=max_guides,
                      shadow_mode=shadow_mode,
                      shadow_flush_every=shadow_flush_every,
+                     shadow_dedup_sim=shadow_dedup_sim,
                      **kw)

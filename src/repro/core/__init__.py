@@ -1,9 +1,43 @@
+"""RAR core — the §III procedure split into three planes over one
+decision core.
+
+Architecture (decision core / serve plane / learn plane):
+
+* **Decision core** (:mod:`repro.core.decisions`) — pure, side-effect-
+  free classification: request → serving group
+  (``classify``/``partition``), shadow probe stage → store effects +
+  Outcome case (``resolve_shadow_case``), guide selection with
+  near-duplicate dedup (``select_guides``), and shadow coalescing
+  (``coalesce_shadow_items``). Written exactly once; every controller
+  executes it.
+* **Serve plane** — the user-facing critical path.
+  :class:`repro.core.rar.RAR` is the thin batch-of-1 driver (the paper's
+  sequential reference semantics);
+  :class:`repro.core.pipeline.MicrobatchRAR` batches it (one top-k read
+  via :mod:`repro.core.memory` / :mod:`repro.core.memory_sharded`, one
+  sweep per FM tier through the bucketed serving engine);
+  :class:`repro.serving.fabric.ServingFabric` replicates it (N
+  controllers behind a round-robin dispatcher, thread-per-replica).
+* **Learn plane** — shadow inference + memory commits, scheduled off the
+  serve path by the :class:`repro.core.shadow.ShadowQueue`
+  (inline/deferred/async drains, optional near-duplicate coalescing) and
+  landed atomically through the epoch-versioned
+  :class:`repro.core.memory.CommitBuffer`. The
+  :class:`repro.core.memory.CommitStream` is the serve/learn interface:
+  one buffer + store lock + host-side commit counter per serving site,
+  broadcasting every applied epoch to all subscribed replica views.
+
+Equivalence chain (machine-checked): sequential ≡ microbatch B=1 ≡
+deferred flush-every-batch ≡ async with per-batch barrier ≡ 1-replica
+inline fabric — see ``tests/test_pipeline.py``, ``tests/test_shadow.py``
+and ``tests/test_fabric.py``.
+"""
 from repro.core.rar import RAR, RARConfig, Outcome, splice_guide
 from repro.core.pipeline import MicrobatchRAR
 from repro.core.shadow import ShadowItem, ShadowQueue
 from repro.core.fm import FMTier
-from repro.core import memory, embedder, router
+from repro.core import decisions, memory, embedder, router
 
 __all__ = ["RAR", "RARConfig", "Outcome", "splice_guide", "MicrobatchRAR",
-           "ShadowItem", "ShadowQueue", "FMTier", "memory", "embedder",
-           "router"]
+           "ShadowItem", "ShadowQueue", "FMTier", "decisions", "memory",
+           "embedder", "router"]

@@ -46,6 +46,7 @@ contract across devices.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from functools import partial
 
 import jax
@@ -432,6 +433,70 @@ class CommitBuffer:
         self.epoch += 1
         self.entries_applied += len(records)
         return state, len(records)
+
+
+# ---------------------------------------------------------------------------
+# Commit stream — the serve/learn interface around the commit buffer
+# ---------------------------------------------------------------------------
+
+
+class CommitStream:
+    """The serve/learn commit interface of one serving site.
+
+    Generalizes what used to be three per-controller pieces — the shadow
+    queue's ``store_lock``, its :class:`CommitBuffer`, and the
+    controller's private host-side commit counter — into one object that
+    any number of serve replicas can share:
+
+    * :attr:`buffer` — the epoch-versioned staging area for all learn-
+      plane writes (one per stream: every replica's shadow drain stages
+      into the same epochs);
+    * :attr:`lock` — serializes commit applies against serve-plane
+      snapshot reads (for the functional ``MemoryState`` the apply is a
+      reference swap; for the mutable sharded store the lock is what
+      makes the multi-field update atomic for readers);
+    * :attr:`commits` — the **single** host-side counter of entries ever
+      committed, owned here rather than per-controller so
+      ``RAR.memory_occupancy`` stays exact when N replicas share a store
+      (each replica previously counted only its own writes);
+    * subscribed **views** — controllers whose ``.memory`` mirrors the
+      store: every applied epoch is broadcast to all of them under the
+      lock, so replicas always read a whole number of epochs.
+
+    A standalone controller owns a private stream with itself as the only
+    view; the serving fabric (:mod:`repro.serving.fabric`) passes one
+    shared stream to all its replicas.
+    """
+
+    def __init__(self, buffer: CommitBuffer | None = None):
+        self.buffer = buffer if buffer is not None else CommitBuffer()
+        self.lock = threading.RLock()
+        self.commits = 0             # entries ever committed (host-side)
+        self._views: list = []       # controllers mirroring the store
+
+    def subscribe(self, view) -> None:
+        """Register a controller whose ``.memory`` tracks this stream's
+        store (idempotent)."""
+        if view not in self._views:
+            self._views.append(view)
+
+    def count(self, n: int = 1) -> None:
+        """Account ``n`` direct (non-buffered) commits — the sequential
+        controller's per-request writes."""
+        with self.lock:
+            self.commits += n
+
+    def apply(self, state):
+        """Apply the staged epoch to ``state`` and broadcast the new
+        store to every subscribed view atomically (one lock hold covers
+        the apply, the counter bump and all view updates). Returns the
+        new store."""
+        with self.lock:
+            state, n = self.buffer.apply(state)
+            self.commits += n
+            for v in self._views:
+                v.memory = state
+        return state
 
 
 # ---------------------------------------------------------------------------

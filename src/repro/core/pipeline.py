@@ -2,10 +2,11 @@
 procedure, with the shadow plane decoupled onto a queue.
 
 :class:`MicrobatchRAR` serves B requests per step with the *same* routing
-semantics as the sequential :class:`repro.core.rar.RAR`, restructured so
-every layer touches the device once per microbatch instead of once per
-request — and so that *learning* (shadow inference + memory commits) is
-scheduled separately from *serving*:
+semantics as the sequential :class:`repro.core.rar.RAR` — both execute
+the pure decision core (:mod:`repro.core.decisions`) for every
+classification — restructured so every layer touches the device once per
+microbatch instead of once per request, and so that *learning* (shadow
+inference + memory commits) is scheduled separately from *serving*:
 
 **Serve plane** (:meth:`MicrobatchRAR.process_batch` — the user-facing
 critical path):
@@ -17,7 +18,8 @@ critical path):
    all B queries; entry 0 per request is the top-1 routing decision and
    the tail entries feed multi-guide splicing (``cfg.max_guides``).
 3. **Partition** requests into {memory_hard, memory_guide, memory_skill,
-   router_weak, shadow} by the batched similarities and the static router.
+   router_weak, shadow} — :func:`repro.core.decisions.partition` over the
+   batched similarities and the static router.
 4. **Serve each group with one sweep per FM tier**: strong answers for
    memory_hard + shadow come from one ``answer_batch``; all weak *serve*
    work (guided hits, bare hits, router passthroughs) is one weak sweep
@@ -30,13 +32,19 @@ critical path):
 
 **Shadow plane** (:meth:`MicrobatchRAR._drain_shadow`, invoked by the
 queue per its drain mode — inline every batch, deferred at barriers, or
-on a background thread): coalesces pending items from one or more serve
-batches into a shadow-microbatch and runs the three batched sweeps
-(weak-alone probe, guide-from-memory probe, fresh-guide generation +
-probe). All memory writes are staged in an epoch-versioned
-:class:`repro.core.memory.CommitBuffer` and land atomically at the end of
-the drain, so a serve-plane query never observes a partially-applied
-shadow batch.
+on a background thread): optionally coalesces near-duplicate items into
+groups (``cfg.shadow_dedup_sim`` — one shadow pass resolves a whole
+group, reclaiming duplicate-skill probe calls), then runs the three
+batched sweeps over the group leaders (weak-alone probe, guide-from-
+memory probe, fresh-guide generation + probe). What each sweep's
+alignment *means* comes from
+:func:`repro.core.decisions.resolve_shadow_case`. All memory writes are
+staged in the epoch-versioned :class:`repro.core.memory.CommitBuffer`
+and land atomically through the controller's
+:class:`~repro.core.memory.CommitStream` at the end of the drain, so a
+serve-plane query never observes a partially-applied shadow batch —
+and every replica subscribed to the stream (the serving fabric's views)
+receives the applied store in the same atomic step.
 
 Commit semantics (documented contract): within a microbatch all memory
 reads observe the store snapshot at step start; shadow writes commit at
@@ -50,16 +58,18 @@ inline (asserted by ``tests/test_shadow.py`` — the machine-checkable
 anchor async correctness hangs on). Deferring drains further (flush
 cadence > 1, or async) widens the staleness window: a request cannot hit
 an entry whose shadow pass has not drained yet, and duplicate skills
-enqueued before a drain each run their own shadow pass. This is the
-standard staleness/throughput trade of batched vector-DB serving; shadow
-requests return provisional ``case="shadow_pending"`` Outcomes that the
-drainer resolves in place (final after any ``flush_shadow`` barrier).
+enqueued before a drain each run their own shadow pass unless
+``shadow_dedup_sim`` coalesces them. This is the standard
+staleness/throughput trade of batched vector-DB serving; shadow requests
+return provisional ``case="shadow_pending"`` Outcomes that the drainer
+resolves in place (final after any ``flush_shadow`` barrier).
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import decisions
 from repro.core import memory as mem
 from repro.core import shadow as shq
 from repro.core.rar import RAR, Outcome, select_guides, splice_guides
@@ -92,9 +102,21 @@ class MicrobatchRAR(RAR):
 
     def __init__(self, *args, **kwargs):
         super().__init__(*args, **kwargs)
-        self.shadow = shq.ShadowQueue(runner=self._drain_shadow,
-                                      mode=self.cfg.shadow_mode,
-                                      flush_every=self.cfg.shadow_flush_every)
+        self.shadow = self._make_shadow_queue()
+
+    def _shadow_runner(self):
+        """The queue's drain callable. The fabric's replicas override
+        this so a single learn replica owns every drain."""
+        return self._drain_shadow
+
+    def _make_shadow_queue(self) -> shq.ShadowQueue:
+        """Build the controller's shadow queue, staged into (and locked
+        against) the commit stream."""
+        return shq.ShadowQueue(runner=self._shadow_runner(),
+                               mode=self.cfg.shadow_mode,
+                               flush_every=self.cfg.shadow_flush_every,
+                               buffer=self.commit_stream.buffer,
+                               store_lock=self.commit_stream.lock)
 
     # ------------------------------------------------------------------
     def flush_shadow(self) -> None:
@@ -117,10 +139,10 @@ class MicrobatchRAR(RAR):
 
     def _snapshot_lookup(self, embs, guides_only: bool = False
                          ) -> mem.TopKResult:
-        """A read under the queue's store lock: the drainer's commit
-        apply and this snapshot serialize, so the result always reflects
-        a whole number of drain epochs (no torn multi-field reads on the
-        mutable sharded store)."""
+        """A read under the commit stream's store lock: the drainer's
+        commit apply and this snapshot serialize, so the result always
+        reflects a whole number of drain epochs (no torn multi-field
+        reads on the mutable sharded store)."""
         with self.shadow.store_lock:
             return self._lookup_batch(embs, guides_only=guides_only)
 
@@ -143,8 +165,7 @@ class MicrobatchRAR(RAR):
                 f"{self.cfg.memory.capacity}")
         if keys is None:
             keys = [None] * B
-        nows = [self.now + i + 1 for i in range(B)]
-        self.now += B
+        nows = self._advance_now(B)
 
         if embs is None:
             embs = np.stack([np.asarray(self.embed_fn(p)) for p in prompts])
@@ -161,49 +182,28 @@ class MicrobatchRAR(RAR):
         # intervening drain epoch evicts the target slot.
         with self.shadow.store_lock:
             q = self._lookup_batch(embs)
-            ptr_snap = self._ptr_base + self._host_commits
-        sims = q.sim[:, 0]
-        hards = q.hard[:, 0]
-        has_guides = q.has_guide[:, 0]
-        added_ats = q.added_at[:, 0]
-        hit_idxs = q.index[:, 0]
+            ptr_snap = self._ptr_base + self.commit_stream.commits
 
-        # ---- phase 2: partition
+        # ---- phase 2: partition (the decision core's classification —
+        # the same code path the sequential controller runs per request)
+        part = decisions.partition(
+            q, nows, self.cfg,
+            lambda i: self.route_weak_fn(np.asarray(embs[i]), keys[i]))
         outcomes: list[Outcome | None] = [None] * B
-        g_hard: list[int] = []        # memory_hard → strong serves
-        g_guide: list[int] = []       # memory_guide → weak + stored guide
-        g_skill: list[int] = []       # memory_skill → weak unaided
-        g_router: list[int] = []      # router_weak  → weak unaided
-        g_shadow: list[tuple[int, int | None]] = []   # (req, reprobe idx)
-        for i in range(B):
-            if sims[i] >= self.cfg.sim_threshold:
-                if bool(hards[i]):
-                    age = nows[i] - int(added_ats[i])
-                    if age < self.cfg.reprobe_period:
-                        g_hard.append(i)
-                    else:
-                        g_shadow.append((i, int(hit_idxs[i])))
-                elif bool(has_guides[i]):
-                    g_guide.append(i)
-                else:
-                    g_skill.append(i)
-            elif self.route_weak_fn(np.asarray(embs[i]), keys[i]):
-                g_router.append(i)
-            else:
-                g_shadow.append((i, None))
 
         # ---- phase 3: one strong sweep (memory_hard + shadow requests).
         # The shadow requests' strong answer is user-facing (§III-D: the
         # strong FM serves while learning happens in the background), so
         # it stays on the serve plane.
         items: list[shq.ShadowItem] = []
-        strong_reqs = g_hard + [i for i, _ in g_shadow]
+        strong_reqs = part.hard + [i for i, _ in part.shadow]
         if strong_reqs:
             strong_ans = _answers(self.strong, [prompts[i]
                                                 for i in strong_reqs])
-            for i, a in zip(g_hard, strong_ans):
+            for i, a in zip(part.hard, strong_ans):
                 outcomes[i] = Outcome(int(a), "strong", 1, "memory_hard")
-            for (i, reprobe), a in zip(g_shadow, strong_ans[len(g_hard):]):
+            for (i, reprobe), a in zip(part.shadow,
+                                       strong_ans[len(part.hard):]):
                 out = Outcome(int(a), "strong", 1, shq.PENDING)
                 outcomes[i] = out
                 items.append(shq.ShadowItem(
@@ -218,17 +218,17 @@ class MicrobatchRAR(RAR):
         # run in the drain instead.
         weak_prompts: list[np.ndarray] = []
         weak_tags: list[tuple[str, int]] = []
-        for i in g_guide:
+        for i in part.guide:
             weak_prompts.append(splice_guides(
                 prompts[i], select_guides(q.sim[i], q.has_guide[i],
                                           q.guide[i],
                                           self.cfg.sim_threshold,
                                           self.cfg.max_guides)))
             weak_tags.append(("guide", i))
-        for i in g_skill:
+        for i in part.skill:
             weak_prompts.append(prompts[i])
             weak_tags.append(("skill", i))
-        for i in g_router:
+        for i in part.router:
             weak_prompts.append(prompts[i])
             weak_tags.append(("router", i))
         if weak_prompts:
@@ -257,25 +257,62 @@ class MicrobatchRAR(RAR):
         buf = self.shadow.buffer
         empty_guide = np.zeros((self.cfg.memory.guide_len,), np.int32)
 
-        def record(it: shq.ShadowItem, guide, has_guide, hard):
-            buf.stage_add(it.emb, guide, has_guide, hard, it.now)
-            if it.reprobe_index is not None and not hard:
-                buf.stage_soft_clear(it.reprobe_index, it.now,
-                                     it.ptr_snapshot)
+        # ---- coalescing: near-duplicate items share one shadow pass.
+        # The group leader runs the probe sweeps; followers adopt its
+        # resolution (their own re-probe flags still move) and skip their
+        # probe calls — the reclaimed work the queue stats record. Off by
+        # default (dedup_sim=None → every item is its own group, byte-
+        # identical to the pre-dedup drain).
+        dedup = self.cfg.shadow_dedup_sim
+        if dedup is not None and len(items) > 1:
+            groups = decisions.coalesce_shadow_items(
+                np.stack([it.emb for it in items]), dedup)
+        else:
+            groups = [[j] for j in range(len(items))]
+        flw = {items[g[0]].seq: [items[j] for j in g[1:]] for g in groups}
+        leaders = [items[g[0]] for g in groups]
+        self.shadow.items_coalesced += len(items) - len(leaders)
 
-        def resolve(it: shq.ShadowItem, case: str, guide_source=None):
-            it.outcome.strong_calls = it.strong_calls
-            it.outcome.case = case
-            it.outcome.guide_source = guide_source
+        probed_2a: set[int] = set()    # leader seqs that ran the 2a probe
+        fresh_ran: set[int] = set()    # leader seqs that ran the 2b sweep
+
+        def settle(it: shq.ShadowItem, stage: str, guide) -> None:
+            """Apply ``stage``'s resolution (decision core) to a leader
+            and its coalesced followers: the leader stages the insert and
+            bumps the RQ2 counters; every member resolves its Outcome and
+            moves its own re-probe flags; followers' skipped probe calls
+            are tallied at the leader's actual probe depth."""
+            depth = 1 + (it.seq in probed_2a) + (it.seq in fresh_ran)
+            for m in [it] + flw.get(it.seq, []):
+                res = decisions.resolve_shadow_case(
+                    stage, m.reprobe_index is not None)
+                if m is it:
+                    if res.record:
+                        buf.stage_add(m.emb, guide, res.has_guide,
+                                      res.hard, m.now)
+                    if res.guide_source == "memory":
+                        self.guides_from_memory += 1
+                    elif res.guide_source == "fresh":
+                        self.guides_generated += 1
+                else:
+                    self.shadow.reclaimed_weak_calls += depth
+                    if it.seq in fresh_ran:
+                        self.shadow.reclaimed_strong_calls += 1
+                if res.clear_hard:
+                    buf.stage_soft_clear(m.reprobe_index, m.now,
+                                         m.ptr_snapshot)
+                if res.touch:
+                    buf.stage_touch(m.reprobe_index, m.now, m.ptr_snapshot)
+                m.outcome.strong_calls = m.strong_calls
+                m.outcome.case = res.case
+                m.outcome.guide_source = res.guide_source
 
         # ---- sweep 1: weak-alone probes (Case 1)
-        weak_ans = _answers(self.weak, [it.prompt for it in items])
+        weak_ans = _answers(self.weak, [it.prompt for it in leaders])
         pending: list[shq.ShadowItem] = []
-        for it, a in zip(items, weak_ans):
+        for it, a in zip(leaders, weak_ans):
             if self.aligned_fn(int(a), it.strong_ans):
-                record(it, empty_guide, False, False)
-                resolve(it, "case1_reprobe" if it.reprobe_index is not None
-                        else "case1")
+                settle(it, "case1", empty_guide)
             else:
                 pending.append(it)
 
@@ -287,13 +324,15 @@ class MicrobatchRAR(RAR):
                 np.stack([it.emb for it in pending]), guides_only=True)
             probes, probe_items, probe_guides = [], [], []
             for j, it in enumerate(pending):
-                if gq.sim[j, 0] >= self.cfg.guide_sim_threshold:
+                if decisions.wants_guide_probe(float(gq.sim[j, 0]),
+                                               self.cfg):
                     guides = select_guides(gq.sim[j], gq.has_guide[j],
                                            gq.guide[j],
                                            self.cfg.guide_sim_threshold,
                                            self.cfg.max_guides)
                     probes.append(splice_guides(it.prompt, guides))
                     probe_items.append(it)
+                    probed_2a.add(it.seq)
                     # on success the *top* guide is recorded (one guide
                     # block per stored entry), matching the sequential
                     # controller
@@ -304,9 +343,7 @@ class MicrobatchRAR(RAR):
                 probe_ans = _answers(self.weak, probes)
                 for it, g, a in zip(probe_items, probe_guides, probe_ans):
                     if self.aligned_fn(int(a), it.strong_ans):
-                        self.guides_from_memory += 1
-                        record(it, g, True, False)
-                        resolve(it, "case2", "memory")
+                        settle(it, "case2a", g)
                     else:
                         still.append(it)
             still.sort(key=lambda it: it.seq)
@@ -317,6 +354,7 @@ class MicrobatchRAR(RAR):
         if still and self.cfg.allow_fresh_guides:
             for it in still:
                 it.strong_calls += 1
+                fresh_ran.add(it.seq)
             fresh = _guides(self.strong,
                             [it.guide_request for it in still],
                             self.cfg.memory.guide_len)
@@ -325,26 +363,20 @@ class MicrobatchRAR(RAR):
                                   for it, g in zip(still, fresh)])
             for it, g, a in zip(still, fresh, probe_ans):
                 if self.aligned_fn(int(a), it.strong_ans):
-                    self.guides_generated += 1
-                    record(it, g, True, False)
-                    resolve(it, "case2", "fresh")
+                    settle(it, "case2b", g)
                 else:
                     failed.append(it)
         else:
             failed = still
 
         for it in failed:                              # Case 3
-            if it.reprobe_index is not None:
-                buf.stage_touch(it.reprobe_index, it.now, it.ptr_snapshot)
-            else:
-                record(it, empty_guide, False, True)
-            resolve(it, "case3")
+            settle(it, "case3", empty_guide)
 
-        # ---- one epoch apply: adds first (FIFO order by logical time,
-        # matching the sequential add-then-flag order), then re-probe
-        # flag updates; flag updates whose pre-epoch slot this epoch's
-        # scatter just evicted are dropped (CommitBuffer contract). The
-        # store swap serializes with serve-plane snapshot reads.
-        with self.shadow.store_lock:
-            self.memory, n = buf.apply(self.memory)
-            self._host_commits += n
+        # ---- one epoch apply through the commit stream: adds first
+        # (FIFO order by logical time, matching the sequential
+        # add-then-flag order), then re-probe flag updates; flag updates
+        # whose pre-epoch slot this epoch's scatter just evicted are
+        # dropped (CommitBuffer contract). The apply, the commit-counter
+        # bump and the broadcast to every subscribed replica view happen
+        # atomically under the stream's store lock.
+        self.memory = self.commit_stream.apply(self.memory)

@@ -34,6 +34,15 @@ mutates the same Outcome object in place (case, strong_calls,
 guide_source) when its shadow pass resolves. After a :meth:`flush`
 barrier every outstanding outcome is final.
 
+Coalescing (``RARConfig.shadow_dedup_sim``): before a drain epoch the
+drainer merges pending items whose embeddings are near-duplicates
+(:func:`repro.core.decisions.coalesce_shadow_items`) so one shadow pass
+resolves the whole group — duplicate skills enqueued before a drain no
+longer each pay their own probe sweeps. The queue records the merged
+item count (:attr:`ShadowQueue.items_coalesced`) and the probe calls the
+followers skipped (:attr:`~ShadowQueue.reclaimed_weak_calls` /
+:attr:`~ShadowQueue.reclaimed_strong_calls`).
+
 Consistency: all store mutations (the drainer's commit-buffer apply) and
 the serve path's snapshot reads happen under :attr:`store_lock`. For the
 functional ``MemoryState`` the apply is a single reference swap; for the
@@ -88,7 +97,7 @@ class ShadowQueue:
     """
 
     def __init__(self, runner, mode: str = "inline", flush_every: int = 1,
-                 buffer=None, drain_delay: float = 0.0):
+                 buffer=None, drain_delay: float = 0.0, store_lock=None):
         if mode not in MODES:
             raise ValueError(f"shadow mode {mode!r} not in {MODES}")
         from repro.core.memory import CommitBuffer
@@ -97,7 +106,11 @@ class ShadowQueue:
         self.flush_every = flush_every
         self.buffer = buffer if buffer is not None else CommitBuffer()
         self.drain_delay = drain_delay
-        self.store_lock = threading.RLock()
+        # ``store_lock`` may be injected so several queues share one lock
+        # (the fabric's replicas all serialize against the same
+        # ``CommitStream.lock``); standalone queues own a private one
+        self.store_lock = (store_lock if store_lock is not None
+                           else threading.RLock())
         self._cv = threading.Condition()
         self._items: list[ShadowItem] = []
         self._batches = 0             # batches pending since last drain
@@ -111,6 +124,13 @@ class ShadowQueue:
         self.items_enqueued = 0
         self.items_drained = 0
         self.drains = 0
+        # coalescing stats (``RARConfig.shadow_dedup_sim``): followers
+        # merged into a leader's shadow pass, and the probe calls those
+        # followers did not have to run (weak probes / fresh-guide strong
+        # generations, counted at the leader's actual probe depth)
+        self.items_coalesced = 0
+        self.reclaimed_weak_calls = 0
+        self.reclaimed_strong_calls = 0
 
     # -- enqueue --------------------------------------------------------
     def next_seq(self) -> int:

@@ -59,10 +59,12 @@ def run_rar_experiment(system: TrainedSystem, pool: list[Sample], *,
                        strong_tier=None,
                        prepopulate_from: list[Sample] | None = None,
                        microbatch: int = 1,
+                       replicas: int = 1,
                        retrieval_k: int | None = None,
                        max_guides: int | None = None,
                        shadow_mode: str | None = None,
                        shadow_flush_every: int | None = None,
+                       shadow_dedup_sim: float | None = None,
                        verbose: bool = False,
                        progress_every: int = 0
                        ) -> tuple[list[StageResult], RAR]:
@@ -78,20 +80,32 @@ def run_rar_experiment(system: TrainedSystem, pool: list[Sample], *,
     the batched data plane (``MicrobatchRAR.process_batch``) with
     microbatch-commit memory semantics.
 
+    ``replicas``: serve replicas behind the request dispatcher
+    (:class:`repro.serving.fabric.ServingFabric`). 1 keeps the
+    single-controller data plane; > 1 dispatches microbatches round-robin
+    across replica worker threads sharing one commit stream, with a
+    single learn replica draining all shadow work (stage-end barriers
+    keep StageResults exact, as in the shadow modes). Replica placement
+    widens the same staleness window as deferred shadow drains — a
+    request on one replica cannot hit a skill whose shadow pass has not
+    committed yet. Not combinable with ``prepopulate_from`` (the RQ2
+    warm-up is a sequential protocol).
+
     ``retrieval_k``/``max_guides``: override the multi-guide knobs of
     ``rar_cfg`` — every memory read returns the top-k entries and up to
     ``max_guides`` (default: follow retrieval_k) retrieved guides are
     spliced into the weak FM's prompt. ``None`` keeps what ``rar_cfg``
     says (top-1 by default, the paper's procedure).
 
-    ``shadow_mode``/``shadow_flush_every``: override the shadow-plane
-    scheduling of ``rar_cfg`` (microbatch > 1 only): ``"inline"`` runs
-    shadow inference inside every controller step (the default),
-    ``"deferred"``/``"async"`` take it off the serve path and drain every
-    ``shadow_flush_every`` batches (see :mod:`repro.core.shadow`). A
-    flush barrier runs at every stage end, so per-stage results are exact
-    (all provisional shadow outcomes resolved before tallying) in every
-    mode.
+    ``shadow_mode``/``shadow_flush_every``/``shadow_dedup_sim``: override
+    the shadow-plane scheduling of ``rar_cfg`` (microbatch > 1 only):
+    ``"inline"`` runs shadow inference inside every controller step (the
+    default), ``"deferred"``/``"async"`` take it off the serve path and
+    drain every ``shadow_flush_every`` batches, and ``shadow_dedup_sim``
+    coalesces near-duplicate queued shadow items into one probe pass
+    (see :mod:`repro.core.shadow`). A flush barrier runs at every stage
+    end, so per-stage results are exact (all provisional shadow outcomes
+    resolved before tallying) in every mode.
 
     ``progress_every``: print a throughput/memory-occupancy line every N
     served requests (0 = off). The occupancy read is the controller's
@@ -118,6 +132,9 @@ def run_rar_experiment(system: TrainedSystem, pool: list[Sample], *,
     elif shadow_flush_every is not None:
         rar_cfg = dataclasses.replace(rar_cfg,
                                       shadow_flush_every=shadow_flush_every)
+    if shadow_dedup_sim is not None:
+        rar_cfg = dataclasses.replace(rar_cfg,
+                                      shadow_dedup_sim=shadow_dedup_sim)
     prompts, greqs = _prompts(system, pool)
 
     # scoring reference: the strong FM's answers (quality is measured as
@@ -141,8 +158,18 @@ def run_rar_experiment(system: TrainedSystem, pool: list[Sample], *,
     else:
         route_fn = lambda emb, key: system.router.route_weak(emb)  # noqa: E731
 
-    controller_cls = MicrobatchRAR if microbatch > 1 else RAR
-    rar = controller_cls(system.weak, strong, embed_fn, route_fn, rar_cfg)
+    if replicas > 1:
+        if prepopulate_from is not None:
+            raise ValueError("replicas > 1 is not combinable with "
+                             "prepopulate_from (the RQ2 warm-up is a "
+                             "sequential protocol); warm up at replicas=1")
+        from repro.serving.fabric import ServingFabric
+        rar = ServingFabric(system.weak, strong, embed_fn, route_fn,
+                            rar_cfg, replicas=replicas)
+    else:
+        controller_cls = MicrobatchRAR if microbatch > 1 else RAR
+        rar = controller_cls(system.weak, strong, embed_fn, route_fn,
+                             rar_cfg)
 
     if prepopulate_from is not None:
         pre_prompts, pre_greqs = _prompts(system, prepopulate_from)
@@ -196,7 +223,26 @@ def run_rar_experiment(system: TrainedSystem, pool: list[Sample], *,
             elif ok and out.guide_source == "fresh":
                 gfresh += 1
 
-        if microbatch > 1:
+        if replicas > 1:
+            # dispatch every microbatch to the fabric's replica workers
+            # (round-robin, concurrent serving), then one stage-end
+            # barrier: all microbatches served, all shadow work drained
+            tickets: list[tuple[list[int], object]] = []
+            for start in range(0, len(order), microbatch):
+                chunk = [int(i) for i in order[start:start + microbatch]]
+                tickets.append((chunk, rar.submit(
+                    [prompts[i] for i in chunk],
+                    [greqs[i] for i in chunk],
+                    keys=chunk, embs=embs[chunk])))
+            rar.flush_shadow()
+            # progress is tallied as tickets resolve (after the barrier),
+            # not at submit time — enqueueing is near-instant and would
+            # make the ms/request line meaningless in fabric mode
+            for chunk, t in tickets:
+                for i, out in zip(chunk, t.wait()):
+                    tally(i, out)
+                progress(len(chunk))
+        elif microbatch > 1:
             stage_outs: list[tuple[int, object]] = []
             for start in range(0, len(order), microbatch):
                 chunk = [int(i) for i in order[start:start + microbatch]]

@@ -30,6 +30,13 @@ def main() -> None:
     ap.add_argument("--microbatch", type=int, default=1,
                     help="requests per controller step (1 = the paper's "
                          "sequential stream; >1 = batched data plane)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve replicas behind the request dispatcher "
+                         "(serving fabric): microbatches round-robin "
+                         "across replica worker threads sharing one "
+                         "commit stream, a single learn replica drains "
+                         "all shadow work. 1 = the single-controller "
+                         "data plane (bit-identical through the fabric)")
     ap.add_argument("--router", default="oracle",
                     choices=["oracle", "learned"])
     ap.add_argument("--sim-threshold", type=float, default=0.2)
@@ -58,6 +65,14 @@ def main() -> None:
                          "the cost of memory staleness: a request cannot "
                          "hit a skill whose shadow pass has not drained "
                          "yet")
+    ap.add_argument("--shadow-dedup-sim", type=float, default=None,
+                    help="coalesce queued shadow items whose embedding "
+                         "cosine reaches this threshold: one probe pass "
+                         "resolves the whole near-duplicate group, "
+                         "reclaiming duplicate-skill strong calls "
+                         "(pays off with deferred/async drains, where "
+                         "duplicates pile up between barriers; default "
+                         "off)")
     ap.add_argument("--log-every", type=int, default=64,
                     help="serve-loop progress every N requests (0 = off); "
                          "throttled because the memory-occupancy read "
@@ -70,22 +85,27 @@ def main() -> None:
     pool = failing_pool(system, args.domain, n=args.requests)
     print(f"[serve] {len(pool)} requests (weak-FM-failing pool, "
           f"domain {args.domain}); router={args.router}, "
-          f"retrieval_k={args.retrieval_k}, shadow={args.shadow_mode}")
+          f"retrieval_k={args.retrieval_k}, shadow={args.shadow_mode}, "
+          f"replicas={args.replicas}")
 
     if args.shadow_mode != "inline" and args.microbatch <= 1:
         ap.error("--shadow-mode deferred/async requires --microbatch > 1 "
                  "(the sequential reference interleaves shadow inference "
                  "per request)")
+    if args.replicas < 1:
+        ap.error("--replicas must be >= 1")
     cfg = make_rar_config(sim_threshold=args.sim_threshold,
                           retrieval_k=args.retrieval_k,
                           max_guides=args.max_guides,
                           shadow_mode=args.shadow_mode,
                           shadow_flush_every=args.shadow_flush_every,
+                          shadow_dedup_sim=args.shadow_dedup_sim,
                           reprobe_period=2 * len(pool))
     t0 = time.time()
     results, rar = run_rar_experiment(
         system, pool, n_stages=args.stages, rar_cfg=cfg,
-        router_kind=args.router, microbatch=args.microbatch, verbose=True,
+        router_kind=args.router, microbatch=args.microbatch,
+        replicas=args.replicas, verbose=True,
         progress_every=args.log_every)
     rar.close_shadow()
     dt = time.time() - t0

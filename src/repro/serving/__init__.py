@@ -1,3 +1,14 @@
 from repro.serving.engine import ServingEngine, greedy_generate
 
-__all__ = ["ServingEngine", "greedy_generate"]
+__all__ = ["ServingEngine", "greedy_generate", "ServingFabric", "Ticket"]
+
+
+def __getattr__(name):
+    # lazy: the fabric builds on the controller stack (core.pipeline),
+    # which itself serves through this package's engine — importing it
+    # eagerly here would close an import cycle during ``repro.core``'s
+    # own initialization
+    if name in ("ServingFabric", "Ticket"):
+        from repro.serving import fabric
+        return getattr(fabric, name)
+    raise AttributeError(name)

@@ -125,3 +125,13 @@ class ServingEngine:
     @property
     def flops_spent(self) -> float:
         return self.tokens_processed * self.cfg.flops_per_token()
+
+    def stats(self) -> dict:
+        """Consistent host-side counter snapshot (one lock hold, no
+        device syncs) — per-tier rows for the fabric's ``stats()`` and
+        the throughput bench."""
+        with self._lock:
+            return {"calls": self.calls,
+                    "tokens_processed": self.tokens_processed,
+                    "flops_spent": self.flops_spent,
+                    "jit_variants": len(self._jitted)}

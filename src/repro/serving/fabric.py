@@ -1,0 +1,324 @@
+"""Replicated serving fabric — a request router/dispatcher over N serve
+replicas and one learn plane (the ROADMAP's multi-host serving unit).
+
+Topology
+--------
+The per-host serving unit of the data-plane PRs — bucketed engine +
+:class:`repro.core.pipeline.MicrobatchRAR` — becomes the **replica**; the
+fabric composes N of them behind one admission point:
+
+* **Serve plane** — N replicas, each a ``MicrobatchRAR`` with its own
+  worker thread (thread-per-replica models multi-host placement; a real
+  multi-process transport slots in at the :meth:`ServingFabric.submit`
+  boundary). Microbatches dispatch round-robin (or to an explicit
+  replica) and serve concurrently; per-replica FIFO order is preserved.
+* **Learn plane** — a **single learn replica owns every shadow drain**:
+  each replica's :class:`~repro.core.shadow.ShadowQueue` keeps its own
+  enqueue/drain schedule (inline / deferred / async per
+  ``RARConfig.shadow_mode``), but all runners funnel into
+  :meth:`ServingFabric._drain`, which serializes the drains and executes
+  them on the learn replica.
+* **Commit stream** — one shared
+  :class:`repro.core.memory.CommitStream`: every drain stages into the
+  same epoch-versioned ``CommitBuffer``, applies under the one store
+  lock, and the applied store is **broadcast to every replica's view**
+  in the same atomic step — a serve replica always reads a whole number
+  of drain epochs, and the host-side commit counter has a single owner
+  (``memory_occupancy`` stays exact at any replica count).
+
+Shared logical clock: request timestamps must stay unique across
+replicas (the ``CommitBuffer`` keys staged ops by them), so replicas
+draw from one thread-safe counter instead of their private ``now``.
+
+Equivalence anchor: with ``replicas=1`` the synchronous
+:meth:`ServingFabric.process_batch` runs the identical code path as
+calling ``MicrobatchRAR.process_batch`` directly — same decision core,
+same drain schedule, same commit stream mechanics — and is pinned
+**byte-identical** to it in ``tests/test_fabric.py`` (Outcome stream,
+memory state, FM-call counts, RQ2 counters). That is the machine-
+checkable base the N-replica threaded mode is built on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue as _queue
+import threading
+
+from repro.core import memory as mem
+from repro.core.pipeline import MicrobatchRAR
+from repro.core.rar import Outcome, RARConfig
+
+
+class _SharedClock:
+    """Thread-safe logical-time allocator shared by all replicas."""
+
+    def __init__(self):
+        self._now = 0
+        self._lock = threading.Lock()
+
+    def advance(self, n: int) -> list[int]:
+        with self._lock:
+            base = self._now
+            self._now = base + n
+        return list(range(base + 1, base + n + 1))
+
+    @property
+    def now(self) -> int:
+        return self._now
+
+
+class _FabricReplica(MicrobatchRAR):
+    """One serve replica: a ``MicrobatchRAR`` wired into the fabric's
+    shared pieces — the commit stream (store views + single counter),
+    the logical clock, and the learn-replica drain."""
+
+    def __init__(self, fabric: "ServingFabric", index: int, *args,
+                 **kwargs):
+        self._fabric = fabric
+        self.index = index
+        super().__init__(*args, **kwargs)
+
+    def _advance_now(self, n: int) -> list[int]:
+        nows = self._fabric.clock.advance(n)
+        self.now = nows[-1]               # diagnostic mirror
+        return nows
+
+    def _shadow_runner(self):
+        # per-replica queue (own drain schedule + stats), but the runner
+        # funnels into the fabric so the single learn replica executes
+        # every drain against the shared commit stream
+        return self._fabric._drain
+
+
+@dataclasses.dataclass
+class Ticket:
+    """Handle for one dispatched microbatch: resolves to the Outcome list
+    once the owning replica's serve sweep completes (shadow outcomes may
+    still be provisional until a :meth:`ServingFabric.flush_shadow`
+    barrier, exactly as with a standalone ``MicrobatchRAR``)."""
+    replica: int
+    outcomes: list[Outcome] | None = None
+    error: BaseException | None = None
+    _done: threading.Event = dataclasses.field(
+        default_factory=threading.Event)
+
+    def wait(self, timeout: float | None = None) -> list[Outcome]:
+        if not self._done.wait(timeout):
+            raise TimeoutError("microbatch still in flight")
+        if self.error is not None:
+            raise RuntimeError(
+                f"serve replica {self.replica} failed") from self.error
+        return self.outcomes
+
+
+class ServingFabric:
+    """Admit → dispatch → serve across N replicas; learn on one."""
+
+    def __init__(self, weak, strong, embed_fn, route_weak_fn,
+                 cfg: RARConfig | None = None, *, replicas: int = 1,
+                 memory=None, aligned_fn=None):
+        if replicas < 1:
+            raise ValueError(f"replicas={replicas} must be >= 1")
+        cfg = cfg if cfg is not None else RARConfig()
+        self.cfg = cfg
+        self.commit_stream = mem.CommitStream()
+        self.clock = _SharedClock()
+        self._drain_lock = threading.Lock()
+        # one store, N views: the functional MemoryState is shared by
+        # reference and re-broadcast on every commit apply; a mutable
+        # ShardedMemory is the same object in every view, made
+        # reader-atomic by the stream's lock
+        store = memory if memory is not None else mem.init_memory(cfg.memory)
+        self.replicas = [
+            _FabricReplica(self, i, weak, strong, embed_fn, route_weak_fn,
+                           cfg, aligned_fn=aligned_fn, memory=store,
+                           commit_stream=self.commit_stream)
+            for i in range(replicas)]
+        #: the learn replica: owns every shadow drain (and therefore the
+        #: RQ2 guide counters)
+        self.learn = self.replicas[0]
+        self._rr = 0
+        self._dispatch_lock = threading.Lock()
+        self._queues: list[_queue.Queue] | None = None
+        self._threads: list[threading.Thread] = []
+        self._tickets: list[Ticket] = []
+
+    # -- learn plane ----------------------------------------------------
+    def _drain(self, items) -> None:
+        """Every replica queue's runner: serialize drains and execute
+        them on the learn replica. The commit stream broadcasts the
+        applied store to every replica view, so a drain triggered by any
+        replica updates all of them atomically."""
+        with self._drain_lock:
+            self.learn._drain_shadow(items)
+
+    # -- synchronous dispatch -------------------------------------------
+    def _pick(self, replica: int | None) -> _FabricReplica:
+        if replica is not None:
+            return self.replicas[replica]
+        with self._dispatch_lock:
+            r = self.replicas[self._rr % len(self.replicas)]
+            self._rr += 1
+        return r
+
+    def process_batch(self, prompts, guide_requests, keys=None, embs=None,
+                      replica: int | None = None) -> list[Outcome]:
+        """Serve one microbatch synchronously on the caller's thread
+        through one replica (round-robin by default). With ``replicas=1``
+        this is bit-identical to calling
+        ``MicrobatchRAR.process_batch`` directly (pinned in
+        ``tests/test_fabric.py``)."""
+        return self._pick(replica).process_batch(prompts, guide_requests,
+                                                 keys=keys, embs=embs)
+
+    # -- threaded dispatch ----------------------------------------------
+    def _ensure_workers(self) -> None:
+        # check-and-create under the dispatch lock: concurrent first
+        # submits must not spawn duplicate worker sets (orphaned queues
+        # would never receive the shutdown sentinel)
+        with self._dispatch_lock:
+            if self._queues is not None:
+                return
+            queues = [_queue.Queue() for _ in self.replicas]
+            self._queues = queues
+            for i in range(len(self.replicas)):
+                t = threading.Thread(target=self._worker, args=(i,),
+                                     name=f"serve-replica-{i}",
+                                     daemon=True)
+                self._threads.append(t)
+                t.start()
+
+    def _worker(self, i: int) -> None:
+        q = self._queues[i]
+        while True:
+            task = q.get()
+            if task is None:
+                return
+            ticket, prompts, greqs, keys, embs = task
+            try:
+                ticket.outcomes = self.replicas[i].process_batch(
+                    prompts, greqs, keys=keys, embs=embs)
+            except BaseException as e:    # surfaced at wait()/join()
+                ticket.error = e
+            finally:
+                ticket._done.set()
+
+    def submit(self, prompts, guide_requests, keys=None, embs=None,
+               replica: int | None = None) -> Ticket:
+        """Dispatch one microbatch to a replica's worker thread and
+        return immediately with a :class:`Ticket`. Microbatches sent to
+        the same replica serve in submission order (FIFO queue), so a
+        caller that shards its stream by replica keeps per-stream
+        request order — the property the throughput bench's
+        replica-scaling rows rely on for identical routing."""
+        self._ensure_workers()
+        # one lock hold covers replica choice, ticket registration AND
+        # the queue put: concurrent submitters to the same replica keep
+        # lock-acquisition order = queue order (the per-replica FIFO
+        # guarantee above)
+        with self._dispatch_lock:
+            if replica is None:
+                replica = self._rr % len(self.replicas)
+                self._rr += 1
+            ticket = Ticket(replica=replica)
+            self._tickets.append(ticket)
+            self._queues[replica].put((ticket, prompts, guide_requests,
+                                       keys, embs))
+        return ticket
+
+    def join(self) -> None:
+        """Barrier: every dispatched microbatch has served. Waits
+        everything out first, then re-raises the first worker error —
+        one dead microbatch cannot strand the others' tickets."""
+        err: BaseException | None = None
+        while True:
+            with self._dispatch_lock:
+                if not self._tickets:
+                    break
+                tickets, self._tickets = self._tickets, []
+            for t in tickets:
+                try:
+                    t.wait()
+                except BaseException as e:
+                    if err is None:
+                        err = e
+        if err is not None:
+            raise err
+
+    # -- barriers / lifecycle -------------------------------------------
+    def flush_shadow(self) -> None:
+        """Full barrier: all dispatched microbatches served AND every
+        replica's shadow queue drained — all outstanding Outcomes final."""
+        self.join()
+        for r in self.replicas:
+            r.flush_shadow()
+
+    def close_shadow(self) -> None:
+        """Flush, then stop the replica workers and the replicas' shadow
+        worker threads. Idempotent."""
+        self.flush_shadow()
+        if self._queues is not None:
+            for q in self._queues:
+                q.put(None)
+            for t in self._threads:
+                t.join(timeout=60)
+            self._queues, self._threads = None, []
+        for r in self.replicas:
+            r.close_shadow()
+
+    close = close_shadow
+
+    # -- views / accounting ---------------------------------------------
+    @property
+    def memory(self):
+        """The (shared) store, read through the learn replica's view."""
+        return self.learn.memory
+
+    @property
+    def memory_occupancy(self) -> int:
+        """Exact at any replica count: the commit stream owns the single
+        host-side counter every replica's occupancy derives from."""
+        return self.learn.memory_occupancy
+
+    @property
+    def now(self) -> int:
+        return self.clock.now
+
+    @property
+    def guides_from_memory(self) -> int:
+        # drains run on the learn replica only; summing keeps this
+        # correct even if a subclass re-homes the drain
+        return sum(r.guides_from_memory for r in self.replicas)
+
+    @property
+    def guides_generated(self) -> int:
+        return sum(r.guides_generated for r in self.replicas)
+
+    def stats(self) -> dict:
+        """Host-side fabric counters (no device syncs)."""
+        return {
+            "replicas": len(self.replicas),
+            "now": self.clock.now,
+            "memory_occupancy": self.memory_occupancy,
+            "commits": self.commit_stream.commits,
+            "epochs": self.commit_stream.buffer.epoch,
+            "items_enqueued": sum(r.shadow.items_enqueued
+                                  for r in self.replicas),
+            "items_drained": sum(r.shadow.items_drained
+                                 for r in self.replicas),
+            "items_coalesced": sum(r.shadow.items_coalesced
+                                   for r in self.replicas),
+            "reclaimed_weak_calls": sum(r.shadow.reclaimed_weak_calls
+                                        for r in self.replicas),
+            "reclaimed_strong_calls": sum(r.shadow.reclaimed_strong_calls
+                                          for r in self.replicas),
+            "weak": _engine_stats(self.learn.weak),
+            "strong": _engine_stats(self.learn.strong),
+        }
+
+
+def _engine_stats(tier) -> dict | None:
+    """A tier's engine counters, when it exposes them (real
+    ``ServingEngine``s do; rule-based test doubles need not)."""
+    fn = getattr(getattr(tier, "engine", None), "stats", None)
+    return fn() if fn is not None else None

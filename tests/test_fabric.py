@@ -1,0 +1,227 @@
+"""Replicated serving fabric: the 1-replica inline fabric pinned
+byte-identical to ``MicrobatchRAR.process_batch``, N-replica threaded
+stress invariants (no lost/duplicate outcomes, ``ptr ==
+entries_applied``), commit-stream broadcast consistency across replica
+store views, and the single-owner occupancy counter."""
+import numpy as np
+import pytest
+from test_pipeline import SCENARIOS, make_stream, run_batched
+from test_rar_controller import FakeTier, greq, make_cfg, prompt, skill_emb
+from test_shadow import assert_equivalent
+
+from repro.core import memory as mem
+from repro.core.shadow import PENDING
+from repro.serving.fabric import ServingFabric
+
+
+def build_fabric(replicas=1, weak_known=(), weak_follows_guides=True,
+                 **cfg_kw):
+    """Mirror of ``test_pipeline.build`` for the fabric (``memory=`` in
+    ``cfg_kw`` is a ``MemoryConfig``, as in ``make_cfg``)."""
+    weak = FakeTier(known=weak_known, name="weak")
+    strong = FakeTier(known=range(10_000), can_guide=True, name="strong")
+    if not weak_follows_guides:
+        calls = weak.engine
+
+        def stubborn(prompts):
+            calls.calls += len(prompts)
+            return np.asarray([-1] * len(prompts))
+        weak.answer_batch = stubborn
+    return ServingFabric(weak, strong, lambda p: None,
+                         lambda e, k: False, make_cfg(**cfg_kw),
+                         replicas=replicas)
+
+
+def serve_fabric(fab, stream, batch, submit=False):
+    """Serve ``stream`` through the fabric in microbatches — synchronous
+    ``process_batch`` (the equivalence path) or threaded ``submit``."""
+    outs, tickets = [], []
+    for start in range(0, len(stream), batch):
+        chunk = stream[start:start + batch]
+        args = ([prompt(s, x) for s, x in chunk],
+                [greq(s) for s, _ in chunk])
+        kw = dict(keys=chunk,
+                  embs=np.stack([skill_emb(s) for s, _ in chunk]))
+        if submit:
+            tickets.append(fab.submit(*args, **kw))
+        else:
+            outs += fab.process_batch(*args, **kw)
+    fab.flush_shadow()
+    for t in tickets:
+        outs += t.wait()
+    return outs
+
+
+# ---------------------------------------------------------------------------
+# Equivalence: 1-replica inline fabric ≡ MicrobatchRAR, byte for byte
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kw", SCENARIOS)
+@pytest.mark.parametrize("batch", [1, 4])
+def test_one_replica_inline_fabric_identical_to_microbatch(kw, batch):
+    """The acceptance anchor: dispatching through the fabric with one
+    replica must produce the same bytes as calling
+    ``MicrobatchRAR.process_batch`` directly — Outcome stream, memory
+    state, FM-call counts, RQ2 counters."""
+    stream = make_stream()
+    ref, ref_outs = run_batched(stream, batch, **kw)
+    fab = build_fabric(1, **kw)
+    fab_outs = serve_fabric(fab, stream, batch)
+    assert_equivalent(ref, ref_outs, fab.learn, fab_outs)
+    fab.close_shadow()
+
+
+@pytest.mark.parametrize("kw", SCENARIOS[:3])
+def test_one_replica_threaded_fabric_identical_to_microbatch(kw):
+    """Same pin through the threaded dispatch path: one replica worker
+    serves the submitted microbatches FIFO, so the bytes cannot differ."""
+    stream = make_stream()
+    ref, ref_outs = run_batched(stream, 4, **kw)
+    fab = build_fabric(1, **kw)
+    fab_outs = serve_fabric(fab, stream, 4, submit=True)
+    assert_equivalent(ref, ref_outs, fab.learn, fab_outs)
+    fab.close_shadow()
+
+
+@pytest.mark.parametrize("shadow_mode", ["deferred", "async"])
+def test_one_replica_fabric_shadow_modes_identical_to_inline(shadow_mode):
+    """The fabric composes with the queue's drain modes: deferred
+    flush-every-batch (and async behind a per-batch barrier) through the
+    fabric still matches the inline fabric byte for byte."""
+    kw = dict(weak_known={0, 1})
+    stream = make_stream()
+    a = build_fabric(1, **kw)
+    a_outs = serve_fabric(a, stream, 4)
+    b = build_fabric(1, shadow_mode=shadow_mode, shadow_flush_every=1,
+                     **kw)
+    b_outs = []
+    for start in range(0, len(stream), 4):
+        chunk = stream[start:start + 4]
+        b_outs += b.process_batch(
+            [prompt(s, x) for s, x in chunk],
+            [greq(s) for s, _ in chunk], keys=chunk,
+            embs=np.stack([skill_emb(s) for s, _ in chunk]))
+        b.flush_shadow()                  # per-batch barrier
+    assert_equivalent(a.learn, a_outs, b.learn, b_outs)
+    a.close_shadow()
+    b.close_shadow()
+
+
+# ---------------------------------------------------------------------------
+# Commit-stream broadcast + single-owner accounting
+# ---------------------------------------------------------------------------
+
+
+def test_commit_broadcast_keeps_replica_views_identical():
+    """Every drain epoch lands on all replica store views atomically:
+    after any barrier the views are the same object (functional store)
+    and a replica that never served still routes off entries other
+    replicas learned."""
+    fab = build_fabric(3, weak_known={0, 1})
+    stream = [(s, x) for s in range(6) for x in range(2)]
+    serve_fabric(fab, stream, 3, submit=True)
+    assert all(r.memory is fab.learn.memory for r in fab.replicas)
+    # replica 2 serves a repeat explicitly: must hit the shared memory
+    out = fab.process_batch([prompt(0, 5)], [greq(0)],
+                            embs=skill_emb(0)[None], replica=2)[0]
+    assert out.case in ("memory_skill", "memory_guide")
+    assert out.strong_calls == 0
+    fab.close_shadow()
+
+
+def test_occupancy_single_counter_exact_across_replicas():
+    """The small fix this PR pins: occupancy derives from the commit
+    stream's single counter, so it stays exact when N replicas commit to
+    one store (per-controller counters would each undercount)."""
+    cap = 8
+    fab = build_fabric(3, weak_known=set(),
+                       memory=mem.MemoryConfig(capacity=cap, embed_dim=16,
+                                               guide_len=8))
+    # serve 12 distinct skills through 3 replicas → ring wraps
+    for rep in range(2):
+        serve_fabric(fab, [(s, rep) for s in range(12)], 2, submit=True)
+    assert fab.memory_occupancy == fab.memory.size_fast == cap
+    for r in fab.replicas:
+        assert r.memory_occupancy == fab.memory_occupancy
+    assert fab.commit_stream.commits == \
+        fab.commit_stream.buffer.entries_applied == int(fab.memory.ptr)
+    fab.close_shadow()
+
+
+# ---------------------------------------------------------------------------
+# N-replica threaded stress
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shadow_mode,flush_every", [("inline", 1),
+                                                     ("deferred", 2),
+                                                     ("async", 2)])
+def test_fabric_threaded_stress(shadow_mode, flush_every):
+    """Concurrent replicas under every drain mode: every submitted
+    request resolves exactly once, nothing is lost or duplicated in the
+    shared commit stream (``ptr == entries_applied``), and all store
+    views agree."""
+    cap = 8
+    fab = build_fabric(3, weak_known={0, 1}, shadow_mode=shadow_mode,
+                       shadow_flush_every=flush_every,
+                       memory=mem.MemoryConfig(capacity=cap, embed_dim=16,
+                                               guide_len=8))
+    rng = np.random.default_rng(0)
+    tickets, n_requests = [], 0
+    for _ in range(60):
+        B = int(rng.integers(1, 5))
+        chunk = [(int(rng.integers(0, 12)), int(rng.integers(0, 8)))
+                 for _ in range(B)]
+        n_requests += B
+        tickets.append(fab.submit(
+            [prompt(s, x) for s, x in chunk],
+            [greq(s) for s, _ in chunk],
+            embs=np.stack([skill_emb(s) for s, _ in chunk])))
+    fab.flush_shadow()
+    outs = [o for t in tickets for o in t.wait()]
+    assert len(outs) == n_requests                    # no lost/dup outcomes
+    assert all(o.case != PENDING for o in outs)       # all resolved
+    stats = fab.stats()
+    assert stats["items_enqueued"] == stats["items_drained"]
+    # nothing lost in a coalesced epoch, nothing duplicated across
+    # drains: the ring pointer advanced exactly once per committed entry
+    assert fab.commit_stream.buffer.entries_applied == \
+        int(np.asarray(fab.memory.ptr))
+    assert fab.memory_occupancy == fab.memory.size_fast
+    assert int(np.asarray(fab.memory.ptr)) > cap      # wrapped the ring
+    assert all(r.memory is fab.learn.memory for r in fab.replicas)
+    # logical times stayed unique across replicas (commit-buffer keying)
+    assert fab.now == n_requests
+    fab.close_shadow()
+
+
+def test_worker_error_surfaces_at_wait_and_join():
+    fab = build_fabric(2, weak_known={0})
+    boom = RuntimeError("replica died")
+
+    def dying(prompts):
+        raise boom
+
+    # kill replica 1's *serve-plane* strong sweep (the weak probes run on
+    # the learn replica, which stays healthy)
+    fab.replicas[1].strong = FakeTier(known=range(10_000), can_guide=True,
+                                      name="strong-dying")
+    fab.replicas[1].strong.answer_batch = dying
+    fab.submit([prompt(5, 1)], [greq(5)], embs=skill_emb(5)[None],
+               replica=1)
+    # the error must not vanish: join() waits everything out, then
+    # re-raises the first worker failure
+    with pytest.raises(RuntimeError):
+        fab.join()
+    # the fabric stays serviceable: a fresh submit to the healthy
+    # replica still serves
+    ok = fab.submit([prompt(0, 2)], [greq(0)], embs=skill_emb(0)[None],
+                    replica=0)
+    assert ok.wait(timeout=30)[0].response >= -1
+    fab.close_shadow()
+
+
+def test_fabric_validation():
+    with pytest.raises(ValueError):
+        build_fabric(0)

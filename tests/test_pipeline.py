@@ -313,6 +313,56 @@ def test_select_guides_threshold_and_cap():
     assert select_guides(sims, has_guide, guides, 0.6, 0) == []
 
 
+def test_select_guides_dedups_near_duplicate_blocks():
+    """The k retrieved guides can all come from one hot skill: identical
+    (PAD-stripped) guide blocks are spliced once, the best-ranked copy
+    wins, a duplicate never consumes a max_guides slot, and order stays
+    deterministic (retrieval order minus repeats)."""
+    sims = np.asarray([0.99, 0.95, 0.9, 0.85])
+    has_guide = np.asarray([True, True, True, True])
+    dup = _guide(7)
+    dup_padded = dup.copy()                 # same content, via PAD tail
+    guides = np.stack([dup, dup_padded, _guide(8), dup])
+    picked = select_guides(sims, has_guide, guides, 0.6, 2)
+    # entry 1 (duplicate of 0) is skipped WITHOUT consuming a slot, so
+    # the distinct entry 2 still makes the cap of 2
+    assert [g[1] for g in picked] == [7, 8]
+    # all-duplicates collapse to one spliced block
+    all_dup = np.stack([dup, dup, dup])
+    assert len(select_guides(np.asarray([0.9, 0.9, 0.9]),
+                             np.asarray([True] * 3), all_dup, 0.6, 3)) == 1
+
+
+def test_memory_guide_hit_splices_duplicates_once():
+    """End to end: a store holding two entries with the same guide block
+    serves the weak FM with ONE spliced copy (shorter prompt, same
+    answer) under retrieval_k=2."""
+    skill = 3
+    weak = MultiGuideWeak()
+    strong = FakeTier(known=range(10_000), can_guide=True, name="strong")
+    cfg = make_cfg(sim_threshold=0.9, retrieval_k=2, max_guides=2)
+    ctrl = MicrobatchRAR(weak, strong, lambda p: skill_emb(skill),
+                         lambda e, k: False, cfg)
+    g = _guide(skill + 100)
+    for now in (1, 2):                      # two same-guide entries
+        ctrl.memory = mem.add(ctrl.memory, jnp.asarray(skill_emb(skill)),
+                              jnp.asarray(g), jnp.asarray(True),
+                              jnp.asarray(False), jnp.int32(now))
+    out = ctrl.process_batch([prompt(skill, 1)], [greq(skill)],
+                             embs=skill_emb(skill)[None])[0]
+    assert out.case == "memory_guide" and out.strong_calls == 0
+    assert out.response == (skill + 1) % 4
+    # the weak FM saw exactly one guide block: its prompt had one hint
+    # (MultiGuideWeak counts GUIDE_START markers — two identical hints
+    # would still answer, so pin via the sequential driver's splice)
+    from repro.core.rar import splice_guides
+    spliced = splice_guides(prompt(skill, 1),
+                            select_guides(np.asarray([1.0, 1.0]),
+                                          np.asarray([True, True]),
+                                          np.stack([g, g]), 0.9, 2))
+    assert list(spliced).count(tk.GUIDE_START) == 1
+
+
 def test_rar_config_rejects_bad_guide_knobs():
     from repro.core.rar import RARConfig
 

@@ -375,6 +375,111 @@ def test_commit_buffer_drops_flag_update_across_epochs():
 
 
 # ---------------------------------------------------------------------------
+# Dedup coalescing (RARConfig.shadow_dedup_sim)
+# ---------------------------------------------------------------------------
+
+
+def test_dedup_coalesces_duplicate_skills_in_one_drain():
+    """Two same-skill requests queued across batches resolve in ONE
+    shadow pass: one recorded entry, one set of probe calls, followers'
+    skipped calls tallied as reclaimed — the ROADMAP's
+    dedup-as-a-coalescing-rule follow-up."""
+    ctrl, _ = build(MicrobatchRAR, weak_known=set(),
+                    shadow_mode="deferred", shadow_flush_every=0,
+                    shadow_dedup_sim=0.99)
+    for x in (1, 2, 3):
+        ctrl.process_batch([prompt(4, x)], [greq(4)],
+                           embs=skill_emb(4)[None])
+    weak_before = ctrl.weak.engine.calls
+    strong_before = ctrl.strong.engine.calls
+    ctrl.flush_shadow()
+    # one leader probe path: weak-alone probe + guided probe (2 weak
+    # calls), one fresh-guide generation (1 strong call) — NOT ×3
+    assert ctrl.weak.engine.calls - weak_before == 2
+    assert ctrl.strong.engine.calls - strong_before == 1
+    assert ctrl.memory.size_fast == 1              # one entry per group
+    q = ctrl.shadow
+    assert q.items_coalesced == 2
+    assert q.reclaimed_strong_calls == 2           # 2 skipped generations
+    assert q.reclaimed_weak_calls == 4             # 2 followers × depth 2
+    # followers adopt the leader's resolution; their user-facing strong
+    # calls stay at the serve call they actually paid
+    ctrl.close_shadow()
+
+
+def test_dedup_followers_resolve_like_leader_distinct_skills_split():
+    """Dissimilar items never coalesce; near-duplicates resolve to the
+    leader's case with their own outcomes finalized."""
+    ctrl, _ = build(MicrobatchRAR, weak_known={3},
+                    shadow_mode="deferred", shadow_flush_every=0,
+                    shadow_dedup_sim=0.99)
+    outs = []
+    for s, x in ((3, 1), (3, 2), (7, 1)):
+        outs += ctrl.process_batch([prompt(s, x)], [greq(s)],
+                                   embs=skill_emb(s)[None])
+    ctrl.flush_shadow()
+    assert [o.case for o in outs] == ["case1", "case1", "case2"]
+    assert [o.strong_calls for o in outs] == [1, 1, 2]
+    assert ctrl.memory.size_fast == 2       # skill-3 group + skill 7
+    assert ctrl.shadow.items_coalesced == 1
+    ctrl.close_shadow()
+
+
+def test_dedup_off_is_default_and_validated():
+    assert RARConfig().shadow_dedup_sim is None
+    with pytest.raises(ValueError):
+        RARConfig(shadow_dedup_sim=0.0)
+    with pytest.raises(ValueError):
+        RARConfig(shadow_dedup_sim=1.5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000),          # seed
+       st.integers(1, 24),              # item count
+       st.sampled_from([0.5, 0.9, 0.999]))   # dedup threshold
+def test_property_coalesce_groups_partition_and_cohere(seed, n, thresh):
+    """Coalescing invariants for any item set: the groups partition the
+    indices exactly; leaders ascend in enqueue order (deterministic);
+    every follower's embedding reaches the threshold against its
+    *leader*; and a threshold no embedding pair reaches yields all
+    singletons."""
+    from repro.core.decisions import coalesce_shadow_items
+
+    rng = np.random.default_rng(seed)
+    # a few tight clusters + noise, L2-normalized like controller embs
+    centers = rng.normal(size=(4, 16)).astype(np.float32)
+    embs = []
+    for _ in range(n):
+        v = centers[rng.integers(0, 4)] + \
+            0.01 * rng.normal(size=16).astype(np.float32)
+        embs.append(v / np.linalg.norm(v))
+    embs = np.stack(embs).astype(np.float32)
+
+    groups = coalesce_shadow_items(embs, thresh)
+    flat = sorted(j for g in groups for j in g)
+    assert flat == list(range(n))                      # exact partition
+    leaders = [g[0] for g in groups]
+    assert leaders == sorted(leaders)                  # deterministic
+    for g in groups:
+        assert g == sorted(g)
+        for j in g[1:]:
+            assert float(embs[j] @ embs[g[0]]) >= thresh
+    # greedy rule: a leader never reaches any *earlier* leader
+    for gi, lead in enumerate(leaders):
+        for earlier in leaders[:gi]:
+            assert float(embs[lead] @ embs[earlier]) < thresh
+    # a threshold above the max pairwise cosine → all singletons (the
+    # max is taken with the same per-pair dots the rule evaluates — a
+    # gemm reduction can differ by an ulp)
+    if n > 1:
+        hi = max(float(embs[i] @ embs[j])
+                 for i in range(n) for j in range(i + 1, n))
+        above = np.nextafter(np.float32(hi), np.float32(2.0))
+        assert all(len(g) == 1
+                   for g in coalesce_shadow_items(embs, float(above)))
+
+
+# ---------------------------------------------------------------------------
 # Async stress / soak
 # ---------------------------------------------------------------------------
 
