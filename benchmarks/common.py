@@ -21,6 +21,12 @@ SCALE = float(os.environ.get("REPRO_BENCH_SCALE", "1.0"))
 N_SHUFFLES = max(1, int(round(5 * min(1.0, SCALE * 2))))
 N_STAGES = 5
 
+#: the retrieval-k sweep fig4/fig7 report next to the paper's top-1
+#: procedure (k=1): widened memory reads + multi-guide splicing.
+#: Override with e.g. REPRO_RETRIEVAL_KS=1,2,8.
+RETRIEVAL_KS = tuple(
+    int(k) for k in os.environ.get("REPRO_RETRIEVAL_KS", "1,4").split(","))
+
 _SYSTEM = None
 _RAR_RUNS: dict = {}
 
@@ -35,20 +41,31 @@ def get_system():
     return _SYSTEM
 
 
-def get_rar_runs(domain: int, n_shuffles: int, n_stages: int):
-    """Memoized RAR experiment runs (fig4/5/6 and fig7 share them)."""
+def get_rar_runs(domain: int, n_shuffles: int, n_stages: int,
+                 retrieval_k: int | None = None):
+    """Memoized RAR experiment runs (fig4/5/6 and fig7 share them).
+
+    ``retrieval_k`` widens every memory read to the top-k entries (with
+    up to k retrieved guides spliced); ``None`` keeps the paper's top-1
+    procedure. Each k is memoized separately so the fig4/fig7 sweep
+    reuses one set of runs per k."""
     from repro.experiments.stages import run_rar_experiment
-    key = (domain, n_shuffles, n_stages)
+    if retrieval_k == 1:
+        retrieval_k = None      # k=1 IS the default top-1 procedure —
+        #                         share the memoized baseline runs
+    key = (domain, n_shuffles, n_stages, retrieval_k)
     if key not in _RAR_RUNS:
         system = get_system()
         pool = get_pool(domain)
         runs = []
+        tag = "" if retrieval_k is None else f" k={retrieval_k}"
         for sh in range(n_shuffles):
             t0 = time.time()
             results, rar = run_rar_experiment(system, pool,
-                                              n_stages=n_stages, seed=sh)
+                                              n_stages=n_stages, seed=sh,
+                                              retrieval_k=retrieval_k)
             runs.append(results)
-            print(f"#   shuffle {sh}: strong calls/stage "
+            print(f"#   shuffle {sh}{tag}: strong calls/stage "
                   f"{[r.strong_calls for r in results]}, aligned "
                   f"{[r.aligned for r in results]} "
                   f"({time.time() - t0:.0f}s)")

@@ -10,8 +10,9 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import (N_SHUFFLES, N_STAGES, emit, get_pool,
-                               get_rar_runs, get_system, pool_name, print)
+from benchmarks.common import (N_SHUFFLES, N_STAGES, RETRIEVAL_KS, emit,
+                               get_pool, get_rar_runs, get_system,
+                               pool_name, print)
 from repro.experiments.stages import aggregate_shuffles, run_baselines
 
 DOMAIN = 0
@@ -21,7 +22,8 @@ def run(domain: int = DOMAIN, tag: str = "fig4") -> dict:
     system = get_system()
     pool = get_pool(domain)
     print(f"# {tag}: {pool_name(domain)} pool n={len(pool)}, "
-          f"{N_STAGES} stages × {N_SHUFFLES} shuffles")
+          f"{N_STAGES} stages × {N_SHUFFLES} shuffles, "
+          f"retrieval-k sweep {RETRIEVAL_KS}")
 
     rar_runs = get_rar_runs(domain, N_SHUFFLES, N_STAGES)
     base = run_baselines(system, pool, n_stages=N_STAGES)
@@ -29,6 +31,16 @@ def run(domain: int = DOMAIN, tag: str = "fig4") -> dict:
     rows = []
     for row in aggregate_shuffles(rar_runs):
         rows.append(dict(row, method="rar", domain=pool_name(domain)))
+    # the retrieval-k sweep: RAR with widened top-k memory reads +
+    # multi-guide splicing, next to the paper's top-1 rows (k=1 shares
+    # the baseline runs, so only k>1 costs extra serving)
+    for k in RETRIEVAL_KS:
+        if k == 1:
+            continue
+        for row in aggregate_shuffles(
+                get_rar_runs(domain, N_SHUFFLES, N_STAGES, retrieval_k=k)):
+            rows.append(dict(row, method=f"rar_k{k}",
+                             domain=pool_name(domain)))
     for name, results in base.items():
         for row in aggregate_shuffles([results]):
             rows.append(dict(row, method=name, domain=pool_name(domain)))

@@ -7,8 +7,9 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import (N_SHUFFLES, N_STAGES, emit, get_pool,
-                               get_rar_runs, get_system, pool_name, print)
+from benchmarks.common import (N_SHUFFLES, N_STAGES, RETRIEVAL_KS, emit,
+                               get_pool, get_rar_runs, get_system,
+                               pool_name, print)
 
 DOMAIN = 0
 
@@ -16,34 +17,40 @@ DOMAIN = 0
 def main() -> None:
     system = get_system()
     pool = get_pool(DOMAIN)
-    print(f"# fig7: {pool_name(DOMAIN)} pool n={len(pool)}")
-
-    runs = get_rar_runs(DOMAIN, N_SHUFFLES, N_STAGES)
-    per_stage_mem = np.zeros((N_SHUFFLES, N_STAGES))
-    per_stage_fresh = np.zeros((N_SHUFFLES, N_STAGES))
-    for sh, results in enumerate(runs):
-        for i, r in enumerate(results):
-            per_stage_mem[sh, i] = r.guides_from_memory
-            per_stage_fresh[sh, i] = r.guides_fresh
+    print(f"# fig7: {pool_name(DOMAIN)} pool n={len(pool)}, "
+          f"retrieval-k sweep {RETRIEVAL_KS}")
 
     rows = []
-    for s in range(N_STAGES):
-        rows.append({
-            "stage": s + 1,
-            "guides_fresh_mean": per_stage_fresh[:, s].mean(),
-            "guides_fresh_std": per_stage_fresh[:, s].std(),
-            "guides_memory_mean": per_stage_mem[:, s].mean(),
-            "guides_memory_std": per_stage_mem[:, s].std(),
-        })
+    summaries = []
+    for k in RETRIEVAL_KS:
+        runs = get_rar_runs(DOMAIN, N_SHUFFLES, N_STAGES, retrieval_k=k)
+        per_stage_mem = np.zeros((N_SHUFFLES, N_STAGES))
+        per_stage_fresh = np.zeros((N_SHUFFLES, N_STAGES))
+        for sh, results in enumerate(runs):
+            for i, r in enumerate(results):
+                per_stage_mem[sh, i] = r.guides_from_memory
+                per_stage_fresh[sh, i] = r.guides_fresh
+        for s in range(N_STAGES):
+            rows.append({
+                "retrieval_k": k,
+                "stage": s + 1,
+                "guides_fresh_mean": per_stage_fresh[:, s].mean(),
+                "guides_fresh_std": per_stage_fresh[:, s].std(),
+                "guides_memory_mean": per_stage_mem[:, s].mean(),
+                "guides_memory_std": per_stage_mem[:, s].std(),
+            })
+        summaries.append((k, per_stage_mem, per_stage_fresh))
     emit(rows)
-    cum_mem = per_stage_mem.sum(1).mean()
-    cum_fresh = per_stage_fresh.sum(1).mean()
-    print(f"# summary: guided-aligned via memory {cum_mem:.1f} vs fresh "
-          f"{cum_fresh:.1f}; memory share rises from "
-          f"{per_stage_mem[:, 0].mean():.1f} (stage 1) to "
-          f"{per_stage_mem[:, -1].mean():.1f} (stage {N_STAGES}) while "
-          f"fresh falls from {per_stage_fresh[:, 0].mean():.1f} to "
-          f"{per_stage_fresh[:, -1].mean():.1f}")
+    for k, per_stage_mem, per_stage_fresh in summaries:
+        cum_mem = per_stage_mem.sum(1).mean()
+        cum_fresh = per_stage_fresh.sum(1).mean()
+        print(f"# summary k={k}: guided-aligned via memory {cum_mem:.1f} "
+              f"vs fresh {cum_fresh:.1f}; memory share rises from "
+              f"{per_stage_mem[:, 0].mean():.1f} (stage 1) to "
+              f"{per_stage_mem[:, -1].mean():.1f} (stage {N_STAGES}) "
+              f"while fresh falls from "
+              f"{per_stage_fresh[:, 0].mean():.1f} to "
+              f"{per_stage_fresh[:, -1].mean():.1f}")
 
 
 if __name__ == "__main__":

@@ -20,7 +20,14 @@ multiple passes so the memory warms up) through:
   request order — and therefore routing — is independent of N) and
   microbatches dispatch to thread-per-replica workers over the shared
   commit stream. Strong-call counts are asserted identical across all
-  replica counts and to the single-controller microbatch run.
+  replica counts and to the single-controller microbatch run, and
+* the 4-replica fabric under injected faults (``fabric_r4_faulty`` row):
+  one replica crash early in the run (supervised restart + redispatch)
+  plus a strong-tier error burst behind retries and a circuit breaker
+  (brownout → weak-only degraded serving, deferred probes replayed once
+  the breaker closes). The row records the throughput and strong-call
+  cost of riding through the faults next to the clean ``fabric_r4`` run
+  — the degraded-mode price, measured.
 
 The FM tiers are the paper-analog WEAK/STRONG architectures with random
 (untrained) weights behind the real jitted serving engine — answer content
@@ -150,17 +157,20 @@ def _run_shadow(mode_batch: int, weak, strong, prompts, greqs, embs,
 
 
 def _run_fabric(n_replicas: int, weak, strong, prompts, greqs, embs,
-                cfg: RARConfig):
+                cfg: RARConfig, fault_plan=None, settle: float = 0.0):
     """One full serve of the stream through the replicated fabric.
 
     The pool is sharded into ``FABRIC_STREAMS`` fixed streams by question
     index; stream j's microbatches all dispatch to replica ``j % N`` in
     submission order (per-replica FIFO), so every question's repeats
     serve in the same relative order at any replica count — routing, and
-    therefore the strong-call count, is invariant in N. Returns total
-    strong calls."""
+    therefore the strong-call count, is invariant in N. ``fault_plan``
+    injects the faulty-run schedule; ``settle`` sleeps before the final
+    flush so an open circuit breaker can close and the deferred probes
+    replay inside the measured window. Returns (strong_calls, stats)."""
     fabric = ServingFabric(weak, strong, lambda p: None,
-                           lambda e, k: False, cfg, replicas=n_replicas)
+                           lambda e, k: False, cfg, replicas=n_replicas,
+                           fault_plan=fault_plan)
     n = len(prompts)
     streams = [[i for i in range(n) if i % FABRIC_STREAMS == j]
                for j in range(FABRIC_STREAMS)]
@@ -174,10 +184,22 @@ def _run_fabric(n_replicas: int, weak, strong, prompts, greqs, embs,
                     [greqs[i] for i in chunk],
                     keys=chunk, embs=embs[chunk],
                     replica=j % n_replicas))
+    if settle:
+        time.sleep(settle)
     fabric.flush_shadow()
     strong_calls = sum(o.strong_calls for t in tickets for o in t.wait())
+    stats = fabric.stats()
     fabric.close_shadow()
-    return strong_calls
+    return strong_calls, stats
+
+
+def _faulty_plan():
+    """The ``fabric_r4_faulty`` schedule: replica 1 crashes on its 2nd
+    microbatch, and the strong tier throws a 3-error burst that trips
+    the breaker into a brownout."""
+    from repro.serving.faults import FaultPlan
+    return FaultPlan([FaultPlan.replica_crash(1, at=2),
+                      FaultPlan.tier_error("strong", at=5, count=3)])
 
 
 def main() -> None:
@@ -231,8 +253,8 @@ def main() -> None:
     for nr in FABRIC_REPLICAS:
         _run_fabric(nr, weak, strong, prompts, greqs, embs, cfg)  # warm
         t0 = time.perf_counter()
-        strong_calls = _run_fabric(nr, weak, strong, prompts, greqs,
-                                   embs, cfg)
+        strong_calls, _ = _run_fabric(nr, weak, strong, prompts, greqs,
+                                      embs, cfg)
         dt = time.perf_counter() - t0
         fabric[nr] = {"replicas": nr,
                       "microbatch": FABRIC_MB,
@@ -244,6 +266,35 @@ def main() -> None:
                       "strong_call_ratio": round(
                           strong_calls / total_requests, 4)}
         rows.append({"mode": f"fabric_r{nr}", **fabric[nr]})
+
+    # degraded-mode row: the r4 fabric riding through a replica crash +
+    # a strong-tier brownout (retries + breaker + redispatch enabled)
+    import dataclasses as _dc
+    faulty_cfg = _dc.replace(cfg, tier_max_retries=1, breaker_threshold=2,
+                             breaker_cooldown=0.05)
+    _run_fabric(4, weak, strong, prompts, greqs, embs, faulty_cfg,
+                fault_plan=_faulty_plan(), settle=0.1)            # warm
+    t0 = time.perf_counter()
+    strong_calls, fstats = _run_fabric(
+        4, weak, strong, prompts, greqs, embs, faulty_cfg,
+        fault_plan=_faulty_plan(), settle=0.1)
+    dt = time.perf_counter() - t0
+    faulty = {"replicas": 4,
+              "microbatch": FABRIC_MB,
+              "streams": FABRIC_STREAMS,
+              "requests": total_requests,
+              "seconds": round(dt, 4),
+              "requests_per_sec": round(total_requests / dt, 2),
+              "strong_calls": strong_calls,
+              "strong_call_ratio": round(
+                  strong_calls / total_requests, 4),
+              "deaths": fstats["deaths"],
+              "restarts": fstats["restarts"],
+              "redispatches": fstats["redispatches"],
+              "probes_deferred": fstats["probes_deferred"],
+              "probes_replayed": fstats["probes_replayed"],
+              "faults_fired": fstats["faults"]["fired"]}
+    rows.append({"mode": "fabric_r4_faulty", **faulty})
     emit(rows)
 
     seq, mb32 = results[1], results[32]
@@ -279,6 +330,16 @@ def main() -> None:
         "fabric_speedup_r4_vs_r1": round(
             fabric[4]["requests_per_sec"] / fabric[1]["requests_per_sec"],
             2),
+        # degraded-mode cost vs the clean r4 run: throughput retained
+        # while riding through a crash + brownout, every request served
+        # (zero errored tickets — the row would have thrown otherwise)
+        "fabric_faulty_throughput_vs_clean_r4": round(
+            faulty["requests_per_sec"] / fabric[4]["requests_per_sec"], 2),
+        "fabric_faulty_strong_calls_vs_clean_r4": round(
+            faulty["strong_calls"] / max(fabric[4]["strong_calls"], 1), 4),
+        "fabric_faulty_all_deferred_replayed":
+            faulty["probes_deferred"] == faulty["probes_replayed"],
+        "fabric_faulty_recovered": faulty["deaths"] == faulty["restarts"],
     }
     out = os.environ.get("REPRO_BENCH_OUT", "BENCH_rar_throughput.json")
     with open(out, "w") as f:
@@ -289,7 +350,12 @@ def main() -> None:
           f"(strong calls match: "
           f"{report['shadow_strong_calls_match_inline_mb32']}); "
           f"fabric r4 vs r1: {report['fabric_speedup_r4_vs_r1']:.2f}x "
-          f"(strong calls match across replicas: {fabric_match}) → {out}")
+          f"(strong calls match across replicas: {fabric_match}); "
+          f"faulty r4 at "
+          f"{report['fabric_faulty_throughput_vs_clean_r4']:.2f}x clean "
+          f"throughput, {faulty['deaths']} crash(es) ridden through, "
+          f"{faulty['probes_replayed']}/{faulty['probes_deferred']} "
+          f"deferred probes replayed → {out}")
 
 
 if __name__ == "__main__":

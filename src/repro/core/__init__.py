@@ -27,17 +27,60 @@ Architecture (decision core / serve plane / learn plane):
   one buffer + store lock + host-side commit counter per serving site,
   broadcasting every applied epoch to all subscribed replica views.
 
+* **Recovery plane** — fault tolerance wrapped around all three,
+  default-off and byte-transparent when off:
+
+  - *Tier resilience* (:mod:`repro.core.fm`): :class:`ResilientTier`
+    adds per-call timeout + bounded retries with exponential backoff,
+    and a :class:`CircuitBreaker` per tier. A strong-tier outage does
+    not error requests — the decision core routes **degraded**
+    (``classify``/``partition`` with ``strong_ok=False``): memory-hard
+    requests serve weak-only (``memory_hard_degraded``) and shadow
+    probes are parked as deferred :class:`~repro.core.shadow.ShadowItem`
+    s (``shadow_deferred``), replayed through the normal drain once the
+    breaker's half-open probe closes it.
+  - *Crash-consistent memory* (:mod:`repro.core.memory`):
+    :class:`MemoryJournal` write-ahead-logs every commit epoch (CRC-
+    framed, fsync-before-apply) and snapshots periodically; recovery
+    replays the WAL through the same ``CommitBuffer.apply_ops`` path
+    the live drain uses, so the restored store is byte-identical.
+  - *Replica supervision* (:mod:`repro.serving.fabric`): crashed serve
+    workers restart against the shared commit-stream view and their
+    microbatch redispatches to a survivor (bounded).
+  - *Fault injection* (:mod:`repro.serving.faults`): a seedable
+    :class:`FaultPlan` fires crashes/errors/delays at the named logical
+    sites (``replica_serve``, ``tier_call``, ``drain``, ``wal_write``,
+    ``commit_apply``) — every failure mode above is reproducible.
+
 Equivalence chain (machine-checked): sequential ≡ microbatch B=1 ≡
 deferred flush-every-batch ≡ async with per-batch barrier ≡ 1-replica
 inline fabric — see ``tests/test_pipeline.py``, ``tests/test_shadow.py``
 and ``tests/test_fabric.py``.
+
+Failure-mode invariants (machine-checked in ``tests/test_faults.py``):
+
+* a replica crash fires *before* any side effect, so a redispatched
+  microbatch's outcomes + commit counters are byte-identical to a
+  no-fault run;
+* a kill between WAL append and commit apply recovers to one epoch
+  *ahead* of the pre-crash view, a kill before the WAL append recovers
+  to the epoch *behind* — never a torn epoch either way;
+* a strong-tier brownout serves every request weak-only with zero
+  errored tickets, and the deferred probes replay exactly once after
+  the breaker closes;
+* with no ``FaultPlan`` and the resilience knobs at their defaults,
+  every pre-existing byte-identity pin holds unchanged.
 """
 from repro.core.rar import RAR, RARConfig, Outcome, splice_guide
 from repro.core.pipeline import MicrobatchRAR
 from repro.core.shadow import ShadowItem, ShadowQueue
-from repro.core.fm import FMTier
+from repro.core.fm import (FMTier, ResilientTier, RetryPolicy,
+                           CircuitBreaker, TierError, TransientTierError,
+                           TierTimeout, TierUnavailableError)
 from repro.core import decisions, memory, embedder, router
 
 __all__ = ["RAR", "RARConfig", "Outcome", "splice_guide", "MicrobatchRAR",
-           "ShadowItem", "ShadowQueue", "FMTier", "decisions", "memory",
-           "embedder", "router"]
+           "ShadowItem", "ShadowQueue", "FMTier", "ResilientTier",
+           "RetryPolicy", "CircuitBreaker", "TierError",
+           "TransientTierError", "TierTimeout", "TierUnavailableError",
+           "decisions", "memory", "embedder", "router"]

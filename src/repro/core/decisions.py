@@ -42,6 +42,11 @@ from repro.data import tokenizer as tk
 GROUPS = ("memory_hard", "memory_guide", "memory_skill", "router_weak",
           "shadow")
 
+#: Outcome.case values of requests served in degraded (weak-only) mode —
+#: the strong tier's breaker was open, so the strong serve / shadow probe
+#: was suppressed and (for shadow) deferred for replay
+DEGRADED_CASES = ("memory_hard_degraded", "shadow_deferred")
+
 #: the shadow procedure's probe stages, in execution order; a request
 #: resolves at the first stage whose weak answer aligns ("case3" = none)
 SHADOW_STAGES = ("case1", "case2a", "case2b", "case3")
@@ -57,25 +62,42 @@ class Route:
     """One request's routing decision. ``group`` ∈ :data:`GROUPS`;
     ``reprobe_index`` is set when a ``shadow`` route re-probes a hard
     entry past its cool-down (the entry whose flags the shadow pass may
-    update)."""
+    update). ``degraded`` marks a route whose strong-tier leg was
+    suppressed because the strong tier is unavailable: a degraded
+    ``memory_hard`` is served weak-only, a degraded ``shadow`` serves
+    weak and defers its probe for replay."""
     group: str
     reprobe_index: int | None = None
+    degraded: bool = False
 
 
 def classify(sim: float, hard: bool, has_guide: bool, added_at: int,
              hit_index: int, now: int, cfg,
-             route_weak: Callable[[], bool]) -> Route:
+             route_weak: Callable[[], bool],
+             strong_ok: bool = True) -> Route:
     """Classify one request from the top-1 fields of its memory read
     (entry 0 of the top-k result — bit-identical to the top-1 kernel).
 
     ``route_weak`` is the static router's verdict as a thunk: it is only
     evaluated on a memory miss, preserving the sequential controller's
     router call pattern (oracle routers may count calls).
+
+    ``strong_ok`` is the strong tier's availability (its circuit
+    breaker's non-mutating peek). When False, every route that would
+    call the strong tier degrades instead of erroring: ``memory_hard``
+    serves weak-only, hard re-probes stay ``memory_hard`` (degraded —
+    no point probing an unavailable tier; the cool-down clock keeps
+    running so the re-probe fires once the breaker closes), and shadow
+    routes carry ``degraded=True`` so the controller serves weak and
+    defers the strong probe. ``strong_ok=True`` is byte-identical to
+    the pre-resilience classifier.
     """
     if sim >= cfg.sim_threshold:
         if hard:
             if now - added_at < cfg.reprobe_period:
-                return Route("memory_hard")
+                return Route("memory_hard", degraded=not strong_ok)
+            if not strong_ok:
+                return Route("memory_hard", degraded=True)
             # cool-down expired → shadow path re-probes the entry
             return Route("shadow", reprobe_index=hit_index)
         if has_guide:
@@ -83,23 +105,31 @@ def classify(sim: float, hard: bool, has_guide: bool, added_at: int,
         return Route("memory_skill")
     if route_weak():
         return Route("router_weak")
-    return Route("shadow")
+    return Route("shadow", degraded=not strong_ok)
 
 
 @dataclasses.dataclass
 class Partition:
     """A microbatch partitioned into the serving groups (request indices
-    in batch order; ``shadow`` carries ``(index, reprobe_index | None)``)."""
+    in batch order; ``shadow`` carries ``(index, reprobe_index | None)``).
+    ``hard_degraded`` / ``deferred`` only populate in degraded mode
+    (``strong_ok=False``): requests that would have gone to ``hard`` /
+    ``shadow`` but are served weak-only instead, with ``deferred``
+    probes parked for replay once the strong tier returns."""
     hard: list[int] = dataclasses.field(default_factory=list)
     guide: list[int] = dataclasses.field(default_factory=list)
     skill: list[int] = dataclasses.field(default_factory=list)
     router: list[int] = dataclasses.field(default_factory=list)
     shadow: list[tuple[int, int | None]] = dataclasses.field(
         default_factory=list)
+    hard_degraded: list[int] = dataclasses.field(default_factory=list)
+    deferred: list[tuple[int, int | None]] = dataclasses.field(
+        default_factory=list)
 
 
 def partition(q, nows: Sequence[int], cfg,
-              route_weak: Callable[[int], bool]) -> Partition:
+              route_weak: Callable[[int], bool],
+              strong_ok: bool = True) -> Partition:
     """Partition a microbatch by its batched top-k read.
 
     ``q`` is the host-side :class:`~repro.core.memory.TopKResult` with
@@ -107,7 +137,9 @@ def partition(q, nows: Sequence[int], cfg,
     ``route_weak(i)`` is the static router's verdict for request i
     (evaluated lazily, only on memory misses). Request order is
     preserved inside every group, so downstream FM sweeps are
-    deterministic.
+    deterministic. ``strong_ok=False`` routes the strong-dependent
+    groups into ``hard_degraded`` / ``deferred`` instead (see
+    :func:`classify`).
     """
     sims, hards = q.sim[:, 0], q.hard[:, 0]
     has_guides, added_ats = q.has_guide[:, 0], q.added_at[:, 0]
@@ -116,15 +148,17 @@ def partition(q, nows: Sequence[int], cfg,
     for i in range(len(nows)):
         r = classify(float(sims[i]), bool(hards[i]), bool(has_guides[i]),
                      int(added_ats[i]), int(hit_idxs[i]), nows[i], cfg,
-                     lambda: route_weak(i))
+                     lambda: route_weak(i), strong_ok=strong_ok)
         if r.group == "memory_hard":
-            part.hard.append(i)
+            (part.hard_degraded if r.degraded else part.hard).append(i)
         elif r.group == "memory_guide":
             part.guide.append(i)
         elif r.group == "memory_skill":
             part.skill.append(i)
         elif r.group == "router_weak":
             part.router.append(i)
+        elif r.degraded:
+            part.deferred.append((i, r.reprobe_index))
         else:
             part.shadow.append((i, r.reprobe_index))
     return part

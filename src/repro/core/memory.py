@@ -378,20 +378,35 @@ class CommitBuffer:
             len(self._touches)
 
     # -- apply ----------------------------------------------------------
+    def take_ops(self):
+        """Drain the staged ops: returns ``(records, soft_clears,
+        touches)`` (records sorted by logical ``now``) and leaves the
+        staging area empty. Split from :meth:`apply_ops` so the commit
+        stream can write the epoch to a write-ahead journal *between*
+        taking and applying — the crash-consistency boundary."""
+        records = sorted(self._records, key=lambda r: r[0])
+        soft_clears, touches = self._soft_clears, self._touches
+        self._records, self._soft_clears, self._touches = [], [], []
+        return records, soft_clears, touches
+
     def apply(self, state):
         """Apply every staged op to ``state`` as one epoch; returns the
         (new) store and the number of entries inserted. Ops land in
         deterministic order (see class docstring); inserts are chunked at
         ring capacity so an epoch larger than the ring degrades to the
         sequential FIFO result instead of a self-overwriting scatter."""
-        import numpy as np
-
         if not self.pending:
             return state, 0
-        records = sorted(self._records, key=lambda r: r[0])
-        soft_clears, touches = self._soft_clears, self._touches
-        self._records, self._soft_clears, self._touches = [], [], []
+        return self.apply_ops(state, *self.take_ops())
 
+    def apply_ops(self, state, records, soft_clears, touches):
+        """Apply one epoch's (already taken) ops to ``state``. This is
+        the single code path both live drains and journal *recovery*
+        replay go through — which is what makes a recovered store
+        byte-identical to the pre-crash one."""
+        import numpy as np
+
+        records = sorted(records, key=lambda r: r[0])
         C = state.capacity
         base_ptr = int(jax.device_get(state.ptr))
         end_ptr = base_ptr + len(records)
@@ -436,6 +451,187 @@ class CommitBuffer:
 
 
 # ---------------------------------------------------------------------------
+# Write-ahead journal — crash-consistent persistence of the commit stream
+# ---------------------------------------------------------------------------
+
+
+class MemoryJournal:
+    """Epoch-granular write-ahead journal + periodic snapshot for one
+    commit stream's store.
+
+    Layout: ``<dir>/wal.log`` (append-only record stream) and
+    ``<dir>/snapshot.npz`` (atomic store snapshot, written via
+    :func:`repro.training.checkpoint.save_checkpoint`). Each WAL record
+    is ``<u32 length><u32 crc32>`` + a pickled payload holding one
+    epoch's taken ops (inserts as host arrays, flag clears, touches) and
+    its epoch number.
+
+    Protocol (see :meth:`CommitStream.apply`): the epoch's ops are
+    journaled **and fsynced before** they are applied to the in-memory
+    store. A crash before the WAL write loses the epoch entirely
+    (recovery lands on the previous epoch — which is also all the crashed
+    process's store ever showed); a crash after the WAL write but before
+    the apply recovers *with* the epoch (one epoch ahead of the dead
+    process's memory). Either way the recovered store equals a store
+    some prefix of epochs was applied to — never a torn state.
+
+    Every ``snapshot_every`` epochs the full store is snapshotted
+    atomically (tmpfile + ``os.replace``) and the WAL is truncated;
+    records carry their epoch number, so recovery filters anything the
+    snapshot already covers — a crash *between* snapshot and truncation
+    is harmless.
+
+    :meth:`recover` replays surviving epochs through
+    :meth:`CommitBuffer.apply_ops` — the very code path live drains use —
+    so the restored store is byte-identical to the pre-crash commit
+    state. A torn or corrupt WAL tail (short read / CRC mismatch) is
+    tolerated: replay stops at the last complete record.
+
+    Only the functional :class:`MemoryState` store is journalable (the
+    sharded store mutates device buffers in place and has its own
+    persistence story).
+    """
+
+    def __init__(self, path: str, *, snapshot_every: int = 8,
+                 fault_plan=None):
+        import os
+        if snapshot_every < 1:
+            raise ValueError(f"snapshot_every must be >= 1, "
+                             f"got {snapshot_every}")
+        os.makedirs(path, exist_ok=True)
+        self.path = path
+        self.wal_path = os.path.join(path, "wal.log")
+        self.snap_path = os.path.join(path, "snapshot.npz")
+        self.snapshot_every = snapshot_every
+        self.fault_plan = fault_plan
+        self._wal = open(self.wal_path, "ab")
+        self.epochs_logged = 0
+        self.snapshots = 0
+
+    # -- record framing -------------------------------------------------
+    @staticmethod
+    def _frame(obj) -> bytes:
+        import pickle
+        import struct
+        import zlib
+        payload = pickle.dumps(obj, protocol=4)
+        return struct.pack("<II", len(payload),
+                           zlib.crc32(payload) & 0xFFFFFFFF) + payload
+
+    @staticmethod
+    def _read_records(path):
+        """Yield payload objects from a WAL file, stopping silently at a
+        torn or corrupt tail."""
+        import os
+        import pickle
+        import struct
+        import zlib
+        if not os.path.exists(path):
+            return
+        with open(path, "rb") as f:
+            while True:
+                head = f.read(8)
+                if len(head) < 8:
+                    return                       # clean end or torn header
+                length, crc = struct.unpack("<II", head)
+                payload = f.read(length)
+                if len(payload) < length:
+                    return                       # torn payload
+                if zlib.crc32(payload) & 0xFFFFFFFF != crc:
+                    return                       # corrupt tail
+                yield pickle.loads(payload)
+
+    # -- logging --------------------------------------------------------
+    def log_epoch(self, epoch: int, records, soft_clears,
+                  touches) -> None:
+        """Make one epoch's ops durable (write + flush + fsync). The
+        ``wal_write`` fault site fires *before* the write — an injected
+        crash here models dying with the epoch not yet on disk."""
+        import os
+
+        import numpy as np
+        if self.fault_plan is not None:
+            self.fault_plan.fire("wal_write", epoch=epoch)
+        host_records = [(now, np.asarray(emb), np.asarray(g, np.int32),
+                         hg, hard) for now, emb, g, hg, hard in records]
+        self._wal.write(self._frame({
+            "epoch": int(epoch), "records": host_records,
+            "soft_clears": list(soft_clears), "touches": list(touches)}))
+        self._wal.flush()
+        os.fsync(self._wal.fileno())
+        self.epochs_logged += 1
+
+    def maybe_snapshot(self, state, buffer: CommitBuffer) -> None:
+        if buffer.epoch % self.snapshot_every == 0:
+            self.snapshot(state, buffer)
+
+    def snapshot(self, state, buffer: CommitBuffer) -> None:
+        """Atomically snapshot the full store + buffer counters, then
+        truncate the WAL (safe in either order — see class docstring)."""
+        import os
+
+        import numpy as np
+        from repro.training.checkpoint import save_checkpoint
+        save_checkpoint(self.snap_path, {
+            "state": state,
+            "meta": np.asarray([buffer.epoch, buffer.entries_applied],
+                               np.int64)})
+        self._wal.close()
+        self._wal = open(self.wal_path, "wb")   # truncate
+        self._wal.flush()
+        os.fsync(self._wal.fileno())
+        self.snapshots += 1
+
+    def close(self) -> None:
+        if not self._wal.closed:
+            self._wal.close()
+
+    def stats(self) -> dict:
+        return {"epochs_logged": self.epochs_logged,
+                "snapshots": self.snapshots}
+
+    # -- recovery -------------------------------------------------------
+    @staticmethod
+    def recover(path: str, mem_cfg: MemoryConfig):
+        """Rebuild the store from ``<path>`` after a crash.
+
+        Returns ``(state, epoch, entries_applied)`` — the recovered
+        :class:`MemoryState` plus the buffer counters a resumed stream
+        must continue from — or ``None`` if the directory holds neither
+        snapshot nor WAL (a fresh site). Replays every complete WAL
+        record newer than the snapshot through
+        :meth:`CommitBuffer.apply_ops`, in epoch (= file) order.
+        """
+        import os
+
+        import numpy as np
+        from repro.training.checkpoint import load_checkpoint
+        snap_path = os.path.join(path, "snapshot.npz")
+        wal_path = os.path.join(path, "wal.log")
+        have_snap = os.path.exists(snap_path)
+        have_wal = os.path.exists(wal_path) and \
+            os.path.getsize(wal_path) > 0
+        if not have_snap and not have_wal:
+            return None
+        if have_snap:
+            tree = load_checkpoint(snap_path)
+            state = jax.tree.map(jnp.asarray, tree["state"])
+            epoch, entries = (int(x) for x in np.asarray(tree["meta"]))
+        else:
+            state, epoch, entries = init_memory(mem_cfg), 0, 0
+        replay = CommitBuffer()
+        replay.epoch, replay.entries_applied = epoch, entries
+        for rec in MemoryJournal._read_records(wal_path):
+            if rec["epoch"] <= epoch:
+                continue                      # snapshot already covers it
+            state, _ = replay.apply_ops(state, rec["records"],
+                                        rec["soft_clears"],
+                                        rec["touches"])
+            replay.epoch = rec["epoch"]       # keep numbering exact
+        return state, replay.epoch, replay.entries_applied
+
+
+# ---------------------------------------------------------------------------
 # Commit stream — the serve/learn interface around the commit buffer
 # ---------------------------------------------------------------------------
 
@@ -466,13 +662,24 @@ class CommitStream:
     A standalone controller owns a private stream with itself as the only
     view; the serving fabric (:mod:`repro.serving.fabric`) passes one
     shared stream to all its replicas.
+
+    With a :class:`MemoryJournal` attached the stream is
+    crash-consistent: each epoch's ops are journaled (write-ahead,
+    fsynced) before the in-memory apply, and the store is periodically
+    snapshotted — see :meth:`MemoryJournal.recover` /
+    :func:`open_journaled_stream`. A :class:`repro.serving.faults`
+    fault plan fires at the ``wal_write`` / ``commit_apply`` boundary so
+    the crash-consistency property is testable deterministically.
     """
 
-    def __init__(self, buffer: CommitBuffer | None = None):
+    def __init__(self, buffer: CommitBuffer | None = None, *,
+                 journal: "MemoryJournal | None" = None, fault_plan=None):
         self.buffer = buffer if buffer is not None else CommitBuffer()
         self.lock = threading.RLock()
         self.commits = 0             # entries ever committed (host-side)
         self._views: list = []       # controllers mirroring the store
+        self.journal = journal
+        self.fault_plan = fault_plan
 
     def subscribe(self, view) -> None:
         """Register a controller whose ``.memory`` tracks this stream's
@@ -489,14 +696,69 @@ class CommitStream:
     def apply(self, state):
         """Apply the staged epoch to ``state`` and broadcast the new
         store to every subscribed view atomically (one lock hold covers
-        the apply, the counter bump and all view updates). Returns the
-        new store."""
+        the apply, the counter bump and all view updates). With a
+        journal, the epoch is made durable (write-ahead) before the
+        apply; the ``commit_apply`` fault site fires between the two —
+        the kill-mid-epoch point the recovery property tests. Returns
+        the new store."""
         with self.lock:
-            state, n = self.buffer.apply(state)
+            if not self.buffer.pending:
+                return state
+            records, soft_clears, touches = self.buffer.take_ops()
+            epoch = self.buffer.epoch + 1
+            if self.journal is not None:
+                self.journal.log_epoch(epoch, records, soft_clears,
+                                       touches)
+            if self.fault_plan is not None:
+                self.fault_plan.fire("commit_apply", epoch=epoch)
+            state, n = self.buffer.apply_ops(state, records, soft_clears,
+                                             touches)
             self.commits += n
             for v in self._views:
                 v.memory = state
+            if self.journal is not None:
+                self.journal.maybe_snapshot(state, self.buffer)
         return state
+
+    def commit_direct(self, state, *, record=None, soft_clear=None,
+                      touch_op=None):
+        """Commit the sequential controller's per-request write as one
+        single-op epoch through the staged path (so it hits the journal
+        like any drain epoch). ``record`` is a ``stage_add`` tuple
+        ``(emb, guide, has_guide, hard, now)``; ``soft_clear`` /
+        ``touch_op`` are ``(index, now, ptr_snapshot)``. Returns the new
+        store. Byte-identical to the direct ``add``/``mark_soft``/
+        ``touch`` calls it replaces (a K=1 ``add_batch`` is the pinned
+        equivalent of ``add``) — the sequential controller only routes
+        through here when a journal is attached."""
+        with self.lock:
+            if record is not None:
+                emb, guide, has_guide, hard, now = record
+                self.buffer.stage_add(emb, guide, has_guide, hard, now)
+            if soft_clear is not None:
+                self.buffer.stage_soft_clear(*soft_clear)
+            if touch_op is not None:
+                self.buffer.stage_touch(*touch_op)
+            return self.apply(state)
+
+
+def open_journaled_stream(path: str, mem_cfg: MemoryConfig, *,
+                          snapshot_every: int = 8, fault_plan=None):
+    """Open (or re-open after a crash) a journaled commit stream at
+    ``path``. Returns ``(stream, recovered_state)`` — ``recovered_state``
+    is the byte-identical pre-crash store (``None`` for a fresh site).
+    The stream's buffer counters resume from the recovered epoch, so WAL
+    epoch numbering stays monotone across restarts."""
+    recovered = MemoryJournal.recover(path, mem_cfg)
+    journal = MemoryJournal(path, snapshot_every=snapshot_every,
+                            fault_plan=fault_plan)
+    stream = CommitStream(journal=journal, fault_plan=fault_plan)
+    state = None
+    if recovered is not None:
+        state, epoch, entries = recovered
+        stream.buffer.epoch = epoch
+        stream.buffer.entries_applied = entries
+    return stream, state
 
 
 # ---------------------------------------------------------------------------

@@ -72,6 +72,7 @@ import numpy as np
 from repro.core import decisions
 from repro.core import memory as mem
 from repro.core import shadow as shq
+from repro.core.fm import TierUnavailableError
 from repro.core.rar import RAR, Outcome, select_guides, splice_guides
 
 
@@ -116,16 +117,45 @@ class MicrobatchRAR(RAR):
                                mode=self.cfg.shadow_mode,
                                flush_every=self.cfg.shadow_flush_every,
                                buffer=self.commit_stream.buffer,
-                               store_lock=self.commit_stream.lock)
+                               store_lock=self.commit_stream.lock,
+                               fault_plan=self.fault_plan)
 
     # ------------------------------------------------------------------
-    def flush_shadow(self) -> None:
+    def flush_shadow(self, timeout: float | None = None) -> None:
         """Barrier: drain all pending shadow items and apply their
-        commits; every outstanding Outcome is resolved on return."""
-        self.shadow.flush()
+        commits; every outstanding Outcome is resolved on return (except
+        probes deferred behind a still-open breaker, which stay
+        parked)."""
+        self.replay_deferred()
+        self.shadow.flush(timeout=timeout)
 
     def close_shadow(self) -> None:
+        self.replay_deferred()
         self.shadow.close()
+
+    def replay_deferred(self, force: bool = False) -> int:
+        """Batched replay of probes deferred during a strong-tier
+        outage: one strong sweep recovers the answers the probes were
+        waiting on, then a synchronous drain epoch resolves them through
+        the normal shadow plane (their Outcomes' ``case``/
+        ``strong_calls`` update in place; ``response``/``served_by``
+        stay weak). Skips while the breaker is open unless ``force``."""
+        if not self.deferred_probes or \
+                not (force or self._strong_ok()):
+            return 0
+        items, self.deferred_probes = self.deferred_probes, []
+        try:
+            strong_ans = _answers(self.strong,
+                                  [it.prompt for it in items])
+        except TierUnavailableError:
+            self.deferred_probes = items + self.deferred_probes
+            return 0
+        for it, a in zip(items, strong_ans):
+            it.strong_ans = int(a)
+            it.strong_calls = 1
+        self.shadow.drain_now(items)
+        self.probes_replayed += len(items)
+        return len(items)
 
     # ------------------------------------------------------------------
     def _lookup_batch(self, embs, guides_only: bool = False
@@ -185,33 +215,45 @@ class MicrobatchRAR(RAR):
             ptr_snap = self._ptr_base + self.commit_stream.commits
 
         # ---- phase 2: partition (the decision core's classification —
-        # the same code path the sequential controller runs per request)
+        # the same code path the sequential controller runs per request).
+        # The strong tier's breaker feeds in as a routing input: while it
+        # is open, hard/shadow requests land in the degraded groups.
         part = decisions.partition(
             q, nows, self.cfg,
-            lambda i: self.route_weak_fn(np.asarray(embs[i]), keys[i]))
+            lambda i: self.route_weak_fn(np.asarray(embs[i]), keys[i]),
+            strong_ok=self._strong_ok())
         outcomes: list[Outcome | None] = [None] * B
 
         # ---- phase 3: one strong sweep (memory_hard + shadow requests).
         # The shadow requests' strong answer is user-facing (§III-D: the
         # strong FM serves while learning happens in the background), so
-        # it stays on the serve plane.
+        # it stays on the serve plane. If the sweep itself hits an outage
+        # (the routing peek raced the breaker), the whole strong side of
+        # the batch degrades mid-flight — no errored requests.
         items: list[shq.ShadowItem] = []
         strong_reqs = part.hard + [i for i, _ in part.shadow]
         if strong_reqs:
-            strong_ans = _answers(self.strong, [prompts[i]
-                                                for i in strong_reqs])
-            for i, a in zip(part.hard, strong_ans):
-                outcomes[i] = Outcome(int(a), "strong", 1, "memory_hard")
-            for (i, reprobe), a in zip(part.shadow,
-                                       strong_ans[len(part.hard):]):
-                out = Outcome(int(a), "strong", 1, shq.PENDING)
-                outcomes[i] = out
-                items.append(shq.ShadowItem(
-                    seq=self.shadow.next_seq(), now=nows[i],
-                    prompt=prompts[i], guide_request=guide_requests[i],
-                    emb=np.asarray(embs[i]), strong_ans=int(a),
-                    outcome=out, reprobe_index=reprobe,
-                    ptr_snapshot=ptr_snap))
+            try:
+                strong_ans = _answers(self.strong, [prompts[i]
+                                                    for i in strong_reqs])
+            except TierUnavailableError:
+                part.hard_degraded += part.hard
+                part.deferred += part.shadow
+                part.hard, part.shadow = [], []
+            else:
+                for i, a in zip(part.hard, strong_ans):
+                    outcomes[i] = Outcome(int(a), "strong", 1,
+                                          "memory_hard")
+                for (i, reprobe), a in zip(part.shadow,
+                                           strong_ans[len(part.hard):]):
+                    out = Outcome(int(a), "strong", 1, shq.PENDING)
+                    outcomes[i] = out
+                    items.append(shq.ShadowItem(
+                        seq=self.shadow.next_seq(), now=nows[i],
+                        prompt=prompts[i], guide_request=guide_requests[i],
+                        emb=np.asarray(embs[i]), strong_ans=int(a),
+                        outcome=out, reprobe_index=reprobe,
+                        ptr_snapshot=ptr_snap))
 
         # ---- phase 4: one weak *serve* sweep (guided hits, bare hits,
         # router passthroughs). Shadow weak probes are not serve work and
@@ -231,6 +273,16 @@ class MicrobatchRAR(RAR):
         for i in part.router:
             weak_prompts.append(prompts[i])
             weak_tags.append(("router", i))
+        # degraded groups ride the same weak sweep (appended after the
+        # regular groups, so non-degraded batches are byte-identical to
+        # the pre-resilience sweep order)
+        for i in part.hard_degraded:
+            weak_prompts.append(prompts[i])
+            weak_tags.append(("hard_degraded", i))
+        deferred_reprobe = dict(part.deferred)
+        for i, _ in part.deferred:
+            weak_prompts.append(prompts[i])
+            weak_tags.append(("deferred", i))
         if weak_prompts:
             weak_ans = _answers(self.weak, weak_prompts)
             for (tag, i), a in zip(weak_tags, weak_ans):
@@ -240,6 +292,23 @@ class MicrobatchRAR(RAR):
                                           guide_source="memory")
                 elif tag == "skill":
                     outcomes[i] = Outcome(a, "weak", 0, "memory_skill")
+                elif tag == "hard_degraded":
+                    outcomes[i] = Outcome(a, "weak", 0,
+                                          "memory_hard_degraded")
+                elif tag == "deferred":
+                    # weak serves now; the suppressed strong probe parks
+                    # until the breaker closes (replay_deferred)
+                    out = Outcome(a, "weak", 0, "shadow_deferred")
+                    outcomes[i] = out
+                    self.deferred_probes.append(shq.ShadowItem(
+                        seq=self.shadow.next_seq(), now=nows[i],
+                        prompt=prompts[i],
+                        guide_request=guide_requests[i],
+                        emb=np.asarray(embs[i]), strong_ans=-1,
+                        outcome=out,
+                        reprobe_index=deferred_reprobe[i],
+                        ptr_snapshot=ptr_snap, strong_calls=0))
+                    self.probes_deferred += 1
                 else:
                     outcomes[i] = Outcome(a, "weak", 0, "router_weak")
 
@@ -352,20 +421,28 @@ class MicrobatchRAR(RAR):
         # + guided weak probes (Case 2b)
         failed: list[shq.ShadowItem] = []
         if still and self.cfg.allow_fresh_guides:
-            for it in still:
-                it.strong_calls += 1
-                fresh_ran.add(it.seq)
-            fresh = _guides(self.strong,
-                            [it.guide_request for it in still],
-                            self.cfg.memory.guide_len)
-            probe_ans = _answers(self.weak,
-                                 [splice_guides(it.prompt, [g])
-                                  for it, g in zip(still, fresh)])
-            for it, g, a in zip(still, fresh, probe_ans):
-                if self.aligned_fn(int(a), it.strong_ans):
-                    settle(it, "case2b", g)
-                else:
-                    failed.append(it)
+            try:
+                fresh = _guides(self.strong,
+                                [it.guide_request for it in still],
+                                self.cfg.memory.guide_len)
+            except TierUnavailableError:
+                # strong tier down mid-drain: no fresh guide available —
+                # the items resolve as Case 3, exactly like the
+                # sequential probe's degraded case-2b leg (no strong
+                # call charged)
+                failed = still
+            else:
+                for it in still:
+                    it.strong_calls += 1
+                    fresh_ran.add(it.seq)
+                probe_ans = _answers(self.weak,
+                                     [splice_guides(it.prompt, [g])
+                                      for it, g in zip(still, fresh)])
+                for it, g, a in zip(still, fresh, probe_ans):
+                    if self.aligned_fn(int(a), it.strong_ans):
+                        settle(it, "case2b", g)
+                    else:
+                        failed.append(it)
         else:
             failed = still
 

@@ -97,7 +97,8 @@ class ShadowQueue:
     """
 
     def __init__(self, runner, mode: str = "inline", flush_every: int = 1,
-                 buffer=None, drain_delay: float = 0.0, store_lock=None):
+                 buffer=None, drain_delay: float = 0.0, store_lock=None,
+                 fault_plan=None):
         if mode not in MODES:
             raise ValueError(f"shadow mode {mode!r} not in {MODES}")
         from repro.core.memory import CommitBuffer
@@ -106,6 +107,9 @@ class ShadowQueue:
         self.flush_every = flush_every
         self.buffer = buffer if buffer is not None else CommitBuffer()
         self.drain_delay = drain_delay
+        # fault-injection hook: the "drain" site fires at the start of
+        # every drain epoch (None = no-op)
+        self.fault_plan = fault_plan
         # ``store_lock`` may be injected so several queues share one lock
         # (the fabric's replicas all serialize against the same
         # ``CommitStream.lock``); standalone queues own a private one
@@ -161,34 +165,65 @@ class ShadowQueue:
             self.flush()
 
     # -- barriers -------------------------------------------------------
-    def flush(self) -> None:
+    def flush(self, timeout: float | None = None) -> None:
         """Synchronous barrier: drain everything pending and apply all
-        commits before returning. In async mode, waits for the worker (and
-        re-raises any exception it hit)."""
+        commits before returning. In async mode, waits for the worker
+        (and re-raises any exception it hit); ``timeout`` bounds that
+        wait — on expiry a :class:`TimeoutError` is raised and the
+        pending work stays queued (the barrier can be retried)."""
         if self.mode == "async" and self._worker is not None \
                 and self._worker.is_alive():
             with self._cv:
                 self._flush_requested = True
                 self._cv.notify_all()
-                self._cv.wait_for(
+                done = self._cv.wait_for(
                     lambda: (not self._items and not self._draining)
-                    or self._error is not None)
+                    or self._error is not None, timeout=timeout)
                 self._flush_requested = False
+            if not done:
+                raise TimeoutError(
+                    f"shadow flush timed out after {timeout}s "
+                    f"(drainer still busy)")
             self._reraise()
             return
         items = self._take()
         if items:
             self._drain(items)
 
-    def close(self) -> None:
+    def drain_now(self, items: list[ShadowItem]) -> None:
+        """Run one drain epoch synchronously over externally-held items —
+        the deferred-probe *replay* path (items parked during a
+        strong-tier outage never entered the queue). Counted in the
+        enqueue/drain stats so ``items_enqueued == items_drained`` stays
+        a barrier invariant."""
+        if not items:
+            return
+        self._reraise()
+        self.items_enqueued += len(items)
+        self._drain(items)
+
+    def close(self, timeout: float | None = 60) -> None:
         """Flush, then stop the worker thread. Idempotent; a later submit
-        in async mode lazily restarts the worker."""
-        self.flush()
+        in async mode lazily restarts the worker.
+
+        Raises on a wedged drainer instead of orphaning it: a
+        :class:`TimeoutError` if the flush barrier cannot complete, a
+        :class:`RuntimeError` if the worker thread does not exit within
+        ``timeout`` — in both cases the worker reference is *kept* (the
+        daemon is still live and may still drain into the store), so the
+        caller knows the store is not quiesced and can retry."""
+        self.flush(timeout=timeout)
         if self._worker is not None:
             with self._cv:
                 self._stop = True
                 self._cv.notify_all()
-            self._worker.join(timeout=60)
+            self._worker.join(timeout=timeout)
+            if self._worker.is_alive():
+                raise RuntimeError(
+                    f"shadow drainer did not stop within {timeout}s — "
+                    f"the store is NOT quiesced (a live drainer may "
+                    f"still apply commits); retry close() once it "
+                    f"unwedges")
             self._worker = None
             self._stop = False
 
@@ -200,6 +235,10 @@ class ShadowQueue:
             return items
 
     def _drain(self, items: list[ShadowItem]) -> None:
+        if self.fault_plan is not None:
+            # injected drainer fault: propagates like a real drain
+            # exception (inline → caller; async → surfaced at barrier)
+            self.fault_plan.fire("drain")
         if self.drain_delay:
             import time
             time.sleep(self.drain_delay)

@@ -65,6 +65,7 @@ def run_rar_experiment(system: TrainedSystem, pool: list[Sample], *,
                        shadow_mode: str | None = None,
                        shadow_flush_every: int | None = None,
                        shadow_dedup_sim: float | None = None,
+                       fault_plan=None,
                        verbose: bool = False,
                        progress_every: int = 0
                        ) -> tuple[list[StageResult], RAR]:
@@ -106,6 +107,12 @@ def run_rar_experiment(system: TrainedSystem, pool: list[Sample], *,
     (see :mod:`repro.core.shadow`). A flush barrier runs at every stage
     end, so per-stage results are exact (all provisional shadow outcomes
     resolved before tallying) in every mode.
+
+    ``fault_plan``: a :class:`repro.serving.faults.FaultPlan` threaded
+    into the controller/fabric — deterministic fault injection (replica
+    crashes, tier outages, drain/WAL faults) for soak and recovery
+    experiments. ``None`` (default) is a strict no-op. The resilience
+    *response* knobs (retries, breaker, journal) live on ``rar_cfg``.
 
     ``progress_every``: print a throughput/memory-occupancy line every N
     served requests (0 = off). The occupancy read is the controller's
@@ -165,11 +172,12 @@ def run_rar_experiment(system: TrainedSystem, pool: list[Sample], *,
                              "sequential protocol); warm up at replicas=1")
         from repro.serving.fabric import ServingFabric
         rar = ServingFabric(system.weak, strong, embed_fn, route_fn,
-                            rar_cfg, replicas=replicas)
+                            rar_cfg, replicas=replicas,
+                            fault_plan=fault_plan)
     else:
         controller_cls = MicrobatchRAR if microbatch > 1 else RAR
         rar = controller_cls(system.weak, strong, embed_fn, route_fn,
-                             rar_cfg)
+                             rar_cfg, fault_plan=fault_plan)
 
     if prepopulate_from is not None:
         pre_prompts, pre_greqs = _prompts(system, prepopulate_from)

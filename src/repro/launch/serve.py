@@ -6,6 +6,18 @@ synthetic-suite system end-to-end; production zoo archs slot in as tiers
 via --weak-arch/--strong-arch in dry-run form (see repro.launch.dryrun for
 the distributed serve_step itself).
 
+Recovery plane: the launcher exposes the fault-tolerance stack of
+``repro.serving`` — tier-call retries with exponential backoff
+(--tier-max-retries/--tier-timeout), a strong-tier circuit breaker that
+degrades routing to weak-only while open (--breaker-threshold/
+--breaker-cooldown; suppressed shadow probes are deferred and replayed
+when the breaker closes), bounded crash redispatch across serve replicas
+(--max-redispatch), and a crash-consistent guide store via write-ahead
+journaling + snapshots (--journal-path/--snapshot-every: restart with the
+same path and the pre-crash memory is recovered byte-identically). All
+default OFF; with the defaults the serve path is byte-identical to the
+pre-resilience launcher.
+
 Usage:
     PYTHONPATH=src python -m repro.launch.serve --requests 200 --domain 0
 """
@@ -23,7 +35,13 @@ from repro.experiments.stages import run_rar_experiment
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description="Serve a request stream through the RAR layered "
+                    "system (weak/strong tiers + adaptive router + "
+                    "guide memory), with optional replication and a "
+                    "recovery plane: tier retries, circuit-breaker "
+                    "degraded routing, crash redispatch, and "
+                    "journaled crash-consistent memory.")
     ap.add_argument("--requests", type=int, default=200)
     ap.add_argument("--domain", type=int, default=0)
     ap.add_argument("--stages", type=int, default=3)
@@ -73,6 +91,40 @@ def main() -> None:
                          "(pays off with deferred/async drains, where "
                          "duplicates pile up between barriers; default "
                          "off)")
+    # -- recovery plane (all default off; off = byte-identical serve) --
+    ap.add_argument("--tier-max-retries", type=int, default=0,
+                    help="retries per FM tier call on transient failure "
+                         "(exponential backoff + jitter); 0 = off — a "
+                         "tier exception propagates as before")
+    ap.add_argument("--tier-timeout", type=float, default=None,
+                    help="per-call tier timeout in seconds (counts as a "
+                         "transient failure toward retries/breaker); "
+                         "default: no timeout")
+    ap.add_argument("--breaker-threshold", type=int, default=0,
+                    help="consecutive tier failures that open the "
+                         "circuit breaker; while the STRONG breaker is "
+                         "open, routing degrades to weak-only (memory-"
+                         "hard served weak, shadow probes deferred and "
+                         "replayed once a half-open probe closes the "
+                         "breaker). 0 = no breaker")
+    ap.add_argument("--breaker-cooldown", type=float, default=1.0,
+                    help="seconds an open breaker waits before the "
+                         "half-open probe call")
+    ap.add_argument("--max-redispatch", type=int, default=2,
+                    help="times a crashed replica's microbatch is re-"
+                         "dispatched to a surviving replica before its "
+                         "ticket surfaces the error (fabric mode; the "
+                         "crash point precedes all side effects, so a "
+                         "redispatched run is byte-identical)")
+    ap.add_argument("--journal-path", default=None,
+                    help="directory for the guide store's write-ahead "
+                         "log + snapshots; every commit epoch is "
+                         "journaled before it applies, and a restart "
+                         "with the same path recovers the pre-crash "
+                         "store byte-identically (default: no journal)")
+    ap.add_argument("--snapshot-every", type=int, default=8,
+                    help="snapshot the journaled store every N commit "
+                         "epochs (bounds WAL replay length at recovery)")
     ap.add_argument("--log-every", type=int, default=64,
                     help="serve-loop progress every N requests (0 = off); "
                          "throttled because the memory-occupancy read "
@@ -100,7 +152,14 @@ def main() -> None:
                           shadow_mode=args.shadow_mode,
                           shadow_flush_every=args.shadow_flush_every,
                           shadow_dedup_sim=args.shadow_dedup_sim,
-                          reprobe_period=2 * len(pool))
+                          reprobe_period=2 * len(pool),
+                          tier_max_retries=args.tier_max_retries,
+                          tier_timeout=args.tier_timeout,
+                          breaker_threshold=args.breaker_threshold,
+                          breaker_cooldown=args.breaker_cooldown,
+                          max_redispatch=args.max_redispatch,
+                          journal_path=args.journal_path,
+                          snapshot_every=args.snapshot_every)
     t0 = time.time()
     results, rar = run_rar_experiment(
         system, pool, n_stages=args.stages, rar_cfg=cfg,

@@ -1,6 +1,11 @@
 from repro.serving.engine import ServingEngine, greedy_generate
 
-__all__ = ["ServingEngine", "greedy_generate", "ServingFabric", "Ticket"]
+__all__ = ["ServingEngine", "greedy_generate", "ServingFabric", "Ticket",
+           "FaultPlan", "FaultSpec", "InjectedFault", "ReplicaCrash",
+           "random_plan"]
+
+_FAULTS = ("FaultPlan", "FaultSpec", "InjectedFault", "ReplicaCrash",
+           "random_plan")
 
 
 def __getattr__(name):
@@ -11,4 +16,7 @@ def __getattr__(name):
     if name in ("ServingFabric", "Ticket"):
         from repro.serving import fabric
         return getattr(fabric, name)
+    if name in _FAULTS:
+        from repro.serving import faults
+        return getattr(faults, name)
     raise AttributeError(name)

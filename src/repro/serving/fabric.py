@@ -37,16 +37,53 @@ same drain schedule, same commit stream mechanics — and is pinned
 **byte-identical** to it in ``tests/test_fabric.py`` (Outcome stream,
 memory state, FM-call counts, RQ2 counters). That is the machine-
 checkable base the N-replica threaded mode is built on.
+
+Recovery plane (fault tolerance)
+--------------------------------
+* **Replica supervision** — every replica carries a health state
+  (``healthy`` / ``suspect`` / ``dead``). A worker that dies with a
+  :class:`repro.serving.faults.ReplicaCrash` (fired *before* any side
+  effect of its microbatch) is marked dead, restarted against the shared
+  commit-stream view, and the failed ticket's microbatch is
+  **redispatched** to a surviving replica — bounded by
+  ``RARConfig.max_redispatch``, after which the :class:`Ticket` surfaces
+  the error exactly as an unsupervised failure would. Because the crash
+  precedes the clock advance and every FM call, the redispatched run is
+  *byte-identical* to a no-fault run (pinned in ``tests/test_faults.py``).
+  Application exceptions (anything that is not a ``ReplicaCrash``) still
+  surface on the ticket without redispatch: re-running a batch whose
+  side effects already landed would double-serve it. ``suspect`` marks a
+  replica whose last batch served degraded (strong tier shed) — cleared
+  by the next clean serve.
+* **Tier resilience** — with any ``RARConfig`` resilience knob on, the
+  fabric wraps the tiers in one shared
+  :class:`repro.core.fm.ResilientTier` (single breaker across replicas:
+  an outage observed by one replica degrades routing on all of them).
+* **Crash-consistent memory** — ``RARConfig.journal_path`` attaches a
+  write-ahead :class:`repro.core.memory.MemoryJournal` to the shared
+  commit stream; on construction the fabric recovers the pre-crash
+  store byte-identically.
+* **Bounded barriers** — :meth:`join` / :meth:`flush_shadow` take an
+  optional ``timeout`` (matching :meth:`Ticket.wait`): on expiry the
+  un-served tickets stay registered and a :class:`TimeoutError` is
+  raised instead of blocking forever on a wedged replica.
 """
 from __future__ import annotations
 
 import dataclasses
 import queue as _queue
 import threading
+import time
 
+from repro.core import decisions
 from repro.core import memory as mem
+from repro.core.fm import ResilientTier
 from repro.core.pipeline import MicrobatchRAR
-from repro.core.rar import Outcome, RARConfig
+from repro.core.rar import Outcome, RARConfig, retry_policy
+from repro.serving.faults import ReplicaCrash
+
+#: replica health states (supervision)
+HEALTH = ("healthy", "suspect", "dead")
 
 
 class _SharedClock:
@@ -95,10 +132,16 @@ class Ticket:
     """Handle for one dispatched microbatch: resolves to the Outcome list
     once the owning replica's serve sweep completes (shadow outcomes may
     still be provisional until a :meth:`ServingFabric.flush_shadow`
-    barrier, exactly as with a standalone ``MicrobatchRAR``)."""
+    barrier, exactly as with a standalone ``MicrobatchRAR``).
+
+    ``redispatches`` counts supervisor re-runs after a replica crash
+    (``replica`` is rewritten to the surviving replica each time); a
+    timed-out :meth:`wait` leaves the ticket fully waitable — the batch
+    is still in flight, not abandoned."""
     replica: int
     outcomes: list[Outcome] | None = None
     error: BaseException | None = None
+    redispatches: int = 0
     _done: threading.Event = dataclasses.field(
         default_factory=threading.Event)
 
@@ -116,23 +159,51 @@ class ServingFabric:
 
     def __init__(self, weak, strong, embed_fn, route_weak_fn,
                  cfg: RARConfig | None = None, *, replicas: int = 1,
-                 memory=None, aligned_fn=None):
+                 memory=None, aligned_fn=None, fault_plan=None):
         if replicas < 1:
             raise ValueError(f"replicas={replicas} must be >= 1")
         cfg = cfg if cfg is not None else RARConfig()
         self.cfg = cfg
-        self.commit_stream = mem.CommitStream()
+        self.fault_plan = fault_plan
+        # crash-consistent memory: a journal_path attaches a WAL +
+        # snapshot journal to the shared stream and recovers the
+        # pre-crash store before any replica is built
+        recovered = None
+        if cfg.journal_path is not None:
+            self.commit_stream, recovered = mem.open_journaled_stream(
+                cfg.journal_path, cfg.memory,
+                snapshot_every=cfg.snapshot_every, fault_plan=fault_plan)
+        else:
+            self.commit_stream = mem.CommitStream(fault_plan=fault_plan)
+        # tier resilience is fabric-level: ONE shared wrapper (and
+        # breaker) across replicas, so an outage seen by any replica
+        # degrades routing on all of them. RAR.__init__'s isinstance
+        # check makes replica construction a no-op re-wrap.
+        if cfg.tier_resilience:
+            policy = retry_policy(cfg)
+            if not isinstance(weak, ResilientTier):
+                weak = ResilientTier(weak, policy, name="weak",
+                                     fault_plan=fault_plan, seed=1)
+            if not isinstance(strong, ResilientTier):
+                strong = ResilientTier(strong, policy, name="strong",
+                                       fault_plan=fault_plan, seed=2)
         self.clock = _SharedClock()
         self._drain_lock = threading.Lock()
         # one store, N views: the functional MemoryState is shared by
         # reference and re-broadcast on every commit apply; a mutable
         # ShardedMemory is the same object in every view, made
         # reader-atomic by the stream's lock
-        store = memory if memory is not None else mem.init_memory(cfg.memory)
+        if memory is not None:
+            store = memory
+        elif recovered is not None:
+            store = recovered
+        else:
+            store = mem.init_memory(cfg.memory)
         self.replicas = [
             _FabricReplica(self, i, weak, strong, embed_fn, route_weak_fn,
                            cfg, aligned_fn=aligned_fn, memory=store,
-                           commit_stream=self.commit_stream)
+                           commit_stream=self.commit_stream,
+                           fault_plan=fault_plan)
             for i in range(replicas)]
         #: the learn replica: owns every shadow drain (and therefore the
         #: RQ2 guide counters)
@@ -140,8 +211,15 @@ class ServingFabric:
         self._rr = 0
         self._dispatch_lock = threading.Lock()
         self._queues: list[_queue.Queue] | None = None
-        self._threads: list[threading.Thread] = []
+        # indexed parallel to ``replicas`` so a supervisor restart
+        # replaces exactly its slot
+        self._threads: list[threading.Thread | None] = []
         self._tickets: list[Ticket] = []
+        #: supervision state, one entry per replica (∈ :data:`HEALTH`)
+        self.health: list[str] = ["healthy"] * replicas
+        self.deaths = 0        # worker threads lost to a ReplicaCrash
+        self.restarts = 0      # supervisor restarts
+        self.redispatches = 0  # microbatches re-run on a survivor
 
     # -- learn plane ----------------------------------------------------
     def _drain(self, items) -> None:
@@ -181,12 +259,15 @@ class ServingFabric:
                 return
             queues = [_queue.Queue() for _ in self.replicas]
             self._queues = queues
+            self._threads = [None] * len(self.replicas)
             for i in range(len(self.replicas)):
-                t = threading.Thread(target=self._worker, args=(i,),
-                                     name=f"serve-replica-{i}",
-                                     daemon=True)
-                self._threads.append(t)
-                t.start()
+                self._spawn_worker_locked(i)
+
+    def _spawn_worker_locked(self, i: int) -> None:
+        t = threading.Thread(target=self._worker, args=(i,),
+                             name=f"serve-replica-{i}", daemon=True)
+        self._threads[i] = t
+        t.start()
 
     def _worker(self, i: int) -> None:
         q = self._queues[i]
@@ -194,14 +275,77 @@ class ServingFabric:
             task = q.get()
             if task is None:
                 return
-            ticket, prompts, greqs, keys, embs = task
+            ticket = task[0]
             try:
+                if self.fault_plan is not None:
+                    # the injection point is BEFORE the replica touches
+                    # the batch — no clock advance, no FM call, no store
+                    # write has happened — so a redispatched re-run is
+                    # byte-identical to a no-fault run
+                    self.fault_plan.fire("replica_serve", replica=i)
                 ticket.outcomes = self.replicas[i].process_batch(
-                    prompts, greqs, keys=keys, embs=embs)
-            except BaseException as e:    # surfaced at wait()/join()
-                ticket.error = e
-            finally:
+                    task[1], task[2], keys=task[3], embs=task[4])
+            except ReplicaCrash as e:
+                # worker dies; the supervisor restarts the slot and
+                # redispatches the (side-effect-free) microbatch
+                self._on_replica_crash(i, task, e)
+                return
+            except BaseException as e:    # surfaced at wait()/join();
+                ticket.error = e          # NOT redispatched — the batch's
+                ticket._done.set()        # side effects may have landed
+                continue
+            # supervision bookkeeping: a batch served entirely weak-only
+            # because the strong tier shed marks the replica suspect
+            # (strong plane impaired), a clean serve clears it
+            degraded = any(o.case in decisions.DEGRADED_CASES
+                           for o in ticket.outcomes)
+            self.health[i] = "suspect" if degraded else "healthy"
+            ticket._done.set()
+
+    # -- supervision -----------------------------------------------------
+    def _on_replica_crash(self, i: int, task, err: BaseException) -> None:
+        """Supervisor: the worker for replica ``i`` died mid-dispatch.
+        Mark it dead, restart the slot against the shared commit-stream
+        view (its queue — and FIFO order — survives intact), and
+        redispatch the failed microbatch to a surviving replica, bounded
+        by ``cfg.max_redispatch`` re-runs per ticket."""
+        ticket = task[0]
+        with self._dispatch_lock:
+            self.health[i] = "dead"
+            self.deaths += 1
+            self._restart_locked(i)
+            if ticket.redispatches < self.cfg.max_redispatch:
+                ticket.redispatches += 1
+                self.redispatches += 1
+                target = self._pick_healthy_locked(exclude=i)
+                ticket.replica = target
+                self._queues[target].put((ticket,) + tuple(task[1:]))
+            else:
+                # retries exhausted: surface exactly like an
+                # unsupervised failure
+                ticket.error = err
                 ticket._done.set()
+
+    def _restart_locked(self, i: int) -> None:
+        """Replace replica ``i``'s dead worker thread with a fresh one on
+        the same queue. The replica object itself needs no rebuild: its
+        store view is the shared commit stream's broadcast, so the new
+        worker picks up exactly where the crash left off."""
+        self._spawn_worker_locked(i)
+        self.health[i] = "healthy"
+        self.restarts += 1
+
+    def _pick_healthy_locked(self, exclude: int) -> int:
+        """First non-dead replica other than ``exclude`` (round-robin
+        from it); falls back to ``exclude`` itself — by the time we pick,
+        its slot has been restarted — so a 1-replica fabric still
+        recovers."""
+        n = len(self.replicas)
+        for off in range(1, n):
+            j = (exclude + off) % n
+            if self.health[j] != "dead":
+                return j
+        return exclude
 
     def submit(self, prompts, guide_requests, keys=None, embs=None,
                replica: int | None = None) -> Ticket:
@@ -218,27 +362,49 @@ class ServingFabric:
         # guarantee above)
         with self._dispatch_lock:
             if replica is None:
-                replica = self._rr % len(self.replicas)
-                self._rr += 1
+                # round-robin over non-dead replicas (a dead slot is
+                # mid-restart; every slot dead only happens transiently,
+                # then fall through to plain round-robin)
+                for _ in range(len(self.replicas)):
+                    replica = self._rr % len(self.replicas)
+                    self._rr += 1
+                    if self.health[replica] != "dead":
+                        break
             ticket = Ticket(replica=replica)
             self._tickets.append(ticket)
             self._queues[replica].put((ticket, prompts, guide_requests,
                                        keys, embs))
         return ticket
 
-    def join(self) -> None:
+    def join(self, timeout: float | None = None) -> None:
         """Barrier: every dispatched microbatch has served. Waits
         everything out first, then re-raises the first worker error —
-        one dead microbatch cannot strand the others' tickets."""
+        one dead microbatch cannot strand the others' tickets.
+
+        ``timeout`` bounds the whole barrier: on expiry the not-yet-done
+        tickets are re-registered (the barrier can be retried) and a
+        :class:`TimeoutError` is raised."""
+        deadline = (None if timeout is None
+                    else time.monotonic() + timeout)
         err: BaseException | None = None
         while True:
             with self._dispatch_lock:
                 if not self._tickets:
                     break
                 tickets, self._tickets = self._tickets, []
-            for t in tickets:
+            for n, t in enumerate(tickets):
+                remaining = (None if deadline is None
+                             else deadline - time.monotonic())
                 try:
-                    t.wait()
+                    t.wait(timeout=remaining)
+                except TimeoutError:
+                    with self._dispatch_lock:
+                        self._tickets.extend(tickets[n:])
+                    raise TimeoutError(
+                        f"fabric join timed out after {timeout}s "
+                        f"({len(tickets) - n} microbatch(es) still in "
+                        f"flight; tickets stay registered — retry "
+                        f"join())") from None
                 except BaseException as e:
                     if err is None:
                         err = e
@@ -246,12 +412,14 @@ class ServingFabric:
             raise err
 
     # -- barriers / lifecycle -------------------------------------------
-    def flush_shadow(self) -> None:
+    def flush_shadow(self, timeout: float | None = None) -> None:
         """Full barrier: all dispatched microbatches served AND every
-        replica's shadow queue drained — all outstanding Outcomes final."""
-        self.join()
+        replica's shadow queue drained — all outstanding Outcomes final.
+        ``timeout`` bounds the join leg and each replica's drain barrier
+        (per-leg, not cumulative)."""
+        self.join(timeout=timeout)
         for r in self.replicas:
-            r.flush_shadow()
+            r.flush_shadow(timeout=timeout)
 
     def close_shadow(self) -> None:
         """Flush, then stop the replica workers and the replicas' shadow
@@ -261,7 +429,8 @@ class ServingFabric:
             for q in self._queues:
                 q.put(None)
             for t in self._threads:
-                t.join(timeout=60)
+                if t is not None:
+                    t.join(timeout=60)
             self._queues, self._threads = None, []
         for r in self.replicas:
             r.close_shadow()
@@ -314,7 +483,31 @@ class ServingFabric:
                                           for r in self.replicas),
             "weak": _engine_stats(self.learn.weak),
             "strong": _engine_stats(self.learn.strong),
+            # recovery plane: supervision, degraded routing, tier
+            # resilience, journal — all host counters
+            "health": list(self.health),
+            "deaths": self.deaths,
+            "restarts": self.restarts,
+            "redispatches": self.redispatches,
+            "probes_deferred": sum(r.probes_deferred
+                                   for r in self.replicas),
+            "probes_replayed": sum(r.probes_replayed
+                                   for r in self.replicas),
+            "weak_resilience": _tier_stats(self.learn.weak),
+            "strong_resilience": _tier_stats(self.learn.strong),
+            "journal": (self.commit_stream.journal.stats()
+                        if self.commit_stream.journal is not None
+                        else None),
+            "faults": (self.fault_plan.stats()
+                       if self.fault_plan is not None else None),
         }
+
+
+def _tier_stats(tier) -> dict | None:
+    """A tier's resilience counters, when wrapped in a
+    :class:`~repro.core.fm.ResilientTier` (retries / failures / shed /
+    breaker state)."""
+    return tier.stats() if isinstance(tier, ResilientTier) else None
 
 
 def _engine_stats(tier) -> dict | None:

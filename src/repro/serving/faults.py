@@ -1,0 +1,229 @@
+"""Deterministic fault-injection harness — the recovery plane's test rig.
+
+Every failure mode the fault-tolerant fabric handles (replica crashes,
+FM-tier call errors and latency spikes, shadow-drainer faults, crashes
+around the commit journal's write-ahead/apply boundary) is driven from
+one seedable :class:`FaultPlan`, so each scenario is *reproducible*: the
+same plan against the same request stream fires the same faults at the
+same logical points, run after run. With no plan installed (the default
+everywhere) every injection site is a no-op and the system is
+byte-identical to the pre-fault-tolerance code paths — the property the
+equivalence suites pin.
+
+Injection sites (the ``site`` string each component fires)
+----------------------------------------------------------
+* ``"replica_serve"`` — fired by a fabric worker as it picks up a
+  microbatch, *before* any side effect (clock advance, FM call, store
+  read). A matching ``"crash"`` spec raises :class:`ReplicaCrash`: the
+  worker thread exits, modeling a dead worker process whose queued RPC
+  was never executed — which is what makes supervised redispatch exactly
+  outcome-preserving. Ids: ``replica`` (index).
+* ``"tier_call"`` — fired by :class:`repro.core.fm.ResilientTier` before
+  each underlying FM call. ``"error"`` raises
+  :class:`InjectedTierError` (a transient, retryable failure);
+  ``"delay"`` injects a latency spike of ``delay`` seconds — if the
+  caller passes its cooperative ``timeout`` and the spike exceeds it,
+  :class:`repro.core.fm.TierTimeout` is raised instead of sleeping, so
+  timeout tests never actually wait. Ids: ``tier`` ("weak"/"strong"),
+  ``op`` (method name).
+* ``"drain"`` — fired by the shadow queue at the start of a drain.
+  ``"error"`` raises :class:`InjectedFault` (surfaced at the next
+  barrier, exactly like a real drainer exception). Ids: none.
+* ``"wal_write"`` — fired by :class:`repro.core.memory.MemoryJournal`
+  *before* an epoch's write-ahead record is made durable. A ``"crash"``
+  models losing power before the commit hit disk: recovery restores the
+  previous epoch. Ids: ``epoch``.
+* ``"commit_apply"`` — fired by :class:`repro.core.memory.CommitStream`
+  *after* the WAL record is durable but *before* the in-memory apply. A
+  ``"crash"`` models dying mid-epoch with the commit already journaled:
+  recovery replays the epoch and lands exactly one epoch *ahead* of the
+  crashed process's memory — consistent either way. Ids: ``epoch``.
+
+Matching: a spec fires when its ``site`` matches and every key of
+``spec.match`` equals the id the site fired with. Each spec keeps its own
+hit counter over *matching* events; it acts on hits ``at .. at+count-1``
+(1-based), so "crash replica 1's third microbatch" is
+``FaultSpec("replica_serve", "crash", {"replica": 1}, at=3)``.
+
+:func:`random_plan` draws a reproducible random schedule from a seed —
+the soak test's crash/recover schedule generator.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+
+import numpy as np
+
+#: the sites components fire, and what actions make sense at each
+SITES = ("replica_serve", "tier_call", "drain", "wal_write",
+         "commit_apply")
+ACTIONS = ("crash", "error", "delay")
+
+
+class InjectedFault(RuntimeError):
+    """Base of every exception raised by a :class:`FaultPlan`."""
+
+
+class ReplicaCrash(InjectedFault):
+    """A fabric worker died before executing its queued microbatch. The
+    supervisor treats this (and only this) as redispatchable: the batch
+    had no side effects yet, so re-running it elsewhere is exact."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One planned fault: fire ``action`` at matching events number
+    ``at .. at + count - 1`` (1-based) of ``site``."""
+    site: str
+    action: str
+    match: tuple = ()          # ((key, value), ...) — ids that must match
+    at: int = 1
+    count: int = 1
+    delay: float = 0.0         # seconds, for action="delay"
+
+    def __post_init__(self):
+        if self.site not in SITES:
+            raise ValueError(f"fault site {self.site!r} not in {SITES}")
+        if self.action not in ACTIONS:
+            raise ValueError(f"fault action {self.action!r} not in "
+                             f"{ACTIONS}")
+        if self.at < 1 or self.count < 1:
+            raise ValueError(f"at={self.at}/count={self.count} must be "
+                             f">= 1 (hit numbers are 1-based)")
+        object.__setattr__(self, "match", tuple(sorted(
+            dict(self.match).items())))
+
+    def matches(self, site: str, ids: dict) -> bool:
+        return site == self.site and all(
+            k in ids and ids[k] == v for k, v in self.match)
+
+
+class FaultPlan:
+    """A deterministic schedule of injected faults (see module doc).
+
+    Thread-safe: fabric workers, the shadow drainer and the serve thread
+    may all fire concurrently; per-spec hit counters are kept under one
+    lock so a spec fires exactly ``count`` times no matter which thread
+    reaches it. ``fired`` records every fault actually raised/injected
+    (site, action, ids) in firing order — the reproducibility probe the
+    tests assert on.
+    """
+
+    def __init__(self, specs: list[FaultSpec] | tuple = (),
+                 sleep_fn=time.sleep):
+        self.specs = list(specs)
+        self._hits = [0] * len(self.specs)
+        self._lock = threading.Lock()
+        self._sleep = sleep_fn
+        self.fired: list[tuple[str, str, tuple]] = []
+
+    # -- plan construction helpers --------------------------------------
+    @staticmethod
+    def replica_crash(replica: int, at: int = 1,
+                      count: int = 1) -> FaultSpec:
+        return FaultSpec("replica_serve", "crash",
+                         (("replica", replica),), at=at, count=count)
+
+    @staticmethod
+    def tier_error(tier: str, at: int = 1, count: int = 1) -> FaultSpec:
+        return FaultSpec("tier_call", "error", (("tier", tier),), at=at,
+                         count=count)
+
+    @staticmethod
+    def tier_delay(tier: str, delay: float, at: int = 1,
+                   count: int = 1) -> FaultSpec:
+        return FaultSpec("tier_call", "delay", (("tier", tier),), at=at,
+                         count=count, delay=delay)
+
+    @staticmethod
+    def drain_error(at: int = 1, count: int = 1) -> FaultSpec:
+        return FaultSpec("drain", "error", at=at, count=count)
+
+    @staticmethod
+    def wal_crash(at: int = 1) -> FaultSpec:
+        """Die before epoch number ``at``'s WAL record is durable."""
+        return FaultSpec("wal_write", "crash", at=at)
+
+    @staticmethod
+    def apply_crash(at: int = 1) -> FaultSpec:
+        """Die after epoch number ``at``'s WAL record, mid-apply."""
+        return FaultSpec("commit_apply", "crash", at=at)
+
+    # -- firing ---------------------------------------------------------
+    def fire(self, site: str, timeout: float | None = None,
+             **ids) -> None:
+        """Called by an instrumented component at one of its injection
+        sites. Raises / sleeps according to the first matching due spec;
+        a site with no matching due spec is a no-op."""
+        due: FaultSpec | None = None
+        with self._lock:
+            for i, spec in enumerate(self.specs):
+                if spec.matches(site, ids):
+                    self._hits[i] += 1
+                    if due is None and \
+                            spec.at <= self._hits[i] < spec.at + spec.count:
+                        due = spec
+            if due is not None:
+                self.fired.append((site, due.action,
+                                   tuple(sorted(ids.items()))))
+        if due is None:
+            return
+        if due.action == "crash":
+            if site == "replica_serve":
+                raise ReplicaCrash(f"injected crash at {site} {ids}")
+            raise InjectedFault(f"injected crash at {site} {ids}")
+        if due.action == "error":
+            if site == "tier_call":
+                from repro.core.fm import InjectedTierError
+                raise InjectedTierError(
+                    f"injected tier error at {site} {ids}")
+            raise InjectedFault(f"injected error at {site} {ids}")
+        # action == "delay": a latency spike. Cooperative timeout: a
+        # caller with a deadline shorter than the spike times out
+        # immediately instead of sleeping it through.
+        if timeout is not None and due.delay > timeout:
+            from repro.core.fm import TierTimeout
+            raise TierTimeout(
+                f"injected {due.delay}s latency spike exceeds the "
+                f"{timeout}s call timeout at {site} {ids}")
+        if due.delay:
+            self._sleep(due.delay)
+
+    # -- inspection -----------------------------------------------------
+    @property
+    def n_fired(self) -> int:
+        with self._lock:
+            return len(self.fired)
+
+    def stats(self) -> dict:
+        with self._lock:
+            by_site: dict[str, int] = {}
+            for site, _, _ in self.fired:
+                by_site[site] = by_site.get(site, 0) + 1
+            return {"specs": len(self.specs), "fired": len(self.fired),
+                    "fired_by_site": by_site}
+
+
+def random_plan(seed: int, *, replicas: int = 0, crashes: int = 0,
+                tier_errors: int = 0, drain_errors: int = 0,
+                horizon: int = 50, tiers=("strong",)) -> FaultPlan:
+    """A reproducible random fault schedule — the soak test's
+    crash/recover generator. Draws fault positions in ``[1, horizon]``
+    from a seeded generator; the same seed always yields the same plan
+    (and therefore, against a deterministic stream, the same run)."""
+    rng = np.random.default_rng(seed)
+    specs: list[FaultSpec] = []
+    for _ in range(crashes):
+        specs.append(FaultPlan.replica_crash(
+            int(rng.integers(0, max(replicas, 1))),
+            at=int(rng.integers(1, horizon + 1))))
+    for _ in range(tier_errors):
+        specs.append(FaultPlan.tier_error(
+            str(rng.choice(list(tiers))),
+            at=int(rng.integers(1, horizon + 1))))
+    for _ in range(drain_errors):
+        specs.append(FaultPlan.drain_error(
+            at=int(rng.integers(1, horizon + 1))))
+    return FaultPlan(specs)
