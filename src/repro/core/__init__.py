@@ -38,19 +38,46 @@ Architecture (decision core / serve plane / learn plane):
     requests serve weak-only (``memory_hard_degraded``) and shadow
     probes are parked as deferred :class:`~repro.core.shadow.ShadowItem`
     s (``shadow_deferred``), replayed through the normal drain once the
-    breaker's half-open probe closes it.
+    breaker's half-open probe closes it. With ``breaker_adaptive`` the
+    breaker derives its *effective* threshold/cooldown from an EWMA of
+    observed per-call error rates — a tier seen to be flaky opens
+    sooner and cools longer; a clean history keeps the configured
+    knobs exactly.
   - *Crash-consistent memory* (:mod:`repro.core.memory`):
     :class:`MemoryJournal` write-ahead-logs every commit epoch (CRC-
     framed, fsync-before-apply) and snapshots periodically; recovery
     replays the WAL through the same ``CommitBuffer.apply_ops`` path
     the live drain uses, so the restored store is byte-identical.
-  - *Replica supervision* (:mod:`repro.serving.fabric`): crashed serve
-    workers restart against the shared commit-stream view and their
-    microbatch redispatches to a survivor (bounded).
+    Replay stops at the first torn or bit-rotted frame with a
+    structured :class:`~repro.core.memory.JournalCorruptionWarning`
+    (where + why) — everything before it is recovered, never a torn
+    state. Each WAL frame also carries the site's **engine-state
+    manifest** (logical clock, routing/RQ2 counters, breaker state,
+    engine call/token counters, deferred probes), fsynced atomically
+    with the store ops it pairs with, so ``recover()`` restores the
+    *whole* serving site — not just the store bytes.
+  - *Replica supervision* (:mod:`repro.serving.fabric`,
+    :mod:`repro.serving.procfabric`): crashed serve workers restart
+    against the shared commit-stream view and their microbatches
+    redispatch to a survivor (bounded). The process fabric hosts one
+    OS process per replica behind the same ``Ticket``/``submit``
+    boundary: workers hold serve-only state (a store mirror fed by the
+    epoch broadcast), the parent keeps every authoritative effect, and
+    the worker's "done" message is the atomic commit point — so a
+    heartbeat-lease supervisor (missed lease → suspect → dead) can
+    SIGKILL-detect, respawn, and redispatch byte-identically, reusing
+    the clock stamps allocated at admission. A drain-ack gate (the
+    parent acks each "done" after its drain; the worker blocks on the
+    ack before its next serve) restores the thread replica's
+    serve-after-drain order across the process boundary, so routing is
+    byte-identical under arbitrarily deep pipelined submission.
   - *Fault injection* (:mod:`repro.serving.faults`): a seedable
-    :class:`FaultPlan` fires crashes/errors/delays at the named logical
-    sites (``replica_serve``, ``tier_call``, ``drain``, ``wal_write``,
-    ``commit_apply``) — every failure mode above is reproducible.
+    :class:`FaultPlan` fires crashes/errors/delays/kills at the named
+    logical sites (``replica_serve``, ``tier_call``, ``drain``,
+    ``wal_write``, ``commit_apply``, ``heartbeat``,
+    ``transport_frame``, ``clock_skew``) — every failure mode above,
+    including hung workers and lease-clock skew, is reproducible
+    (``random_plan(seed)`` schedules them all).
 
 Equivalence chain (machine-checked): sequential ≡ microbatch B=1 ≡
 deferred flush-every-batch ≡ async with per-batch barrier ≡ 1-replica
@@ -61,15 +88,24 @@ Failure-mode invariants (machine-checked in ``tests/test_faults.py``):
 
 * a replica crash fires *before* any side effect, so a redispatched
   microbatch's outcomes + commit counters are byte-identical to a
-  no-fault run;
+  no-fault run — for thread replicas and for SIGKILL'd or hung worker
+  *processes* alike (``tests/test_procfabric.py``: the "done" message
+  is the only commit point, so death before it leaves nothing behind);
 * a kill between WAL append and commit apply recovers to one epoch
   *ahead* of the pre-crash view, a kill before the WAL append recovers
-  to the epoch *behind* — never a torn epoch either way;
+  to the epoch *behind* — never a torn epoch either way; a torn or
+  bit-rotted WAL frame stops replay exactly there, with a structured
+  warning;
+* killing a *whole fabric* and rebuilding it on the journal path
+  restores store, logical clock, counters and breaker state to what a
+  never-killed run shows at the same point (the manifest rides in the
+  same fsync as the store ops — the two can never disagree);
 * a strong-tier brownout serves every request weak-only with zero
   errored tickets, and the deferred probes replay exactly once after
   the breaker closes;
-* with no ``FaultPlan`` and the resilience knobs at their defaults,
-  every pre-existing byte-identity pin holds unchanged.
+* with no ``FaultPlan`` and the resilience knobs at their defaults
+  (``adaptive`` off, thread transport), every pre-existing
+  byte-identity pin holds unchanged.
 """
 from repro.core.rar import RAR, RARConfig, Outcome, splice_guide
 from repro.core.pipeline import MicrobatchRAR

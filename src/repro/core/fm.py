@@ -156,6 +156,8 @@ class RetryPolicy:
     jitter: bool = True               # scale each sleep by U[0.5, 1.5)
     breaker_threshold: int = 0        # consecutive failures to open; 0=off
     breaker_cooldown: float = 1.0     # seconds open before a half-open probe
+    breaker_adaptive: bool = False    # EWMA-driven threshold/cooldown
+    breaker_ewma_alpha: float = 0.2   # error-rate EWMA smoothing
 
 
 class CircuitBreaker:
@@ -174,15 +176,32 @@ class CircuitBreaker:
     peek the routing layer uses: True unless open and still cooling
     down — an elapsed cooldown reads as available because the very next
     call is the half-open probe.
+
+    With ``adaptive=True`` the breaker derives its *effective* knobs
+    from an EWMA of observed per-call error rates (1 = failure,
+    0 = success, smoothing ``ewma_alpha``): a tier observed to be flaky
+    opens after fewer consecutive failures
+    (``max(1, round(threshold · (1 − ewma)))``) and cools down longer
+    (``cooldown · (1 + ewma)``); a tier with a clean history keeps the
+    configured knobs exactly. Default OFF — with ``adaptive=False`` the
+    arithmetic never runs and every byte-identity pin over the static
+    breaker holds unchanged.
     """
 
     def __init__(self, threshold: int, cooldown: float,
-                 now_fn=time.monotonic):
+                 now_fn=time.monotonic, *, adaptive: bool = False,
+                 ewma_alpha: float = 0.2):
         if threshold < 1:
             raise ValueError(f"breaker threshold must be >= 1, "
                              f"got {threshold}")
+        if not 0.0 < ewma_alpha <= 1.0:
+            raise ValueError(f"breaker ewma_alpha must be in (0, 1], "
+                             f"got {ewma_alpha}")
         self.threshold = threshold
         self.cooldown = cooldown
+        self.adaptive = adaptive
+        self.ewma_alpha = ewma_alpha
+        self.error_ewma = 0.0
         self._now = now_fn
         self._lock = threading.Lock()
         self.state = "closed"
@@ -192,18 +211,36 @@ class CircuitBreaker:
         self.opens = 0               # times the breaker tripped open
         self.shed = 0                # calls rejected while open/probing
 
+    # -- adaptive knobs (locked callers only) ---------------------------
+    def _effective_threshold_locked(self) -> int:
+        if not self.adaptive:
+            return self.threshold
+        return max(1, round(self.threshold * (1.0 - self.error_ewma)))
+
+    def _effective_cooldown_locked(self) -> float:
+        if not self.adaptive:
+            return self.cooldown
+        return self.cooldown * (1.0 + self.error_ewma)
+
+    def _observe_locked(self, failed: bool) -> None:
+        if self.adaptive:
+            a = self.ewma_alpha
+            self.error_ewma += a * (float(failed) - self.error_ewma)
+
     def available(self) -> bool:
         """Non-mutating routing peek: would a call be allowed now?"""
         with self._lock:
             if self.state != "open":
                 return True
-            return self._now() - self._opened_at >= self.cooldown
+            return self._now() - self._opened_at >= \
+                self._effective_cooldown_locked()
 
     def before_call(self) -> None:
         """Gate one call; raises :class:`TierUnavailableError` to shed."""
         with self._lock:
             if self.state == "open":
-                if self._now() - self._opened_at < self.cooldown:
+                if self._now() - self._opened_at < \
+                        self._effective_cooldown_locked():
                     self.shed += 1
                     raise TierUnavailableError(
                         "circuit breaker open (cooling down)")
@@ -219,18 +256,20 @@ class CircuitBreaker:
 
     def record_success(self) -> None:
         with self._lock:
+            self._observe_locked(failed=False)
             self.state = "closed"
             self._failures = 0
             self._probing = False
 
     def record_failure(self) -> None:
         with self._lock:
+            self._observe_locked(failed=True)
             self._probing = False
             if self.state == "half_open":
                 self._trip_locked()
                 return
             self._failures += 1
-            if self._failures >= self.threshold:
+            if self._failures >= self._effective_threshold_locked():
                 self._trip_locked()
 
     def trip(self) -> None:
@@ -247,8 +286,39 @@ class CircuitBreaker:
 
     def stats(self) -> dict:
         with self._lock:
-            return {"state": self.state, "opens": self.opens,
-                    "shed": self.shed}
+            out = {"state": self.state, "opens": self.opens,
+                   "shed": self.shed}
+            if self.adaptive:
+                out["error_ewma"] = self.error_ewma
+                out["effective_threshold"] = \
+                    self._effective_threshold_locked()
+                out["effective_cooldown"] = \
+                    self._effective_cooldown_locked()
+            return out
+
+    # -- crash-recovery manifest hooks ----------------------------------
+    def export_state(self) -> dict:
+        """Host-side snapshot for the recovery manifest. ``opened_at``
+        is monotonic-clock-relative and meaningless across a process
+        boundary, so an open breaker is exported as *remaining* cooldown
+        semantics: restore re-opens it with a fresh cooldown (the
+        conservative choice — a recovering site re-probes no sooner than
+        the dead one would have)."""
+        with self._lock:
+            return {"state": self.state, "failures": self._failures,
+                    "opens": self.opens, "shed": self.shed,
+                    "error_ewma": self.error_ewma}
+
+    def restore_state(self, st: dict) -> None:
+        with self._lock:
+            self.state = st["state"]
+            self._failures = st["failures"]
+            self.opens = st["opens"]
+            self.shed = st["shed"]
+            self.error_ewma = st.get("error_ewma", 0.0)
+            self._probing = False
+            if self.state == "open":
+                self._opened_at = self._now()   # fresh cooldown
 
 
 #: tier surface methods routed through the retry/breaker path; everything
@@ -278,7 +348,9 @@ class ResilientTier:
         self.fault_plan = fault_plan
         self.breaker = CircuitBreaker(
             self.policy.breaker_threshold, self.policy.breaker_cooldown,
-            now_fn=now_fn) if self.policy.breaker_threshold > 0 else None
+            now_fn=now_fn, adaptive=self.policy.breaker_adaptive,
+            ewma_alpha=self.policy.breaker_ewma_alpha) \
+            if self.policy.breaker_threshold > 0 else None
         self._sleep = sleep_fn
         self._rng = np.random.default_rng(seed)
         self._lock = threading.Lock()
@@ -348,3 +420,20 @@ class ResilientTier:
         if self.breaker is not None:
             out["breaker"] = self.breaker.stats()
         return out
+
+    # -- crash-recovery manifest hooks ----------------------------------
+    def export_state(self) -> dict:
+        with self._lock:
+            out = {"retries": self.retries, "failures": self.failures,
+                   "shed_calls": self.shed_calls}
+        if self.breaker is not None:
+            out["breaker"] = self.breaker.export_state()
+        return out
+
+    def restore_state(self, st: dict) -> None:
+        with self._lock:
+            self.retries = st["retries"]
+            self.failures = st["failures"]
+            self.shed_calls = st["shed_calls"]
+        if self.breaker is not None and st.get("breaker") is not None:
+            self.breaker.restore_state(st["breaker"])

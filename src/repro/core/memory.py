@@ -421,29 +421,43 @@ class CommitBuffer:
             covered = end_ptr - snap
             return covered >= C or (idx - snap) % C < covered
 
+        def po2_chunks(seq):
+            """Split into power-of-two-sized runs (13 -> 8+4+1): the
+            jitted scatters compile one kernel per bucket size instead
+            of one per arbitrary batch length, so a coalesced replay of
+            many epochs can't trigger fresh compiles mid-serve. Order
+            is preserved, so the scatter bytes are unchanged."""
+            i = 0
+            while i < len(seq):
+                step = 1 << ((len(seq) - i).bit_length() - 1)
+                yield seq[i:i + step]
+                i += step
+
         for start in range(0, len(records), C):
-            chunk = records[start:start + C]
-            state = add_batch(
-                state,
-                jnp.asarray(np.stack([np.asarray(r[1]) for r in chunk])),
-                jnp.asarray(np.stack([np.asarray(r[2], np.int32)
-                                      for r in chunk])),
-                jnp.asarray(np.asarray([r[3] for r in chunk], bool)),
-                jnp.asarray(np.asarray([r[4] for r in chunk], bool)),
-                jnp.asarray(np.asarray([r[0] for r in chunk], np.int32)))
+            for chunk in po2_chunks(records[start:start + C]):
+                state = add_batch(
+                    state,
+                    jnp.asarray(np.stack([np.asarray(r[1])
+                                          for r in chunk])),
+                    jnp.asarray(np.stack([np.asarray(r[2], np.int32)
+                                          for r in chunk])),
+                    jnp.asarray(np.asarray([r[3] for r in chunk], bool)),
+                    jnp.asarray(np.asarray([r[4] for r in chunk], bool)),
+                    jnp.asarray(np.asarray([r[0] for r in chunk],
+                                           np.int32)))
         softs = sorted({idx for _, idx, snap in soft_clears
                         if not evicted(idx, snap)})
-        if softs:
-            state = mark_soft(state, jnp.asarray(softs, jnp.int32))
+        for chunk in po2_chunks(softs):
+            state = mark_soft(state, jnp.asarray(chunk, jnp.int32))
         # duplicate touch targets dedupe last-now-wins (scatter order for
         # duplicate indices is implementation-defined)
         by_idx = {idx: now for now, idx, snap in
                   sorted(touches, key=lambda t: t[:2])
                   if not evicted(idx, snap)}
-        if by_idx:
+        for chunk in po2_chunks(sorted(by_idx)):
             state = touch(state,
-                          jnp.asarray(sorted(by_idx), jnp.int32),
-                          jnp.asarray([by_idx[i] for i in sorted(by_idx)],
+                          jnp.asarray(chunk, jnp.int32),
+                          jnp.asarray([by_idx[i] for i in chunk],
                                       jnp.int32))
         self.epoch += 1
         self.entries_applied += len(records)
@@ -453,6 +467,22 @@ class CommitBuffer:
 # ---------------------------------------------------------------------------
 # Write-ahead journal — crash-consistent persistence of the commit stream
 # ---------------------------------------------------------------------------
+
+
+class JournalCorruptionWarning(UserWarning):
+    """A WAL replay hit a torn or corrupt frame and stopped there.
+
+    Carries where and why, so operators can distinguish the benign case
+    (torn tail from a mid-write crash — expected, recovery is exact up
+    to the previous epoch) from on-disk corruption earlier in the file
+    (bit rot: every later epoch is lost)."""
+
+    def __init__(self, path: str, offset: int, reason: str):
+        super().__init__(f"WAL replay stopped at byte {offset} of "
+                         f"{path}: {reason}")
+        self.path = path
+        self.offset = offset
+        self.reason = reason
 
 
 class MemoryJournal:
@@ -502,6 +532,7 @@ class MemoryJournal:
         self.path = path
         self.wal_path = os.path.join(path, "wal.log")
         self.snap_path = os.path.join(path, "snapshot.npz")
+        self.manifest_path = os.path.join(path, "manifest.pkl")
         self.snapshot_every = snapshot_every
         self.fault_plan = fault_plan
         self._wal = open(self.wal_path, "ab")
@@ -509,44 +540,64 @@ class MemoryJournal:
         self.snapshots = 0
 
     # -- record framing -------------------------------------------------
+    # one codec for WAL records and fabric RPC frames — the corruption
+    # tests cover both at once
     @staticmethod
     def _frame(obj) -> bytes:
-        import pickle
-        import struct
-        import zlib
-        payload = pickle.dumps(obj, protocol=4)
-        return struct.pack("<II", len(payload),
-                           zlib.crc32(payload) & 0xFFFFFFFF) + payload
+        from repro.serving.transport import frame_message
+        return frame_message(obj)
 
     @staticmethod
     def _read_records(path):
-        """Yield payload objects from a WAL file, stopping silently at a
-        torn or corrupt tail."""
+        """Yield payload objects from a WAL file. Replay stops at the
+        first torn or corrupt frame with a structured
+        :class:`JournalCorruptionWarning` (never raises): everything
+        before the bad frame is recovered, everything after is
+        unreachable anyway — its epochs chain past the gap. A clean EOF
+        stays silent."""
         import os
         import pickle
         import struct
+        import warnings
         import zlib
         if not os.path.exists(path):
             return
+        offset = 0
         with open(path, "rb") as f:
             while True:
                 head = f.read(8)
+                if len(head) == 0:
+                    return                       # clean end
                 if len(head) < 8:
-                    return                       # clean end or torn header
+                    warnings.warn(JournalCorruptionWarning(
+                        path, offset,
+                        f"torn header ({len(head)} of 8 bytes)"))
+                    return
                 length, crc = struct.unpack("<II", head)
                 payload = f.read(length)
                 if len(payload) < length:
-                    return                       # torn payload
+                    warnings.warn(JournalCorruptionWarning(
+                        path, offset, f"torn payload ({len(payload)} of "
+                        f"{length} bytes)"))
+                    return
                 if zlib.crc32(payload) & 0xFFFFFFFF != crc:
-                    return                       # corrupt tail
+                    warnings.warn(JournalCorruptionWarning(
+                        path, offset, "crc mismatch"))
+                    return
                 yield pickle.loads(payload)
+                offset += 8 + length
 
     # -- logging --------------------------------------------------------
-    def log_epoch(self, epoch: int, records, soft_clears,
-                  touches) -> None:
+    def log_epoch(self, epoch: int, records, soft_clears, touches,
+                  manifest: dict | None = None) -> None:
         """Make one epoch's ops durable (write + flush + fsync). The
         ``wal_write`` fault site fires *before* the write — an injected
-        crash here models dying with the epoch not yet on disk."""
+        crash here models dying with the epoch not yet on disk.
+
+        ``manifest`` rides inside the same frame as the ops: one fsync
+        makes the guide-store epoch *and* the engine-state snapshot it
+        pairs with durable together, so recovery can never observe a
+        store from epoch N with counters from epoch N±1."""
         import os
 
         import numpy as np
@@ -556,22 +607,51 @@ class MemoryJournal:
                          hg, hard) for now, emb, g, hg, hard in records]
         self._wal.write(self._frame({
             "epoch": int(epoch), "records": host_records,
-            "soft_clears": list(soft_clears), "touches": list(touches)}))
+            "soft_clears": list(soft_clears), "touches": list(touches),
+            "manifest": manifest}))
         self._wal.flush()
         os.fsync(self._wal.fileno())
         self.epochs_logged += 1
 
-    def maybe_snapshot(self, state, buffer: CommitBuffer) -> None:
-        if buffer.epoch % self.snapshot_every == 0:
-            self.snapshot(state, buffer)
-
-    def snapshot(self, state, buffer: CommitBuffer) -> None:
-        """Atomically snapshot the full store + buffer counters, then
-        truncate the WAL (safe in either order — see class docstring)."""
+    def log_checkpoint(self, epoch: int, manifest: dict) -> None:
+        """Journal a manifest-only record: engine state *as of* the
+        current epoch, with no store ops. Written at clean shutdown (and
+        on demand) so state that advanced past the last store commit —
+        the clock, counters of store-untouched requests — survives a
+        subsequent kill. Replay takes the manifest, applies nothing."""
         import os
+        self._wal.write(self._frame({
+            "epoch": int(epoch), "checkpoint": True,
+            "manifest": manifest}))
+        self._wal.flush()
+        os.fsync(self._wal.fileno())
+        self.epochs_logged += 1
+
+    def maybe_snapshot(self, state, buffer: CommitBuffer,
+                       manifest: dict | None = None) -> None:
+        if buffer.epoch % self.snapshot_every == 0:
+            self.snapshot(state, buffer, manifest)
+
+    def snapshot(self, state, buffer: CommitBuffer,
+                 manifest: dict | None = None) -> None:
+        """Atomically snapshot the full store + buffer counters, then
+        truncate the WAL (safe in either order — see class docstring).
+        The manifest lands in ``manifest.pkl`` (tmpfile + ``os.replace``)
+        *before* the truncation: if we die between the two, the WAL's
+        embedded manifests still cover every epoch past the snapshot."""
+        import os
+        import pickle
 
         import numpy as np
         from repro.training.checkpoint import save_checkpoint
+        if manifest is not None:
+            tmp = self.manifest_path + ".tmp"
+            with open(tmp, "wb") as f:
+                pickle.dump({"epoch": int(buffer.epoch),
+                             "manifest": manifest}, f, protocol=4)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, self.manifest_path)
         save_checkpoint(self.snap_path, {
             "state": state,
             "meta": np.asarray([buffer.epoch, buffer.entries_applied],
@@ -595,40 +675,56 @@ class MemoryJournal:
     def recover(path: str, mem_cfg: MemoryConfig):
         """Rebuild the store from ``<path>`` after a crash.
 
-        Returns ``(state, epoch, entries_applied)`` — the recovered
-        :class:`MemoryState` plus the buffer counters a resumed stream
-        must continue from — or ``None`` if the directory holds neither
-        snapshot nor WAL (a fresh site). Replays every complete WAL
-        record newer than the snapshot through
-        :meth:`CommitBuffer.apply_ops`, in epoch (= file) order.
+        Returns ``(state, epoch, entries_applied, manifest)`` — the
+        recovered :class:`MemoryState`, the buffer counters a resumed
+        stream must continue from, and the newest engine-state manifest
+        that is *consistent with the recovered store* (``None`` when the
+        site never journaled one) — or ``None`` if the directory holds
+        neither snapshot nor WAL (a fresh site). Replays every complete
+        WAL record newer than the snapshot through
+        :meth:`CommitBuffer.apply_ops`, in epoch (= file) order; each
+        replayed record's embedded manifest supersedes the snapshot-side
+        one, so store and manifest always come from the same fsync.
         """
         import os
+        import pickle
 
         import numpy as np
         from repro.training.checkpoint import load_checkpoint
         snap_path = os.path.join(path, "snapshot.npz")
         wal_path = os.path.join(path, "wal.log")
+        man_path = os.path.join(path, "manifest.pkl")
         have_snap = os.path.exists(snap_path)
         have_wal = os.path.exists(wal_path) and \
             os.path.getsize(wal_path) > 0
         if not have_snap and not have_wal:
             return None
+        manifest = None
         if have_snap:
             tree = load_checkpoint(snap_path)
             state = jax.tree.map(jnp.asarray, tree["state"])
             epoch, entries = (int(x) for x in np.asarray(tree["meta"]))
+            if os.path.exists(man_path):
+                with open(man_path, "rb") as f:
+                    manifest = pickle.load(f)["manifest"]
         else:
             state, epoch, entries = init_memory(mem_cfg), 0, 0
         replay = CommitBuffer()
         replay.epoch, replay.entries_applied = epoch, entries
         for rec in MemoryJournal._read_records(wal_path):
+            if rec.get("checkpoint"):
+                if rec["epoch"] >= replay.epoch:
+                    manifest = rec["manifest"]
+                continue                      # manifest only, no ops
             if rec["epoch"] <= epoch:
                 continue                      # snapshot already covers it
             state, _ = replay.apply_ops(state, rec["records"],
                                         rec["soft_clears"],
                                         rec["touches"])
             replay.epoch = rec["epoch"]       # keep numbering exact
-        return state, replay.epoch, replay.entries_applied
+            if rec.get("manifest") is not None:
+                manifest = rec["manifest"]
+        return state, replay.epoch, replay.entries_applied, manifest
 
 
 # ---------------------------------------------------------------------------
@@ -680,6 +776,15 @@ class CommitStream:
         self._views: list = []       # controllers mirroring the store
         self.journal = journal
         self.fault_plan = fault_plan
+        # engine-state exporter (set by the owning controller/fabric):
+        # called under the stream lock right before an epoch is
+        # journaled, its dict rides in the same WAL frame as the ops —
+        # the epoch-consistent recovery manifest
+        self.state_provider = None
+        # per-epoch ops tap (set by the process fabric): called under
+        # the lock after a successful apply with the epoch's taken ops,
+        # so the fabric can broadcast them to out-of-process workers
+        self.ops_listener = None
 
     def subscribe(self, view) -> None:
         """Register a controller whose ``.memory`` tracks this stream's
@@ -706,9 +811,12 @@ class CommitStream:
                 return state
             records, soft_clears, touches = self.buffer.take_ops()
             epoch = self.buffer.epoch + 1
+            manifest = None
             if self.journal is not None:
+                if self.state_provider is not None:
+                    manifest = self.state_provider()
                 self.journal.log_epoch(epoch, records, soft_clears,
-                                       touches)
+                                       touches, manifest)
             if self.fault_plan is not None:
                 self.fault_plan.fire("commit_apply", epoch=epoch)
             state, n = self.buffer.apply_ops(state, records, soft_clears,
@@ -716,9 +824,23 @@ class CommitStream:
             self.commits += n
             for v in self._views:
                 v.memory = state
+            if self.ops_listener is not None:
+                self.ops_listener(epoch, records, soft_clears, touches,
+                                  n)
             if self.journal is not None:
-                self.journal.maybe_snapshot(state, self.buffer)
+                self.journal.maybe_snapshot(state, self.buffer, manifest)
         return state
+
+    def checkpoint(self) -> None:
+        """Journal a manifest-only record at the current epoch — called
+        at clean shutdown (and by tests) so engine state that advanced
+        past the last store commit survives a later kill. No-op without
+        a journal or a state provider."""
+        with self.lock:
+            if self.journal is None or self.state_provider is None:
+                return
+            self.journal.log_checkpoint(self.buffer.epoch,
+                                        self.state_provider())
 
     def commit_direct(self, state, *, record=None, soft_clear=None,
                       touch_op=None):
@@ -745,20 +867,22 @@ class CommitStream:
 def open_journaled_stream(path: str, mem_cfg: MemoryConfig, *,
                           snapshot_every: int = 8, fault_plan=None):
     """Open (or re-open after a crash) a journaled commit stream at
-    ``path``. Returns ``(stream, recovered_state)`` — ``recovered_state``
-    is the byte-identical pre-crash store (``None`` for a fresh site).
-    The stream's buffer counters resume from the recovered epoch, so WAL
-    epoch numbering stays monotone across restarts."""
+    ``path``. Returns ``(stream, recovered_state, manifest)`` —
+    ``recovered_state`` is the byte-identical pre-crash store and
+    ``manifest`` the engine-state dict journaled with its last epoch
+    (both ``None`` for a fresh site). The stream's buffer counters
+    resume from the recovered epoch, so WAL epoch numbering stays
+    monotone across restarts."""
     recovered = MemoryJournal.recover(path, mem_cfg)
     journal = MemoryJournal(path, snapshot_every=snapshot_every,
                             fault_plan=fault_plan)
     stream = CommitStream(journal=journal, fault_plan=fault_plan)
-    state = None
+    state, manifest = None, None
     if recovered is not None:
-        state, epoch, entries = recovered
+        state, epoch, entries, manifest = recovered
         stream.buffer.epoch = epoch
         stream.buffer.entries_applied = entries
-    return stream, state
+    return stream, state, manifest
 
 
 # ---------------------------------------------------------------------------

@@ -153,8 +153,12 @@ class MicrobatchRAR(RAR):
         for it, a in zip(items, strong_ans):
             it.strong_ans = int(a)
             it.strong_calls = 1
-        self.shadow.drain_now(items)
+        # counter first: the drain epoch journals the recovery manifest,
+        # which must already show these probes as replayed (the epoch's
+        # WAL write is the atomic point — before it, the manifest still
+        # parks them; after it, the replay is durable)
         self.probes_replayed += len(items)
+        self.shadow.drain_now(items)
         return len(items)
 
     # ------------------------------------------------------------------
@@ -182,10 +186,15 @@ class MicrobatchRAR(RAR):
     def process_batch(self, prompts: list[np.ndarray],
                       guide_requests: list[np.ndarray],
                       keys: list | None = None,
-                      embs: np.ndarray | None = None) -> list[Outcome]:
+                      embs: np.ndarray | None = None,
+                      nows: list[int] | None = None) -> list[Outcome]:
         """Serve one microbatch. ``prompts[i]``/``guide_requests[i]``/
         ``keys[i]`` mirror the arguments of ``RAR.process``; ``embs`` may
-        carry precomputed request embeddings (B, E)."""
+        carry precomputed request embeddings (B, E). ``nows`` may carry
+        pre-allocated logical time stamps (the process fabric allocates
+        them from the parent's shared clock at dispatch, so a redispatch
+        after a worker death reuses the *same* stamps — the byte-identity
+        anchor)."""
         B = len(prompts)
         if B > self.cfg.memory.capacity:
             # every request may record one entry; reject before any FM
@@ -195,7 +204,11 @@ class MicrobatchRAR(RAR):
                 f"{self.cfg.memory.capacity}")
         if keys is None:
             keys = [None] * B
-        nows = self._advance_now(B)
+        if nows is None:
+            nows = self._advance_now(B)
+        else:
+            nows = list(nows)
+            self.now = max(self.now, max(nows))   # keep the mirror sane
 
         if embs is None:
             embs = np.stack([np.asarray(self.embed_fn(p)) for p in prompts])

@@ -10,6 +10,7 @@ Figs. 4–6.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 
 import numpy as np
@@ -48,6 +49,48 @@ def _batched_answers(tier, prompts: list[np.ndarray]) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# Process-transport replica factory (module-level: must pickle into
+# spawned worker processes — see repro.serving.procfabric)
+# ---------------------------------------------------------------------------
+
+
+def _tier_spec(tier):
+    """Picklable rebuild recipe for an :class:`FMTier`: params are pulled
+    to host memory so the spec crosses the process boundary without a
+    device handle."""
+    import jax
+
+    from repro.core.fm import ResilientTier
+    if isinstance(tier, ResilientTier):
+        tier = tier.inner
+    return (tier.name, tier.cfg, jax.device_get(tier.engine.params),
+            tier.vocab)
+
+
+def _proc_no_embed(prompt):
+    # fabric mode ships embeddings with every dispatch (``submit(...,
+    # embs=...)``), so neither the parent's learn plane nor the workers
+    # ever call embed_fn
+    return None
+
+
+def _proc_oracle_route(weak_ok, emb, key):
+    return key in weak_ok
+
+
+def _proc_replica_parts(weak_spec, strong_spec, weak_ok):
+    """Replica factory for :class:`ProcessServingFabric`: rebuilds both
+    FM tiers from host-side params — deterministically identical in the
+    parent and in every worker process."""
+    from repro.core.fm import FMTier
+    return {"weak": FMTier.create(*weak_spec),
+            "strong": FMTier.create(*strong_spec),
+            "embed_fn": _proc_no_embed,
+            "route_weak_fn": functools.partial(_proc_oracle_route,
+                                               weak_ok)}
+
+
+# ---------------------------------------------------------------------------
 # RAR experiment
 # ---------------------------------------------------------------------------
 
@@ -60,6 +103,7 @@ def run_rar_experiment(system: TrainedSystem, pool: list[Sample], *,
                        prepopulate_from: list[Sample] | None = None,
                        microbatch: int = 1,
                        replicas: int = 1,
+                       transport: str = "thread",
                        retrieval_k: int | None = None,
                        max_guides: int | None = None,
                        shadow_mode: str | None = None,
@@ -91,6 +135,16 @@ def run_rar_experiment(system: TrainedSystem, pool: list[Sample], *,
     request on one replica cannot hit a skill whose shadow pass has not
     committed yet. Not combinable with ``prepopulate_from`` (the RQ2
     warm-up is a sequential protocol).
+
+    ``transport``: how replicas are hosted (replicas > 1 only).
+    ``"thread"`` (default) is the in-process fabric; ``"process"``
+    spawns one OS process per replica
+    (:class:`repro.serving.procfabric.ProcessServingFabric`) — the tiers
+    are rebuilt from host-side params inside every worker, the parent
+    keeps all authoritative state, and a SIGKILL'd worker is respawned
+    with its in-flight microbatches redispatched byte-identically.
+    Requires ``router_kind="oracle"`` (the learned router is not shipped
+    across the process boundary).
 
     ``retrieval_k``/``max_guides``: override the multi-guide knobs of
     ``rar_cfg`` — every memory read returns the top-k entries and up to
@@ -165,16 +219,37 @@ def run_rar_experiment(system: TrainedSystem, pool: list[Sample], *,
     else:
         route_fn = lambda emb, key: system.router.route_weak(emb)  # noqa: E731
 
+    if transport not in ("thread", "process"):
+        raise ValueError(f"unknown transport {transport!r} "
+                         "(expected 'thread' or 'process')")
     if replicas > 1:
         if prepopulate_from is not None:
             raise ValueError("replicas > 1 is not combinable with "
                              "prepopulate_from (the RQ2 warm-up is a "
                              "sequential protocol); warm up at replicas=1")
-        from repro.serving.fabric import ServingFabric
-        rar = ServingFabric(system.weak, strong, embed_fn, route_fn,
-                            rar_cfg, replicas=replicas,
-                            fault_plan=fault_plan)
+        if transport == "process":
+            if router_kind != "oracle":
+                raise ValueError("transport='process' requires "
+                                 "router_kind='oracle': the learned "
+                                 "router is not shipped to worker "
+                                 "processes")
+            from repro.serving.procfabric import ProcessServingFabric
+            factory = functools.partial(
+                _proc_replica_parts, _tier_spec(system.weak),
+                _tier_spec(strong), frozenset(weak_ok))
+            rar = ProcessServingFabric(factory, rar_cfg,
+                                       workers=replicas,
+                                       fault_plan=fault_plan)
+        else:
+            from repro.serving.fabric import ServingFabric
+            rar = ServingFabric(system.weak, strong, embed_fn, route_fn,
+                                rar_cfg, replicas=replicas,
+                                fault_plan=fault_plan)
     else:
+        if transport == "process":
+            raise ValueError("transport='process' requires replicas > 1 "
+                             "(the single-controller data plane serves "
+                             "in-process)")
         controller_cls = MicrobatchRAR if microbatch > 1 else RAR
         rar = controller_cls(system.weak, strong, embed_fn, route_fn,
                              rar_cfg, fault_plan=fault_plan)

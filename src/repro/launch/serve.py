@@ -11,10 +11,15 @@ Recovery plane: the launcher exposes the fault-tolerance stack of
 (--tier-max-retries/--tier-timeout), a strong-tier circuit breaker that
 degrades routing to weak-only while open (--breaker-threshold/
 --breaker-cooldown; suppressed shadow probes are deferred and replayed
-when the breaker closes), bounded crash redispatch across serve replicas
-(--max-redispatch), and a crash-consistent guide store via write-ahead
+when the breaker closes; --breaker-adaptive derives the effective knobs
+from an EWMA of observed error rates), bounded crash redispatch across
+serve replicas (--max-redispatch), process-per-replica serving with
+heartbeat-lease supervision (--transport process: a hung or SIGKILL'd
+worker is detected, respawned, and its in-flight work redispatched
+byte-identically), and a crash-consistent guide store via write-ahead
 journaling + snapshots (--journal-path/--snapshot-every: restart with the
-same path and the pre-crash memory is recovered byte-identically). All
+same path and the pre-crash memory — plus the engine-state manifest:
+clock, counters, breaker state — is recovered byte-identically). All
 default OFF; with the defaults the serve path is byte-identical to the
 pre-resilience launcher.
 
@@ -55,6 +60,16 @@ def main() -> None:
                          "commit stream, a single learn replica drains "
                          "all shadow work. 1 = the single-controller "
                          "data plane (bit-identical through the fabric)")
+    ap.add_argument("--transport", default="thread",
+                    choices=["thread", "process"],
+                    help="how serve replicas are hosted (--replicas > 1 "
+                         "only): 'thread' = worker threads in this "
+                         "process; 'process' = one OS process per "
+                         "replica behind the same submit/join boundary "
+                         "— a crashed or SIGKILL'd worker is detected "
+                         "by heartbeat leases, respawned, and its in-"
+                         "flight microbatches redispatch byte-"
+                         "identically (requires --router oracle)")
     ap.add_argument("--router", default="oracle",
                     choices=["oracle", "learned"])
     ap.add_argument("--sim-threshold", type=float, default=0.2)
@@ -110,6 +125,17 @@ def main() -> None:
     ap.add_argument("--breaker-cooldown", type=float, default=1.0,
                     help="seconds an open breaker waits before the "
                          "half-open probe call")
+    ap.add_argument("--breaker-adaptive", action="store_true",
+                    help="derive the breaker's effective threshold/"
+                         "cooldown from an EWMA of observed tier error "
+                         "rates: a tier seen to be flaky opens after "
+                         "fewer consecutive failures and cools down "
+                         "longer; a clean history keeps the configured "
+                         "knobs exactly (default: static knobs)")
+    ap.add_argument("--breaker-ewma-alpha", type=float, default=0.2,
+                    help="error-rate EWMA smoothing factor in (0, 1] "
+                         "for --breaker-adaptive (higher = reacts "
+                         "faster, forgets faster)")
     ap.add_argument("--max-redispatch", type=int, default=2,
                     help="times a crashed replica's microbatch is re-"
                          "dispatched to a surviving replica before its "
@@ -146,6 +172,12 @@ def main() -> None:
                  "per request)")
     if args.replicas < 1:
         ap.error("--replicas must be >= 1")
+    if args.transport == "process":
+        if args.replicas <= 1:
+            ap.error("--transport process requires --replicas > 1")
+        if args.router != "oracle":
+            ap.error("--transport process requires --router oracle (the "
+                     "learned router is not shipped to worker processes)")
     cfg = make_rar_config(sim_threshold=args.sim_threshold,
                           retrieval_k=args.retrieval_k,
                           max_guides=args.max_guides,
@@ -157,6 +189,8 @@ def main() -> None:
                           tier_timeout=args.tier_timeout,
                           breaker_threshold=args.breaker_threshold,
                           breaker_cooldown=args.breaker_cooldown,
+                          breaker_adaptive=args.breaker_adaptive,
+                          breaker_ewma_alpha=args.breaker_ewma_alpha,
                           max_redispatch=args.max_redispatch,
                           journal_path=args.journal_path,
                           snapshot_every=args.snapshot_every)
@@ -164,7 +198,7 @@ def main() -> None:
     results, rar = run_rar_experiment(
         system, pool, n_stages=args.stages, rar_cfg=cfg,
         router_kind=args.router, microbatch=args.microbatch,
-        replicas=args.replicas, verbose=True,
+        replicas=args.replicas, transport=args.transport, verbose=True,
         progress_every=args.log_every)
     rar.close_shadow()
     dt = time.time() - t0

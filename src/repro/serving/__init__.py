@@ -1,21 +1,30 @@
 from repro.serving.engine import ServingEngine, greedy_generate
 
 __all__ = ["ServingEngine", "greedy_generate", "ServingFabric", "Ticket",
+           "ProcessServingFabric", "WorkerDied", "FramedChannel",
+           "ChannelClosed", "FrameCorruption",
            "FaultPlan", "FaultSpec", "InjectedFault", "ReplicaCrash",
            "random_plan"]
 
 _FAULTS = ("FaultPlan", "FaultSpec", "InjectedFault", "ReplicaCrash",
            "random_plan")
+_TRANSPORT = ("FramedChannel", "ChannelClosed", "FrameCorruption")
 
 
 def __getattr__(name):
-    # lazy: the fabric builds on the controller stack (core.pipeline),
-    # which itself serves through this package's engine — importing it
+    # lazy: the fabrics build on the controller stack (core.pipeline),
+    # which itself serves through this package's engine — importing them
     # eagerly here would close an import cycle during ``repro.core``'s
     # own initialization
     if name in ("ServingFabric", "Ticket"):
         from repro.serving import fabric
         return getattr(fabric, name)
+    if name in ("ProcessServingFabric", "WorkerDied"):
+        from repro.serving import procfabric
+        return getattr(procfabric, name)
+    if name in _TRANSPORT:
+        from repro.serving import transport
+        return getattr(transport, name)
     if name in _FAULTS:
         from repro.serving import faults
         return getattr(faults, name)

@@ -135,3 +135,16 @@ class ServingEngine:
                     "tokens_processed": self.tokens_processed,
                     "flops_spent": self.flops_spent,
                     "jit_variants": len(self._jitted)}
+
+    # -- crash-recovery manifest hooks ----------------------------------
+    def export_counters(self) -> dict:
+        """The cost-accounting state (not the jit cache — compiled
+        functions are rebuilt on demand) for the recovery manifest."""
+        with self._lock:
+            return {"calls": self.calls,
+                    "tokens_processed": self.tokens_processed}
+
+    def restore_counters(self, st: dict) -> None:
+        with self._lock:
+            self.calls = st["calls"]
+            self.tokens_processed = st["tokens_processed"]

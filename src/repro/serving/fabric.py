@@ -99,6 +99,11 @@ class _SharedClock:
             self._now = base + n
         return list(range(base + 1, base + n + 1))
 
+    def restore(self, now: int) -> None:
+        """Resume logical time after a crash recovery (manifest)."""
+        with self._lock:
+            self._now = int(now)
+
     @property
     def now(self) -> int:
         return self._now
@@ -168,11 +173,13 @@ class ServingFabric:
         # crash-consistent memory: a journal_path attaches a WAL +
         # snapshot journal to the shared stream and recovers the
         # pre-crash store before any replica is built
-        recovered = None
+        recovered, manifest = None, None
         if cfg.journal_path is not None:
-            self.commit_stream, recovered = mem.open_journaled_stream(
-                cfg.journal_path, cfg.memory,
-                snapshot_every=cfg.snapshot_every, fault_plan=fault_plan)
+            self.commit_stream, recovered, manifest = \
+                mem.open_journaled_stream(
+                    cfg.journal_path, cfg.memory,
+                    snapshot_every=cfg.snapshot_every,
+                    fault_plan=fault_plan)
         else:
             self.commit_stream = mem.CommitStream(fault_plan=fault_plan)
         # tier resilience is fabric-level: ONE shared wrapper (and
@@ -220,6 +227,61 @@ class ServingFabric:
         self.deaths = 0        # worker threads lost to a ReplicaCrash
         self.restarts = 0      # supervisor restarts
         self.redispatches = 0  # microbatches re-run on a survivor
+        # full-state crash consistency: the fabric-wide engine state
+        # (shared clock, learn-plane counters, parked deferred probes,
+        # shared breaker/engine counters) rides inside every journaled
+        # WAL epoch as the recovery manifest; a rebuilt fabric on the
+        # same journal path resumes serving byte-identically to an
+        # unkilled one (pinned in the fault/procfabric suites)
+        if self.commit_stream.journal is not None:
+            self.commit_stream.state_provider = self._manifest_state
+            if manifest is not None:
+                self._restore_manifest(manifest)
+
+    # -- full-state crash consistency (recovery manifest) ----------------
+    def _manifest_state(self) -> dict:
+        """Fabric-wide engine state journaled with every WAL epoch
+        (called by the commit stream under its lock). Counters are the
+        fabric-level aggregates; restore re-homes them on the learn
+        replica (which owns every drain), so the aggregate views are
+        exact after recovery."""
+        man = {"now": self.clock.now,
+               "guides_from_memory": self.guides_from_memory,
+               "guides_generated": self.guides_generated,
+               "probes_deferred": sum(r.probes_deferred
+                                      for r in self.replicas),
+               "probes_replayed": sum(r.probes_replayed
+                                      for r in self.replicas),
+               "deferred_probes": [it for r in self.replicas
+                                   for it in r.deferred_probes],
+               "tiers": {}, "engines": {}}
+        for name, tier in (("weak", self.learn.weak),
+                           ("strong", self.learn.strong)):
+            if isinstance(tier, ResilientTier):
+                man["tiers"][name] = tier.export_state()
+            engine = getattr(tier, "engine", None)
+            if hasattr(engine, "export_counters"):
+                man["engines"][name] = engine.export_counters()
+        return man
+
+    def _restore_manifest(self, man: dict) -> None:
+        self.clock.restore(man["now"])
+        learn = self.learn
+        learn.now = man["now"]
+        learn.guides_from_memory = man["guides_from_memory"]
+        learn.guides_generated = man["guides_generated"]
+        learn.probes_deferred = man["probes_deferred"]
+        learn.probes_replayed = man["probes_replayed"]
+        learn.deferred_probes = list(man["deferred_probes"])
+        for name, tier in (("weak", learn.weak),
+                           ("strong", learn.strong)):
+            if isinstance(tier, ResilientTier) and \
+                    name in man.get("tiers", {}):
+                tier.restore_state(man["tiers"][name])
+            engine = getattr(tier, "engine", None)
+            if hasattr(engine, "restore_counters") and \
+                    name in man.get("engines", {}):
+                engine.restore_counters(man["engines"][name])
 
     # -- learn plane ----------------------------------------------------
     def _drain(self, items) -> None:
@@ -423,8 +485,10 @@ class ServingFabric:
 
     def close_shadow(self) -> None:
         """Flush, then stop the replica workers and the replicas' shadow
-        worker threads. Idempotent."""
+        worker threads. A journaled fabric also checkpoints its manifest
+        so a clean shutdown recovers byte-identically. Idempotent."""
         self.flush_shadow()
+        self.commit_stream.checkpoint()
         if self._queues is not None:
             for q in self._queues:
                 q.put(None)

@@ -38,6 +38,26 @@ Injection sites (the ``site`` string each component fires)
   ``"crash"`` models dying mid-epoch with the commit already journaled:
   recovery replays the epoch and lands exactly one epoch *ahead* of the
   crashed process's memory — consistent either way. Ids: ``epoch``.
+* ``"heartbeat"`` — fired by a process worker's heartbeat thread before
+  each lease beat. ``"crash"`` kills the heartbeat thread (the worker
+  keeps serving but its lease expires — a *hung-looking* worker, the
+  case SIGKILL detection alone cannot cover); ``"delay"`` makes it miss
+  beats. Ids: ``replica``.
+* ``"transport_frame"`` — fired by
+  :class:`repro.serving.transport.FramedChannel` before each send.
+  ``"delay"`` injects wire latency; ``"crash"`` raises on the sending
+  end mid-conversation. Ids: ``end`` ("parent"/"worker"), ``replica``.
+* ``"clock_skew"`` — sampled (not fired) by the supervision plane's
+  lease monitor via :meth:`FaultPlan.take_skew`: due ``"delay"`` specs
+  *advance the monitor's view of time* instead of sleeping, so lease
+  expiry under clock skew is testable without wall-clock waits.
+
+Actions: alongside ``"crash"``/``"error"``/``"delay"``, ``"kill"``
+SIGKILLs the **calling process** (``os.kill(os.getpid(), SIGKILL)``) —
+no exception propagation, no cleanup, no atexit. Meaningful inside a
+process-per-replica worker, where it models the hard machine-level
+death the lease/EOF supervision plane exists to detect. In-process
+callers should prefer ``"crash"``.
 
 Matching: a spec fires when its ``site`` matches and every key of
 ``spec.match`` equals the id the site fired with. Each spec keeps its own
@@ -58,8 +78,8 @@ import numpy as np
 
 #: the sites components fire, and what actions make sense at each
 SITES = ("replica_serve", "tier_call", "drain", "wal_write",
-         "commit_apply")
-ACTIONS = ("crash", "error", "delay")
+         "commit_apply", "heartbeat", "transport_frame", "clock_skew")
+ACTIONS = ("crash", "error", "delay", "kill")
 
 
 class InjectedFault(RuntimeError):
@@ -119,6 +139,21 @@ class FaultPlan:
         self._sleep = sleep_fn
         self.fired: list[tuple[str, str, tuple]] = []
 
+    # Plans cross the process boundary (each fabric worker carries its
+    # own copy, with independent hit counters from the pickling point
+    # on). Locks and bound sleep functions don't pickle — rebuild them.
+    def __getstate__(self) -> dict:
+        with self._lock:
+            return {"specs": self.specs, "_hits": list(self._hits),
+                    "fired": list(self.fired)}
+
+    def __setstate__(self, state: dict) -> None:
+        self.specs = state["specs"]
+        self._hits = state["_hits"]
+        self.fired = state["fired"]
+        self._lock = threading.Lock()
+        self._sleep = time.sleep
+
     # -- plan construction helpers --------------------------------------
     @staticmethod
     def replica_crash(replica: int, at: int = 1,
@@ -151,6 +186,41 @@ class FaultPlan:
         """Die after epoch number ``at``'s WAL record, mid-apply."""
         return FaultSpec("commit_apply", "crash", at=at)
 
+    @staticmethod
+    def replica_kill(replica: int, at: int = 1) -> FaultSpec:
+        """SIGKILL the worker *process* as it picks up its ``at``-th
+        microbatch — the hard-death analog of :meth:`replica_crash`."""
+        return FaultSpec("replica_serve", "kill",
+                         (("replica", replica),), at=at)
+
+    @staticmethod
+    def heartbeat_crash(replica: int, at: int = 1) -> FaultSpec:
+        """Kill a worker's heartbeat thread at its ``at``-th beat: the
+        worker hangs from the lease monitor's point of view."""
+        return FaultSpec("heartbeat", "crash", (("replica", replica),),
+                         at=at)
+
+    @staticmethod
+    def transport_delay(delay: float, at: int = 1, count: int = 1,
+                        end: str | None = None,
+                        replica: int | None = None) -> FaultSpec:
+        """Wire-latency spike on frame sends (optionally one end / one
+        replica's channel only)."""
+        match = []
+        if end is not None:
+            match.append(("end", end))
+        if replica is not None:
+            match.append(("replica", replica))
+        return FaultSpec("transport_frame", "delay", tuple(match),
+                         at=at, count=count, delay=delay)
+
+    @staticmethod
+    def clock_skew(skew: float, at: int = 1, count: int = 1) -> FaultSpec:
+        """Advance the lease monitor's clock by ``skew`` seconds at its
+        ``at``-th sample (see :meth:`take_skew`)."""
+        return FaultSpec("clock_skew", "delay", at=at, count=count,
+                         delay=skew)
+
     # -- firing ---------------------------------------------------------
     def fire(self, site: str, timeout: float | None = None,
              **ids) -> None:
@@ -170,6 +240,14 @@ class FaultPlan:
                                    tuple(sorted(ids.items()))))
         if due is None:
             return
+        if due.action == "kill":
+            # hard machine-level death: no exception, no cleanup. The
+            # fired record above lives only in this process's copy of
+            # the plan and dies with it — the *supervisor's* counters
+            # (deaths/restarts) are what tests assert on.
+            import os
+            import signal
+            os.kill(os.getpid(), signal.SIGKILL)
         if due.action == "crash":
             if site == "replica_serve":
                 raise ReplicaCrash(f"injected crash at {site} {ids}")
@@ -191,6 +269,25 @@ class FaultPlan:
         if due.delay:
             self._sleep(due.delay)
 
+    def take_skew(self, site: str = "clock_skew", **ids) -> float:
+        """Sum of due ``"delay"`` spec delays at ``site`` for this
+        sample, *without sleeping* — the lease monitor adds the result
+        to its monotonic clock, so injected skew perturbs lease math
+        deterministically instead of stalling the monitor thread. Every
+        matching spec's hit counter advances, and due specs are
+        recorded in ``fired`` like any other injection."""
+        total = 0.0
+        with self._lock:
+            for i, spec in enumerate(self.specs):
+                if spec.action == "delay" and spec.matches(site, ids) \
+                        and spec.delay:
+                    self._hits[i] += 1
+                    if spec.at <= self._hits[i] < spec.at + spec.count:
+                        total += spec.delay
+                        self.fired.append((site, "delay",
+                                           tuple(sorted(ids.items()))))
+        return total
+
     # -- inspection -----------------------------------------------------
     @property
     def n_fired(self) -> int:
@@ -208,11 +305,20 @@ class FaultPlan:
 
 def random_plan(seed: int, *, replicas: int = 0, crashes: int = 0,
                 tier_errors: int = 0, drain_errors: int = 0,
+                wal_crashes: int = 0, apply_crashes: int = 0,
+                kills: int = 0, transport_delays: int = 0,
+                clock_skews: int = 0, max_jitter: float = 0.05,
                 horizon: int = 50, tiers=("strong",)) -> FaultPlan:
     """A reproducible random fault schedule — the soak test's
     crash/recover generator. Draws fault positions in ``[1, horizon]``
     from a seeded generator; the same seed always yields the same plan
-    (and therefore, against a deterministic stream, the same run)."""
+    (and therefore, against a deterministic stream, the same run).
+
+    Beyond crashes/brownouts, the schedule can now cover the journal's
+    kill points (``wal_crashes``/``apply_crashes``), process-level
+    SIGKILLs (``kills``), and timing perturbation: seeded wire-latency
+    jitter (``transport_delays``) and lease-monitor clock skew
+    (``clock_skews``), each spike drawn in ``(0, max_jitter]``."""
     rng = np.random.default_rng(seed)
     specs: list[FaultSpec] = []
     for _ in range(crashes):
@@ -226,4 +332,24 @@ def random_plan(seed: int, *, replicas: int = 0, crashes: int = 0,
     for _ in range(drain_errors):
         specs.append(FaultPlan.drain_error(
             at=int(rng.integers(1, horizon + 1))))
+    for _ in range(wal_crashes):
+        specs.append(FaultPlan.wal_crash(
+            at=int(rng.integers(1, horizon + 1))))
+    for _ in range(apply_crashes):
+        specs.append(FaultPlan.apply_crash(
+            at=int(rng.integers(1, horizon + 1))))
+    for _ in range(kills):
+        specs.append(FaultPlan.replica_kill(
+            int(rng.integers(0, max(replicas, 1))),
+            at=int(rng.integers(1, horizon + 1))))
+    for _ in range(transport_delays):
+        specs.append(FaultPlan.transport_delay(
+            float(rng.uniform(0.0, max_jitter)) or max_jitter,
+            at=int(rng.integers(1, horizon + 1)),
+            count=int(rng.integers(1, 4))))
+    for _ in range(clock_skews):
+        specs.append(FaultPlan.clock_skew(
+            float(rng.uniform(0.0, max_jitter)) or max_jitter,
+            at=int(rng.integers(1, horizon + 1)),
+            count=int(rng.integers(1, 4))))
     return FaultPlan(specs)

@@ -1,0 +1,173 @@
+"""Framed cross-process message transport for the serving fabric.
+
+One wire discipline for everything that crosses a process boundary:
+every message is a pickle (protocol 4) payload behind an 8-byte
+``<u32 length><u32 crc32>`` header — byte-for-byte the framing
+:class:`repro.core.memory.MemoryJournal` uses for its write-ahead log
+(the journal delegates to the helpers here, so WAL records and RPC
+frames literally share one codec). The crc catches torn or corrupted
+frames; a short read means the peer died mid-frame and surfaces as
+:class:`ChannelClosed`, never as a half-parsed message.
+
+:class:`FramedChannel` wraps a duplex ``multiprocessing`` ``Connection``
+(one end per process). Sends are serialized under a lock so a worker's
+heartbeat thread and its serve loop can share the channel; receives are
+single-consumer by construction (the parent's per-worker reader thread,
+the worker's main loop). A ``fault_plan`` with ``"transport_frame"``
+specs perturbs the send path: ``"delay"`` injects wire latency,
+``"crash"`` kills the sending end mid-conversation — the supervision
+plane's detection paths are exercised without real packet loss.
+
+Nothing in this module imports the rest of ``repro`` at module scope —
+the journal and the fabric both build on it, so it stays at the bottom
+of the import graph.
+"""
+from __future__ import annotations
+
+import pickle
+import struct
+import threading
+import zlib
+
+#: shared frame header: payload length, then crc32 of the payload
+HEADER = struct.Struct("<II")
+PICKLE_PROTOCOL = 4
+
+
+class ChannelError(RuntimeError):
+    """Base of transport failures."""
+
+
+class ChannelClosed(ChannelError):
+    """The peer's end of the channel is gone (clean close, process exit,
+    or SIGKILL — a dead process closes its pipe fd either way)."""
+
+
+class FrameCorruption(ChannelError):
+    """A frame arrived but its crc or header did not check out."""
+
+
+def frame_payload(payload: bytes) -> bytes:
+    """Prefix ``payload`` with the shared ``<u32 len><u32 crc32>``
+    header. The journal's WAL writer and the RPC channel both call
+    this — one framing discipline, one set of corruption tests."""
+    return HEADER.pack(len(payload),
+                       zlib.crc32(payload) & 0xFFFFFFFF) + payload
+
+
+def frame_message(obj) -> bytes:
+    """Pickle ``obj`` and frame it."""
+    return frame_payload(pickle.dumps(obj, protocol=PICKLE_PROTOCOL))
+
+
+def check_frame(buf: bytes, offset: int = 0) -> tuple[object, int] | None:
+    """Parse one frame from ``buf`` at ``offset``.
+
+    Returns ``(message, next_offset)``, or ``None`` when the remaining
+    bytes are a clean end (nothing after ``offset``). Raises
+    :class:`FrameCorruption` on a torn header, torn payload, or crc
+    mismatch — the caller decides whether that is fatal (RPC) or a
+    stop-and-warn (WAL tail recovery)."""
+    n = len(buf) - offset
+    if n == 0:
+        return None
+    if n < HEADER.size:
+        raise FrameCorruption(
+            f"torn frame header: {n} bytes, need {HEADER.size}")
+    length, crc = HEADER.unpack_from(buf, offset)
+    start = offset + HEADER.size
+    if len(buf) - start < length:
+        raise FrameCorruption(
+            f"torn frame payload: {len(buf) - start} bytes, "
+            f"header promised {length}")
+    payload = buf[start:start + length]
+    if zlib.crc32(payload) & 0xFFFFFFFF != crc:
+        raise FrameCorruption("frame crc mismatch")
+    return pickle.loads(payload), start + length
+
+
+class FramedChannel:
+    """One end of a duplex framed pickle channel over a
+    ``multiprocessing.connection.Connection``.
+
+    The connection's own byte-frame transport carries our
+    header+crc-framed payload, which is verified on receipt — SIGKILL
+    mid-``send_bytes`` can only ever surface as :class:`ChannelClosed`
+    or :class:`FrameCorruption`, never as a silently truncated message.
+    """
+
+    def __init__(self, conn, *, fault_plan=None, end: str = "",
+                 replica: int | None = None):
+        self.conn = conn
+        self.fault_plan = fault_plan
+        self.end = end                  # "parent" / "worker" — fault id
+        self.replica = replica
+        self._send_lock = threading.Lock()
+        self.sent = 0
+        self.received = 0
+
+    # -- send -----------------------------------------------------------
+    def send(self, obj) -> None:
+        """Frame and send one message. Raises :class:`ChannelClosed` if
+        the peer is gone; fires the ``"transport_frame"`` fault site
+        (wire latency / send-side crash) before touching the pipe."""
+        self.send_raw(frame_message(obj))
+
+    def send_raw(self, data: bytes) -> None:
+        """Send an already-framed message (``frame_message`` output).
+        The epoch-broadcast path frames once and fans the identical
+        bytes to every worker channel instead of re-pickling per
+        subscriber; the fault site still fires per channel."""
+        if self.fault_plan is not None:
+            ids = {"end": self.end}
+            if self.replica is not None:
+                ids["replica"] = self.replica
+            self.fault_plan.fire("transport_frame", **ids)
+        try:
+            with self._send_lock:
+                self.conn.send_bytes(data)
+                self.sent += 1
+        except (BrokenPipeError, EOFError, OSError) as e:
+            raise ChannelClosed(f"send to closed channel: {e}") from e
+
+    # -- recv -----------------------------------------------------------
+    def recv(self):
+        """Block for one message. Raises :class:`ChannelClosed` when the
+        peer's end is closed (including abrupt process death)."""
+        try:
+            buf = self.conn.recv_bytes()
+        except EOFError as e:
+            raise ChannelClosed("peer closed the channel") from e
+        except (BrokenPipeError, OSError) as e:
+            raise ChannelClosed(f"channel read failed: {e}") from e
+        parsed = check_frame(buf)
+        if parsed is None:
+            raise FrameCorruption("empty frame")
+        msg, end = parsed
+        if end != len(buf):
+            raise FrameCorruption(
+                f"{len(buf) - end} trailing bytes after frame")
+        self.received += 1
+        return msg
+
+    def poll(self, timeout: float = 0.0) -> bool:
+        try:
+            return self.conn.poll(timeout)
+        except (BrokenPipeError, EOFError, OSError):
+            return True     # a closed pipe is "readable": recv -> Closed
+
+    def close(self) -> None:
+        try:
+            self.conn.close()
+        except OSError:
+            pass
+
+
+def channel_pair(ctx=None) -> tuple:
+    """A connected pair of raw duplex Connections (parent end, worker
+    end). The worker end is picklable as a ``Process`` arg; each side
+    wraps its own in a :class:`FramedChannel`."""
+    import multiprocessing as mp
+    ctx = ctx or mp
+    a, b = ctx.Pipe(duplex=True)
+    return a, b

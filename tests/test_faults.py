@@ -31,7 +31,7 @@ from repro.core.decisions import DEGRADED_CASES
 from repro.core.fm import (CircuitBreaker, InjectedTierError, ResilientTier,
                            RetryPolicy, TierTimeout, TierUnavailableError)
 from repro.core.pipeline import MicrobatchRAR
-from repro.core.rar import RAR, RARConfig
+from repro.core.rar import RAR, RARConfig, retry_policy
 from repro.core.shadow import ShadowQueue
 from repro.serving.fabric import ServingFabric, Ticket
 from repro.serving.faults import (FaultPlan, FaultSpec, InjectedFault,
@@ -105,11 +105,21 @@ def test_fault_plan_reproducible_and_off_is_noop():
 
 
 def test_random_plan_is_seed_deterministic():
-    a = random_plan(7, replicas=3, crashes=2, tier_errors=2, drain_errors=1)
-    b = random_plan(7, replicas=3, crashes=2, tier_errors=2, drain_errors=1)
+    kw = dict(replicas=3, crashes=2, tier_errors=2, drain_errors=1,
+              wal_crashes=1, apply_crashes=1, kills=2,
+              transport_delays=2, clock_skews=2, max_jitter=0.04)
+    a, b = random_plan(7, **kw), random_plan(7, **kw)
     assert a.specs == b.specs
-    c = random_plan(8, replicas=3, crashes=2, tier_errors=2, drain_errors=1)
+    c = random_plan(8, **kw)
     assert a.specs != c.specs
+    # every requested fault family is present in the schedule
+    assert {s.site for s in a.specs} == {
+        "replica_serve", "tier_call", "drain", "wal_write",
+        "commit_apply", "transport_frame", "clock_skew"}
+    assert sum(s.action == "kill" for s in a.specs) == 2
+    for s in a.specs:
+        if s.site in ("transport_frame", "clock_skew"):
+            assert 0.0 < s.delay <= 0.04
 
 
 # ---------------------------------------------------------------------------
@@ -208,6 +218,112 @@ def test_breaker_reopens_on_failed_probe():
     br.record_failure()                           # probe failed
     assert br.state == "open" and br.opens == 2
     assert not br.available()
+
+
+def test_adaptive_breaker_tightens_threshold_and_stretches_cooldown():
+    """A flaky call history drives the error EWMA up: the breaker opens
+    after fewer consecutive failures and cools down longer — all under
+    an injected clock, no wall time involved."""
+    clock = [0.0]
+    br = CircuitBreaker(threshold=4, cooldown=10.0,
+                        now_fn=lambda: clock[0], adaptive=True,
+                        ewma_alpha=0.5)
+    # clean history: effective knobs are exactly the configured ones
+    st = br.stats()
+    assert st["error_ewma"] == 0.0
+    assert st["effective_threshold"] == 4
+    assert st["effective_cooldown"] == 10.0
+    br.record_failure()          # ewma .50 → effective threshold 2
+    assert br.state == "closed"
+    assert br.stats()["effective_threshold"] == 2
+    br.record_failure()          # ewma .75 → threshold 1 ≤ 2 failures
+    assert br.state == "open" and br.opens == 1
+    st = br.stats()
+    assert st["error_ewma"] == pytest.approx(0.75)
+    assert st["effective_cooldown"] == pytest.approx(17.5)
+    clock[0] = 10.5              # static cooldown elapsed — adaptive not
+    assert not br.available()
+    clock[0] = 17.5
+    assert br.available()
+
+
+def test_adaptive_breaker_relaxes_back_on_successes():
+    """Successes decay the EWMA: after a clean stretch the effective
+    knobs return to (approach) the configured ones."""
+    clock = [0.0]
+    br = CircuitBreaker(threshold=2, cooldown=10.0,
+                        now_fn=lambda: clock[0], adaptive=True,
+                        ewma_alpha=1.0)  # memoryless: tracks last call
+    br.record_failure()          # ewma 1.0 → threshold 1: trips at once
+    assert br.state == "open" and br.opens == 1
+    clock[0] = 20.0              # effective cooldown = 10 · (1 + 1)
+    assert br.available()
+    br.before_call()             # half-open probe
+    br.record_success()
+    assert br.state == "closed"
+    st = br.stats()
+    assert st["error_ewma"] == 0.0
+    assert st["effective_threshold"] == 2
+    assert st["effective_cooldown"] == 10.0
+
+
+def test_adaptive_breaker_default_off_keeps_static_knobs():
+    """adaptive=False (the default): the EWMA never moves and the
+    effective knobs are the static ones, whatever the history — the
+    byte-identity pins over the static breaker hold unchanged."""
+    clock = [0.0]
+    br = CircuitBreaker(threshold=3, cooldown=5.0,
+                        now_fn=lambda: clock[0])
+    br.record_failure()
+    br.record_failure()
+    assert br.error_ewma == 0.0 and br.state == "closed"
+    assert br._effective_threshold_locked() == 3
+    assert br._effective_cooldown_locked() == 5.0
+    assert "error_ewma" not in br.stats()         # off ⇒ not advertised
+    with pytest.raises(ValueError):
+        CircuitBreaker(threshold=1, cooldown=1.0, ewma_alpha=0.0)
+    with pytest.raises(ValueError):
+        CircuitBreaker(threshold=1, cooldown=1.0, ewma_alpha=1.5)
+
+
+def test_adaptive_breaker_state_survives_export_restore():
+    """The manifest round-trip carries the learned error rate: a
+    recovered site resumes with the dead site's EWMA, not a clean
+    slate."""
+    clock = [0.0]
+    br = CircuitBreaker(threshold=4, cooldown=10.0,
+                        now_fn=lambda: clock[0], adaptive=True,
+                        ewma_alpha=0.5)
+    br.record_failure()
+    br.record_failure()          # open, ewma .75
+    st = br.export_state()
+    assert st["error_ewma"] == pytest.approx(0.75)
+    br2 = CircuitBreaker(threshold=4, cooldown=10.0,
+                         now_fn=lambda: clock[0], adaptive=True,
+                         ewma_alpha=0.5)
+    br2.restore_state(st)
+    assert br2.state == "open" and br2.opens == 1
+    assert br2.stats()["error_ewma"] == pytest.approx(0.75)
+    assert br2.stats()["effective_cooldown"] == pytest.approx(17.5)
+    legacy = dict(st)
+    legacy.pop("error_ewma")     # manifest from a pre-adaptive build
+    br2.restore_state(legacy)
+    assert br2.error_ewma == 0.0
+
+
+def test_adaptive_knobs_flow_through_config():
+    """RARConfig → retry_policy → ResilientTier plumbing, plus config
+    validation of the smoothing factor."""
+    rt, _, _ = make_resilient(RetryPolicy(breaker_threshold=3,
+                                          breaker_adaptive=True,
+                                          breaker_ewma_alpha=0.5))
+    assert rt.breaker.adaptive and rt.breaker.ewma_alpha == 0.5
+    cfg = make_cfg(breaker_threshold=2, breaker_adaptive=True,
+                   breaker_ewma_alpha=0.3)
+    pol = retry_policy(cfg)
+    assert pol.breaker_adaptive and pol.breaker_ewma_alpha == 0.3
+    with pytest.raises(ValueError):
+        make_cfg(breaker_ewma_alpha=0.0)
 
 
 def test_default_policy_wrapper_is_pass_through():
@@ -554,7 +670,7 @@ def test_journal_recovery_is_byte_identical(tmp_path, snapshot_every):
                            snapshot_every=snapshot_every)
     rec = mem.MemoryJournal.recover(path, rar.cfg.memory)
     assert rec is not None
-    state, epoch, applied = rec
+    state, epoch, applied, _ = rec
     assert_states_equal(state, rar.memory)
     assert epoch == rar.commit_stream.buffer.epoch
     assert applied == rar.commit_stream.buffer.entries_applied
@@ -596,7 +712,7 @@ def test_wal_crash_recovers_previous_epoch(tmp_path):
     _, ref_snapshots = run_journaled(make_stream(),
                                      str(tmp_path / "ref"),
                                      snapshot_every=100)
-    state, epoch, _ = mem.MemoryJournal.recover(
+    state, epoch, _, _ = mem.MemoryJournal.recover(
         path, make_cfg().memory)
     assert epoch == crash_at - 1
     assert_states_equal(state, ref_snapshots[crash_at - 1])
@@ -615,7 +731,7 @@ def test_apply_crash_recovers_one_epoch_ahead(tmp_path):
     _, ref_snapshots = run_journaled(make_stream(),
                                      str(tmp_path / "ref"),
                                      snapshot_every=100)
-    state, epoch, _ = mem.MemoryJournal.recover(path, make_cfg().memory)
+    state, epoch, _, _ = mem.MemoryJournal.recover(path, make_cfg().memory)
     assert epoch == crash_at
     assert_states_equal(state, ref_snapshots[crash_at])
 
@@ -625,9 +741,55 @@ def test_recovery_tolerates_torn_wal_tail(tmp_path):
     rar, _ = run_journaled(make_stream(), path, snapshot_every=100)
     with open(os.path.join(path, "wal.log"), "ab") as f:
         f.write(b"\x07\x00\x00\x00garbage-torn-frame")  # power-cut tail
-    state, epoch, _ = mem.MemoryJournal.recover(path, rar.cfg.memory)
+    with pytest.warns(mem.JournalCorruptionWarning, match="crc mismatch"):
+        state, epoch, _, _ = mem.MemoryJournal.recover(path,
+                                                       rar.cfg.memory)
     assert_states_equal(state, rar.memory)
     assert epoch == rar.commit_stream.buffer.epoch
+
+
+def test_wal_bit_flip_stops_replay_at_corrupt_frame(tmp_path):
+    """Bit rot mid-file: replay keeps every epoch before the flipped
+    frame, drops everything at and after it, and says where and why in
+    a structured warning — never a raised exception, never a torn
+    store."""
+    path = str(tmp_path / "journal")
+    rar, snapshots = run_journaled(make_stream(), path, snapshot_every=100)
+    wal = os.path.join(path, "wal.log")
+    with open(wal, "rb") as f:
+        data = bytearray(f.read())
+    data[12] ^= 0x40                 # payload byte of the FIRST frame
+    with open(wal, "wb") as f:
+        f.write(bytes(data))
+    with pytest.warns(mem.JournalCorruptionWarning) as rec:
+        state, epoch, applied, _ = mem.MemoryJournal.recover(
+            path, rar.cfg.memory)
+    w = next(r.message for r in rec
+             if isinstance(r.message, mem.JournalCorruptionWarning))
+    assert w.path == wal and w.offset == 0 and w.reason == "crc mismatch"
+    assert epoch == 0 and applied == 0      # no snapshot: nothing survives
+    assert_states_equal(state, snapshots[0])
+
+
+def test_wal_truncated_frame_recovers_prefix_with_warning(tmp_path):
+    """Cut the file mid-frame (lost sector): recovery is exact up to
+    the last intact frame and warns with the torn frame's offset."""
+    path = str(tmp_path / "journal")
+    rar, snapshots = run_journaled(make_stream(), path, snapshot_every=100)
+    wal = os.path.join(path, "wal.log")
+    with open(wal, "rb") as f:
+        data = f.read()
+    with open(wal, "wb") as f:
+        f.write(data[:len(data) - 3])       # 3 bytes short of a frame
+    with pytest.warns(mem.JournalCorruptionWarning,
+                      match="torn payload") as rec:
+        state, epoch, _, _ = mem.MemoryJournal.recover(path,
+                                                       rar.cfg.memory)
+    w = next(r.message for r in rec
+             if isinstance(r.message, mem.JournalCorruptionWarning))
+    assert w.offset > 0
+    assert epoch == rar.commit_stream.buffer.epoch - 1
+    assert_states_equal(state, snapshots[epoch])
 
 
 def test_recovered_store_resumes_serving(tmp_path):
@@ -655,8 +817,37 @@ def test_recovered_store_resumes_serving(tmp_path):
     # learn one new skill → new journal epoch → recoverable
     holder["emb"] = skill_emb(40)
     rar2.process(prompt(40, 1), greq(40), key=None)
-    _, epoch2, _ = mem.MemoryJournal.recover(path, rar2.cfg.memory)
+    _, epoch2, _, _ = mem.MemoryJournal.recover(path, rar2.cfg.memory)
     assert epoch2 == rar2.commit_stream.buffer.epoch > epoch0
+
+
+def test_sequential_manifest_restores_engine_state(tmp_path):
+    """The WAL carries the controller's engine-state manifest inside
+    every epoch frame (plus a manifest-only checkpoint frame at clean
+    shutdown): reopening the journal path restores the logical clock
+    and routing counters exactly, not just the store bytes."""
+    path = str(tmp_path / "journal")
+    stream = make_stream()
+    rar, _ = run_journaled(stream, path, snapshot_every=3,
+                           breaker_threshold=2)
+    rar.close_shadow()                        # checkpoint frame
+    holder = {}
+    rar2 = RAR(FakeTier(known={0, 1}, name="weak"),
+               FakeTier(known=range(10_000), can_guide=True,
+                        name="strong"),
+               lambda p: holder["emb"], lambda e, k: False,
+               make_cfg(journal_path=path, snapshot_every=3,
+                        breaker_threshold=2))
+    assert rar2.now == rar.now
+    assert rar2.guides_from_memory == rar.guides_from_memory
+    assert rar2.guides_generated == rar.guides_generated
+    assert rar2.probes_deferred == rar.probes_deferred
+    assert rar2.strong.breaker.state == rar.strong.breaker.state
+    # the clock resumes, it does not restart: the next request gets a
+    # fresh stamp strictly after every recovered insertion
+    holder["emb"] = skill_emb(stream[0][0])
+    rar2.process(prompt(stream[0][0], 5), greq(stream[0][0]), key=None)
+    assert rar2.now == rar.now + 1
 
 
 def test_fabric_with_journal_recovers_across_restart(tmp_path):
