@@ -34,6 +34,18 @@ multiple passes so the memory warms up) through:
   + parent learn plane) with worker spawn, compilation, and scheduler
   noise excluded, at strong-call counts asserted identical to the
   thread fabric, and
+* the 4-replica fabric under the **adaptive shadow cadence**
+  (``fabric_r4_adaptive`` row): ``shadow_mode="adaptive"`` installs one
+  fabric-wide drain policy that fits drain cost online and flushes when
+  estimated staleness cost beats the amortized drain overhead (capped
+  at ``ADAPTIVE_CAP`` batches). The row records requests/sec next to
+  the observed staleness-at-drain distribution (p50/p99 batches, merged
+  across every replica's ``drain_staleness_batches`` histogram) and the
+  policy's decision counters. Strong calls are *reported but not
+  asserted* against the eager rows: holding shadow work back changes
+  which requests see a warm memory — that staleness/cost trade is the
+  thing being measured, and
+
 * the 4-replica fabric under injected faults (``fabric_r4_faulty`` row):
   one replica crash early in the run (supervised restart + redispatch)
   plus a strong-tier error burst behind retries and a circuit breaker
@@ -82,6 +94,8 @@ PROC_MB = 16        # process-row dispatch quantum: a framed-pickle
 #                     per-stream FIFO, so routing (and strong calls)
 #                     are unchanged
 PROC_REPS = 3       # timeit-style min-of-N for the process row
+ADAPTIVE_CAP = 8    # adaptive row: hard staleness cap (batches) on top
+#                     of the cost model
 
 
 def _make_tiers():
@@ -210,6 +224,63 @@ def _run_fabric(n_replicas: int, weak, strong, prompts, greqs, embs,
     stats = fabric.stats()
     fabric.close_shadow()
     return strong_calls, stats
+
+
+def _fleet_staleness(fabric) -> dict:
+    """Staleness-at-drain distribution merged across every replica's
+    ``drain_staleness_batches`` histogram (reservoirs concatenated —
+    per-replica summaries cannot be percentile-merged)."""
+    reg = fabric.metrics_registry
+    samples, count, total = [], 0, 0.0
+    for i in range(len(fabric.replicas)):
+        h = reg.histogram(f"replica{i}/shadow/drain_staleness_batches")
+        with h._lock:
+            samples += h._samples
+            count += h.count
+            total += h.total
+    samples.sort()
+
+    def pct(p):
+        if not samples:
+            return 0.0
+        return samples[min(len(samples) - 1,
+                           max(0, int(round(p / 100 * (len(samples) - 1)))))]
+
+    return {"count": count,
+            "mean": round(total / count, 4) if count else 0.0,
+            "p50": pct(50.0), "p99": pct(99.0)}
+
+
+def _run_fabric_adaptive(n_replicas: int, weak, strong, prompts, greqs,
+                         embs, cfg: RARConfig):
+    """The adaptive-cadence fabric row's serve: same dispatch schedule
+    as :func:`_run_fabric`, ``shadow_mode="adaptive"`` with the staleness
+    cap at ``ADAPTIVE_CAP`` batches. Returns (strong_calls, staleness
+    summary, drain-policy stats)."""
+    import dataclasses as _dc
+    acfg = _dc.replace(cfg, shadow_mode="adaptive",
+                       shadow_flush_every=ADAPTIVE_CAP)
+    fabric = ServingFabric(weak, strong, lambda p: None,
+                           lambda e, k: False, acfg, replicas=n_replicas)
+    n = len(prompts)
+    streams = [[i for i in range(n) if i % FABRIC_STREAMS == j]
+               for j in range(FABRIC_STREAMS)]
+    tickets = []
+    for _ in range(N_PASSES):
+        for j, idxs in enumerate(streams):
+            for start in range(0, len(idxs), FABRIC_MB):
+                chunk = idxs[start:start + FABRIC_MB]
+                tickets.append(fabric.submit(
+                    [prompts[i] for i in chunk],
+                    [greqs[i] for i in chunk],
+                    keys=chunk, embs=embs[chunk],
+                    replica=j % n_replicas))
+    fabric.flush_shadow()
+    strong_calls = sum(o.strong_calls for t in tickets for o in t.wait())
+    staleness = _fleet_staleness(fabric)
+    policy = fabric.metrics()["drain_policy"]
+    fabric.close_shadow()
+    return strong_calls, staleness, policy
 
 
 def _proc_no_embed(prompt):
@@ -385,6 +456,33 @@ def main() -> None:
                           strong_calls / total_requests, 4)}
         rows.append({"mode": f"fabric_r{nr}", **fabric[nr]})
 
+    # adaptive-cadence row: the r4 fabric with the global cost-model
+    # drain policy; staleness distribution reported next to throughput
+    # (strong calls reported, NOT asserted — staleness legitimately
+    # changes which requests see a warm memory)
+    _run_fabric_adaptive(4, weak, strong, prompts, greqs, embs, cfg)  # warm
+    t0 = time.perf_counter()
+    a_strong, a_stale, a_policy = _run_fabric_adaptive(
+        4, weak, strong, prompts, greqs, embs, cfg)
+    dt = time.perf_counter() - t0
+    adaptive = {"replicas": 4,
+                "microbatch": FABRIC_MB,
+                "streams": FABRIC_STREAMS,
+                "staleness_cap_batches": ADAPTIVE_CAP,
+                "requests": total_requests,
+                "seconds": round(dt, 4),
+                "requests_per_sec": round(total_requests / dt, 2),
+                "strong_calls": a_strong,
+                "strong_call_ratio": round(a_strong / total_requests, 4),
+                "staleness_batches_p50": a_stale["p50"],
+                "staleness_batches_p99": a_stale["p99"],
+                "staleness_batches_mean": a_stale["mean"],
+                "drains_observed": a_stale["count"],
+                "policy_decisions": a_policy["decisions"],
+                "policy_cost_drains": a_policy["cost_drains"],
+                "policy_coldstart_drains": a_policy["coldstart_drains"]}
+    rows.append({"mode": "fabric_r4_adaptive", **adaptive})
+
     # process-transport row: the r4 workload through process-per-replica
     # workers on one persistent fabric (worker spawn + jit compilation
     # excluded — the steady-state transport cost is what's measured)
@@ -472,6 +570,13 @@ def main() -> None:
         "fabric_speedup_r4_vs_r1": round(
             fabric[4]["requests_per_sec"] / fabric[1]["requests_per_sec"],
             2),
+        # adaptive cadence vs the eager r4 run: throughput ratio plus
+        # the staleness the cost model actually tolerated
+        "fabric_adaptive_throughput_vs_clean_r4": round(
+            adaptive["requests_per_sec"] / fabric[4]["requests_per_sec"],
+            2),
+        "fabric_adaptive_staleness_p50": adaptive["staleness_batches_p50"],
+        "fabric_adaptive_staleness_p99": adaptive["staleness_batches_p99"],
         # process transport at identical routing: the strong-call count
         # must equal the thread fabric's (placement again, not routing);
         # the speedup is steady-state proc r4 over thread r4
@@ -500,6 +605,11 @@ def main() -> None:
           f"{report['shadow_strong_calls_match_inline_mb32']}); "
           f"fabric r4 vs r1: {report['fabric_speedup_r4_vs_r1']:.2f}x "
           f"(strong calls match across replicas: {fabric_match}); "
+          f"adaptive r4 at "
+          f"{report['fabric_adaptive_throughput_vs_clean_r4']:.2f}x "
+          f"eager r4, staleness p50/p99 "
+          f"{adaptive['staleness_batches_p50']:.0f}/"
+          f"{adaptive['staleness_batches_p99']:.0f} batches; "
           f"proc r4 at "
           f"{report['fabric_proc_speedup_vs_thread_r4']:.2f}x thread r4 "
           f"(strong calls match: "

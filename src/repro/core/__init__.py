@@ -71,6 +71,52 @@ Architecture (decision core / serve plane / learn plane):
     ack before its next serve) restores the thread replica's
     serve-after-drain order across the process boundary, so routing is
     byte-identical under arbitrarily deep pipelined submission.
+  - *Drain-epoch retention* (:mod:`repro.core.shadow` +
+    :mod:`repro.core.pipeline`): a drain epoch that *fails* mid-run
+    loses nothing. The queue re-queues the failed epoch's items at the
+    head (seq order preserved, retried ahead of newer work) and the
+    runner rolls its partial effects back — staged commit-buffer ops
+    (``CommitBuffer.mark``/``rollback``), half-resolved Outcome fields,
+    and the RQ2/coalescing counters — so the retry, once the fault
+    clears, is byte-identical to a first run. The async drainer holds
+    retries until a barrier consumes the error (no hot retry loop);
+    ``flush_shadow()`` after the fault resolves every pending Outcome
+    with ``items_enqueued == items_drained``.
+
+* **Observability + adaptive control plane** — host-side metrics and
+  the cost-model drain cadence built on them, default-off and
+  byte-transparent when off:
+
+  - *Metrics* (:mod:`repro.serving.metrics`): one
+    :class:`MetricsRegistry` (counters / gauges / bounded-reservoir
+    histograms behind a single lock — consistent snapshots, never a
+    torn read) carries per-replica queue depth, shadow staleness
+    (batches + logical time), drain cost (items / probe calls / wall
+    seconds per epoch), commit-stream progress and lag, jit-cache
+    hits/misses, breaker transitions, and supervision events.
+    **Zero device syncs**: every recorded value is already a host
+    number; a metrics scrape can never stall the serve pipeline.
+    Surfaced via ``fabric.metrics()`` (plus the process fabric's
+    per-worker commit-epoch lag, fed by epoch-carrying heartbeats)
+    and the serve CLI's ``--metrics-json``/``--metrics-every``.
+  - *Adaptive drain cadence* (``shadow_mode="adaptive"``):
+    a :class:`~repro.core.shadow.AdaptiveDrainPolicy` shared
+    fabric-wide fits drain cost online (exponentially-decayed least
+    squares over observed ``(items, seconds)`` epochs) and drains when
+    the expected staleness cost — pending items × re-shadow
+    probability × per-item cost — exceeds the fixed overhead a drain
+    amortizes; ``shadow_flush_every`` demotes to a hard staleness cap.
+    Cold start always drains, so the always-drain base policy pins
+    adaptive ≡ deferred/flush-every-1 byte-identically
+    (``tests/test_metrics.py``).
+  - *Autoscaling hooks* (:mod:`repro.serving.fabric`): ``scale_to(n)``
+    spawns replicas live into the round-robin or retires the
+    highest-index slot (terminal ``"retired"`` health — dispatch skips
+    it, its queued FIFO still drains, the learn replica never
+    retires); ``set_autoscaler(policy)`` + ``autoscale()`` drive it
+    from a ``metrics()`` snapshot behind a health gate (no resize
+    while any slot is dead/mid-restart).
+
   - *Fault injection* (:mod:`repro.serving.faults`): a seedable
     :class:`FaultPlan` fires crashes/errors/delays/kills at the named
     logical sites (``replica_serve``, ``tier_call``, ``drain``,

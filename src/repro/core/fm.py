@@ -210,6 +210,7 @@ class CircuitBreaker:
         self._probing = False
         self.opens = 0               # times the breaker tripped open
         self.shed = 0                # calls rejected while open/probing
+        self.transitions = 0         # state changes (closed/open/half_open)
 
     # -- adaptive knobs (locked callers only) ---------------------------
     def _effective_threshold_locked(self) -> int:
@@ -245,6 +246,7 @@ class CircuitBreaker:
                     raise TierUnavailableError(
                         "circuit breaker open (cooling down)")
                 self.state = "half_open"
+                self.transitions += 1
                 self._probing = True
                 return
             if self.state == "half_open":
@@ -257,6 +259,8 @@ class CircuitBreaker:
     def record_success(self) -> None:
         with self._lock:
             self._observe_locked(failed=False)
+            if self.state != "closed":
+                self.transitions += 1
             self.state = "closed"
             self._failures = 0
             self._probing = False
@@ -278,6 +282,8 @@ class CircuitBreaker:
             self._trip_locked()
 
     def _trip_locked(self) -> None:
+        if self.state != "open":
+            self.transitions += 1
         self.state = "open"
         self._opened_at = self._now()
         self._failures = 0
@@ -287,7 +293,7 @@ class CircuitBreaker:
     def stats(self) -> dict:
         with self._lock:
             out = {"state": self.state, "opens": self.opens,
-                   "shed": self.shed}
+                   "shed": self.shed, "transitions": self.transitions}
             if self.adaptive:
                 out["error_ewma"] = self.error_ewma
                 out["effective_threshold"] = \
@@ -307,6 +313,7 @@ class CircuitBreaker:
         with self._lock:
             return {"state": self.state, "failures": self._failures,
                     "opens": self.opens, "shed": self.shed,
+                    "transitions": self.transitions,
                     "error_ewma": self.error_ewma}
 
     def restore_state(self, st: dict) -> None:
@@ -315,6 +322,7 @@ class CircuitBreaker:
             self._failures = st["failures"]
             self.opens = st["opens"]
             self.shed = st["shed"]
+            self.transitions = st.get("transitions", 0)
             self.error_ewma = st.get("error_ewma", 0.0)
             self._probing = False
             if self.state == "open":

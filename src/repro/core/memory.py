@@ -377,6 +377,28 @@ class CommitBuffer:
         return len(self._records) + len(self._soft_clears) + \
             len(self._touches)
 
+    # -- partial-epoch rollback -----------------------------------------
+    def mark(self) -> tuple:
+        """Opaque cursor over the staging area, for :meth:`rollback`.
+        Taken by a drain runner *before* it stages anything, so a
+        mid-epoch failure can unstage exactly its own partial work and a
+        queue-level retry replays from a clean slate (the
+        lost-failed-epoch bugfix: re-queued items must not double-stage)."""
+        return (len(self._records), len(self._soft_clears),
+                len(self._touches))
+
+    def rollback(self, mark: tuple) -> None:
+        """Discard every op staged since ``mark``. Ops staged *before*
+        the mark (another replica's epoch sharing this buffer) are
+        untouched. If the buffer was applied since the mark (cursor now
+        shorter than the mark), there is nothing of ours left to unstage
+        — the clamp makes rollback after a racing apply a no-op rather
+        than an error."""
+        r, s, t = mark
+        del self._records[min(r, len(self._records)):]
+        del self._soft_clears[min(s, len(self._soft_clears)):]
+        del self._touches[min(t, len(self._touches)):]
+
     # -- apply ----------------------------------------------------------
     def take_ops(self):
         """Drain the staged ops: returns ``(records, soft_clears,
@@ -785,12 +807,18 @@ class CommitStream:
         # the lock after a successful apply with the epoch's taken ops,
         # so the fabric can broadcast them to out-of-process workers
         self.ops_listener = None
+        # optional metrics registry (set by the owning fabric): applied
+        # epochs/entries counters + current-epoch gauge, bumped under
+        # the stream lock — all host ints, zero device syncs
+        self.metrics = None
 
     def subscribe(self, view) -> None:
         """Register a controller whose ``.memory`` tracks this stream's
-        store (idempotent)."""
+        store (idempotent). ``view.commit_epoch_seen`` tracks the last
+        epoch broadcast to it — the per-view commit-lag metric."""
         if view not in self._views:
             self._views.append(view)
+            view.commit_epoch_seen = self.buffer.epoch
 
     def count(self, n: int = 1) -> None:
         """Account ``n`` direct (non-buffered) commits — the sequential
@@ -824,9 +852,16 @@ class CommitStream:
             self.commits += n
             for v in self._views:
                 v.memory = state
+                v.commit_epoch_seen = self.buffer.epoch
             if self.ops_listener is not None:
                 self.ops_listener(epoch, records, soft_clears, touches,
                                   n)
+            if self.metrics is not None:
+                with self.metrics.lock:
+                    self.metrics.counter("commit/epochs_applied").inc()
+                    self.metrics.counter("commit/entries_applied").inc(n)
+                    self.metrics.gauge("commit/epoch").set(
+                        self.buffer.epoch)
             if self.journal is not None:
                 self.journal.maybe_snapshot(state, self.buffer, manifest)
         return state

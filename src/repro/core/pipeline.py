@@ -103,12 +103,31 @@ class MicrobatchRAR(RAR):
 
     def __init__(self, *args, **kwargs):
         super().__init__(*args, **kwargs)
+        self.metrics_registry = self._metrics_registry()
         self.shadow = self._make_shadow_queue()
 
     def _shadow_runner(self):
         """The queue's drain callable. The fabric's replicas override
         this so a single learn replica owns every drain."""
         return self._drain_shadow
+
+    def _metrics_registry(self):
+        """The registry the shadow queue mirrors its stats into. A
+        standalone controller owns a private one; the fabric's replicas
+        override this to share the fabric-wide registry (with
+        per-replica name prefixes from :meth:`_metrics_prefix`)."""
+        from repro.serving.metrics import MetricsRegistry
+        return MetricsRegistry()
+
+    def _metrics_prefix(self) -> str:
+        return "shadow/"
+
+    def _drain_policy(self):
+        """Drain policy for ``shadow_mode="adaptive"`` — None lets the
+        queue build a private :class:`~repro.core.shadow.
+        AdaptiveDrainPolicy`; the fabric overrides this so every
+        replica's queue shares ONE policy (the global cadence)."""
+        return None
 
     def _make_shadow_queue(self) -> shq.ShadowQueue:
         """Build the controller's shadow queue, staged into (and locked
@@ -118,7 +137,24 @@ class MicrobatchRAR(RAR):
                                flush_every=self.cfg.shadow_flush_every,
                                buffer=self.commit_stream.buffer,
                                store_lock=self.commit_stream.lock,
-                               fault_plan=self.fault_plan)
+                               fault_plan=self.fault_plan,
+                               metrics=self.metrics_registry,
+                               metrics_prefix=self._metrics_prefix(),
+                               drain_policy=self._drain_policy())
+
+    def metrics(self) -> dict:
+        """Host-side metrics snapshot — registry counters/gauges/
+        histograms plus commit-stream progress and (in adaptive mode)
+        the drain policy's fitted cost model. Zero device syncs: every
+        number is a host-side counter."""
+        out = {"registry": self.metrics_registry.snapshot(),
+               "commit": {"epoch": self.commit_stream.buffer.epoch,
+                          "entries_applied":
+                              self.commit_stream.buffer.entries_applied,
+                          "commits": self.commit_stream.commits}}
+        if self.shadow.drain_policy is not None:
+            out["drain_policy"] = self.shadow.drain_policy.stats()
+        return out
 
     # ------------------------------------------------------------------
     def flush_shadow(self, timeout: float | None = None) -> None:
@@ -335,8 +371,43 @@ class MicrobatchRAR(RAR):
     # ------------------------------------------------------------------
     def _drain_shadow(self, items: list[shq.ShadowItem]) -> None:
         """Run the three batched shadow sweeps over one coalesced drain
-        epoch and apply all resulting memory writes atomically."""
+        epoch and apply all resulting memory writes atomically.
+
+        Failure atomicity: if any sweep raises (a transient
+        ``TierError``, an injected fault), everything this epoch touched
+        is rolled back — the commit buffer's partially-staged ops, every
+        item's Outcome fields, and the RQ2/coalescing counters — before
+        the exception propagates. The queue re-queues the items
+        (``ShadowQueue._requeue``), so the retry at the next barrier
+        replays against a clean slate and is byte-identical to a first
+        run: the lost-failed-epoch bugfix needs both halves."""
         buf = self.shadow.buffer
+        mark = buf.mark()
+        saved = [(it.strong_calls, it.outcome.case,
+                  it.outcome.strong_calls, it.outcome.guide_source)
+                 for it in items]
+        counters = (self.guides_from_memory, self.guides_generated,
+                    self.shadow.items_coalesced,
+                    self.shadow.reclaimed_weak_calls,
+                    self.shadow.reclaimed_strong_calls)
+        try:
+            self._drain_shadow_epoch(items)
+        except BaseException:
+            buf.rollback(mark)
+            for it, (sc, case, osc, gs) in zip(items, saved):
+                it.strong_calls = sc
+                it.outcome.strong_calls = osc
+                it.outcome.case = case
+                it.outcome.guide_source = gs
+            (self.guides_from_memory, self.guides_generated,
+             self.shadow.items_coalesced,
+             self.shadow.reclaimed_weak_calls,
+             self.shadow.reclaimed_strong_calls) = counters
+            raise
+
+    def _drain_shadow_epoch(self, items: list[shq.ShadowItem]) -> None:
+        buf = self.shadow.buffer
+        probe_calls = 0               # FM calls this epoch (drain cost)
         empty_guide = np.zeros((self.cfg.memory.guide_len,), np.int32)
 
         # ---- coalescing: near-duplicate items share one shadow pass.
@@ -391,6 +462,7 @@ class MicrobatchRAR(RAR):
 
         # ---- sweep 1: weak-alone probes (Case 1)
         weak_ans = _answers(self.weak, [it.prompt for it in leaders])
+        probe_calls += len(leaders)
         pending: list[shq.ShadowItem] = []
         for it, a in zip(leaders, weak_ans):
             if self.aligned_fn(int(a), it.strong_ans):
@@ -423,6 +495,7 @@ class MicrobatchRAR(RAR):
                     still.append(it)
             if probes:
                 probe_ans = _answers(self.weak, probes)
+                probe_calls += len(probes)
                 for it, g, a in zip(probe_items, probe_guides, probe_ans):
                     if self.aligned_fn(int(a), it.strong_ans):
                         settle(it, "case2a", g)
@@ -448,9 +521,11 @@ class MicrobatchRAR(RAR):
                 for it in still:
                     it.strong_calls += 1
                     fresh_ran.add(it.seq)
+                probe_calls += len(still)      # strong guide generations
                 probe_ans = _answers(self.weak,
                                      [splice_guides(it.prompt, [g])
                                       for it, g in zip(still, fresh)])
+                probe_calls += len(still)      # guided weak probes
                 for it, g, a in zip(still, fresh, probe_ans):
                     if self.aligned_fn(int(a), it.strong_ans):
                         settle(it, "case2b", g)
@@ -469,4 +544,5 @@ class MicrobatchRAR(RAR):
         # dropped (CommitBuffer contract). The apply, the commit-counter
         # bump and the broadcast to every subscribed replica view happen
         # atomically under the stream's store lock.
+        self.shadow.note_probe_calls(probe_calls)
         self.memory = self.commit_stream.apply(self.memory)

@@ -27,6 +27,29 @@ Drain modes (``RARConfig.shadow_mode``)
   batches are pending and drains in the background; :meth:`flush` is the
   synchronous barrier (waits for the queue to empty and all commits to
   apply, re-raising any drainer exception).
+* ``"adaptive"`` — deferred-style caller-thread drains, but the *when*
+  is decided by a cost model instead of a fixed cadence: a
+  :class:`DrainPolicy` (default :class:`AdaptiveDrainPolicy`) estimates
+  the expected staleness cost of the pending set — re-shadow probability
+  × per-item probe cost, both fit online from the observed drain-cost
+  history — and drains once it exceeds the amortized fixed overhead of
+  one more drain epoch. ``shadow_flush_every`` is demoted to a hard
+  staleness cap (drain no later than N batches; 0 = uncapped). The
+  policy may be **shared by several queues** (the serving fabric
+  registers every replica's queue with one policy), in which case a
+  drain decision flushes the whole group — the global adaptive cadence:
+  the learn replica sees every replica's staleness, not just its own.
+
+Failed drains are never lossy: if the drainer raises (a transient
+``TierError``, an injected ``drain``-site fault), the epoch's items are
+re-queued **at the head** in seq order before the exception propagates,
+so the next barrier retries them — ``items_enqueued == items_drained``
+is restored once the fault clears, and no Outcome is stranded at
+``shadow_pending``. (The drain runner is responsible for rolling back
+its own partial staging — see ``MicrobatchRAR._drain_shadow`` — so a
+retry is byte-identical to a first run.) The async worker holds a failed
+epoch back until a new submit or an explicit flush instead of hot-
+looping on a persistent error.
 
 Outcome resolution: shadow requests return immediately with the strong
 answer and a provisional ``case="shadow_pending"`` Outcome; the drainer
@@ -49,6 +72,14 @@ functional ``MemoryState`` the apply is a single reference swap; for the
 mutable ``ShardedMemory`` the lock is what makes the multi-field update
 atomic with respect to readers.
 
+Metrics: the queue mirrors its stats into a
+:class:`repro.serving.metrics.MetricsRegistry` (a private one unless the
+owner injects a shared registry + name prefix, as the fabric does):
+depth/staleness gauges, enqueue/drain/requeue counters, and drain-cost
+histograms (items, probe calls, wall seconds, staleness per epoch) — all
+host-side numbers, zero device syncs. The drain-cost histograms are what
+the adaptive policy fits its cost model on.
+
 The queue itself is policy-free: the controller passes its drain function
 (``MicrobatchRAR._drain_shadow``) as ``runner``; the queue only schedules
 — coalescing, barriers, and the worker thread. ``drain_delay`` injects a
@@ -58,12 +89,13 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 
 import numpy as np
 
 from repro.core.rar import Outcome
 
-MODES = ("inline", "deferred", "async")
+MODES = ("inline", "deferred", "async", "adaptive")
 
 #: provisional case label carried by a shadow request's Outcome until its
 #: drain resolves it to case1/case2/case3
@@ -88,17 +120,152 @@ class ShadowItem:
     strong_calls: int = 1
 
 
+class DrainPolicy:
+    """Base drain policy: **always drain** — every submit triggers a
+    flush, which makes ``adaptive`` mode run the exact ``deferred``
+    flush-every-batch schedule (the byte-identity hook
+    ``tests/test_metrics.py`` pins the adaptive plumbing against).
+    Subclasses override :meth:`due` with a real cost model."""
+
+    def __init__(self):
+        self.queues: list["ShadowQueue"] = []
+        self.decisions = 0            # times due() was consulted
+
+    def register(self, q: "ShadowQueue") -> None:
+        """Attach a queue to this policy's drain group. A policy shared
+        across queues makes every drain decision *global*: when it fires,
+        the whole group flushes (the fabric's learn replica drains every
+        replica's staleness, not just the submitter's)."""
+        if q not in self.queues:
+            self.queues.append(q)
+
+    # -- signals ---------------------------------------------------------
+    def pending_items(self) -> int:
+        """Items pending across the whole drain group (GIL-atomic list
+        reads; a heuristic input, not a synchronized count)."""
+        return sum(len(q._items) for q in self.queues)
+
+    def staleness_batches(self) -> int:
+        return max((q._batches for q in self.queues), default=0)
+
+    def note_drain(self, n_items: int, seconds: float) -> None:
+        """Observed cost of one successful drain epoch (called by each
+        queue after its runner returns)."""
+
+    def due(self) -> bool:
+        self.decisions += 1
+        return True
+
+    def stats(self) -> dict:
+        return {"policy": type(self).__name__,
+                "decisions": self.decisions}
+
+
+class AdaptiveDrainPolicy(DrainPolicy):
+    """Global staleness-cost vs drain-cost trade, fit online.
+
+    Model: one drain epoch over ``n`` items costs roughly
+    ``overhead + n · per_item`` wall seconds. Both coefficients are
+    recovered by exponentially-decayed least squares over the observed
+    ``(n_items, seconds)`` drain history (the same numbers the drain-cost
+    histograms record). Waiting instead of draining risks *re-shadow
+    work*: a pending item's near-duplicate arriving before the drain has
+    to run its own probe sweeps (exactly the waste the coalescing stats
+    measure), so the expected cost of holding the pending set one more
+    batch is ``pending_items × p_reshadow × per_item``, with
+    ``p_reshadow`` estimated from the group's lifetime duplicate rate
+    (``items_coalesced / items_drained``, Laplace-smoothed by
+    ``reshadow_prior`` so an idle store starts at the prior mean). Drain
+    when that expected staleness cost exceeds the fixed ``overhead`` a
+    drain epoch would amortize away.
+
+    Cold start: until the regression is well-posed (≥ 2 epochs with
+    distinct sizes) every decision is "drain" — the eager schedule is
+    also how the model gets its first data points. A persistent
+    "never drain" verdict is bounded by the queue-level
+    ``flush_every`` staleness cap, not here.
+    """
+
+    def __init__(self, decay: float = 0.95,
+                 reshadow_prior: tuple[float, float] = (1.0, 9.0)):
+        super().__init__()
+        if not 0.0 < decay <= 1.0:
+            raise ValueError(f"decay={decay} must be in (0, 1]")
+        self.decay = decay
+        self.reshadow_prior = reshadow_prior
+        self._lock = threading.Lock()
+        # decayed normal-equation sums for seconds ≈ a + b·items
+        self._s1 = self._sn = self._st = 0.0
+        self._snn = self._snt = 0.0
+        self.cost_drains = 0          # drains the cost model asked for
+        self.coldstart_drains = 0     # drains forced while under-fit
+
+    def note_drain(self, n_items: int, seconds: float) -> None:
+        with self._lock:
+            d = self.decay
+            self._s1 = self._s1 * d + 1.0
+            self._sn = self._sn * d + n_items
+            self._st = self._st * d + seconds
+            self._snn = self._snn * d + n_items * n_items
+            self._snt = self._snt * d + n_items * seconds
+
+    def model(self) -> tuple[float, float] | None:
+        """``(overhead_secs, per_item_secs)``, or None while the decayed
+        regression is singular (too little size variance to separate the
+        intercept from the slope)."""
+        with self._lock:
+            det = self._s1 * self._snn - self._sn * self._sn
+            if self._s1 < 2.0 or det <= 1e-12:
+                return None
+            b = (self._s1 * self._snt - self._sn * self._st) / det
+            a = (self._st * self._snn - self._sn * self._snt) / det
+            return max(a, 0.0), max(b, 0.0)
+
+    def reshadow_prob(self) -> float:
+        pa, pb = self.reshadow_prior
+        coal = sum(q.items_coalesced for q in self.queues)
+        drained = sum(q.items_drained for q in self.queues)
+        return (coal + pa) / (drained + pa + pb)
+
+    def due(self) -> bool:
+        self.decisions += 1
+        pending = self.pending_items()
+        if pending == 0:
+            return False
+        m = self.model()
+        if m is None:
+            self.coldstart_drains += 1
+            return True
+        overhead, per_item = m
+        if pending * self.reshadow_prob() * per_item >= overhead:
+            self.cost_drains += 1
+            return True
+        return False
+
+    def stats(self) -> dict:
+        out = super().stats()
+        m = self.model()
+        out.update({"cost_drains": self.cost_drains,
+                    "coldstart_drains": self.coldstart_drains,
+                    "reshadow_prob": self.reshadow_prob(),
+                    "overhead_secs": m[0] if m else None,
+                    "per_item_secs": m[1] if m else None})
+        return out
+
+
 class ShadowQueue:
     """Coalescing drain scheduler for the shadow plane (see module doc).
 
     ``runner(items)`` performs the actual shadow sweeps + commit apply;
     the queue guarantees each enqueued item is passed to ``runner``
-    exactly once, in enqueue order, coalesced per drain epoch.
+    exactly once *successfully*, in enqueue order, coalesced per drain
+    epoch — a failed drain re-queues its items for the next barrier.
     """
 
     def __init__(self, runner, mode: str = "inline", flush_every: int = 1,
                  buffer=None, drain_delay: float = 0.0, store_lock=None,
-                 fault_plan=None):
+                 fault_plan=None, metrics=None, metrics_prefix: str = "",
+                 drain_policy: DrainPolicy | None = None):
         if mode not in MODES:
             raise ValueError(f"shadow mode {mode!r} not in {MODES}")
         from repro.core.memory import CommitBuffer
@@ -124,10 +291,15 @@ class ShadowQueue:
         self._stop = False
         self._worker: threading.Thread | None = None
         self._error: BaseException | None = None
+        # a failed async drain re-queues its items but must not hot-loop
+        # on a persistent error: held back until a new submit or flush
+        self._retry_holdback = False
         # host-side stats (single GIL-protected writers)
         self.items_enqueued = 0
         self.items_drained = 0
         self.drains = 0
+        self.drain_failures = 0
+        self.items_requeued = 0       # failed-epoch items put back (cum.)
         # coalescing stats (``RARConfig.shadow_dedup_sim``): followers
         # merged into a leader's shadow pass, and the probe calls those
         # followers did not have to run (weak probes / fresh-guide strong
@@ -135,33 +307,96 @@ class ShadowQueue:
         self.items_coalesced = 0
         self.reclaimed_weak_calls = 0
         self.reclaimed_strong_calls = 0
+        # staleness tracking (host logical time; no device syncs)
+        self.newest_now = 0           # max ``now`` ever enqueued
+        self.last_drain_now = 0       # max ``now`` drained successfully
+        self._staleness_at_take = 0   # batches pending at the last take
+        self._probe_calls_last = 0    # runner-reported probe calls/epoch
+        # adaptive cadence: a DrainPolicy decides when to drain (created
+        # here unless the owner shares one across queues — the fabric's
+        # global policy)
+        if mode == "adaptive" and drain_policy is None:
+            drain_policy = AdaptiveDrainPolicy()
+        self.drain_policy = drain_policy
+        if self.drain_policy is not None:
+            self.drain_policy.register(self)
+        # metrics plane: mirror stats into a registry (private unless the
+        # owner injects the fabric-wide one + a per-replica prefix)
+        if metrics is None:
+            from repro.serving.metrics import MetricsRegistry
+            metrics = MetricsRegistry()
+        self.metrics = metrics
+        p = metrics_prefix
+        self._m_enq = metrics.counter(p + "items_enqueued")
+        self._m_drained = metrics.counter(p + "items_drained")
+        self._m_drains = metrics.counter(p + "drains")
+        self._m_failures = metrics.counter(p + "drain_failures")
+        self._m_requeued = metrics.counter(p + "items_requeued")
+        self._m_depth = metrics.gauge(p + "depth_items")
+        self._m_stale_b = metrics.gauge(p + "staleness_batches")
+        self._m_stale_t = metrics.gauge(p + "staleness_logical")
+        self._m_h_items = metrics.histogram(p + "drain_items")
+        self._m_h_secs = metrics.histogram(p + "drain_seconds")
+        self._m_h_probes = metrics.histogram(p + "drain_probe_calls")
+        self._m_h_stale = metrics.histogram(p + "drain_staleness_batches")
 
     # -- enqueue --------------------------------------------------------
     def next_seq(self) -> int:
         self._seq += 1
         return self._seq
 
+    @property
+    def staleness_logical(self) -> int:
+        """Logical time between the newest enqueued item and the last
+        successful drain — 0 when fully drained."""
+        if not self._items:
+            return 0
+        return max(0, self.newest_now - self.last_drain_now)
+
+    def _sync_gauges_locked(self) -> None:
+        """Mirror depth/staleness into the registry under ONE registry
+        lock hold (snapshot consistency: the three gauges always agree)."""
+        with self.metrics.lock:
+            self._m_depth.set(len(self._items))
+            self._m_stale_b.set(self._batches)
+            self._m_stale_t.set(self.staleness_logical)
+
     def submit(self, items: list[ShadowItem]) -> None:
         """Enqueue one serve batch's shadow items (may be empty — an empty
         batch still counts toward the flush cadence so drain latency is
         bounded in requests, not in shadow traffic)."""
         self._reraise()
+        if items:
+            self.newest_now = max(self.newest_now, self._max_now(items))
         if self.mode == "inline":
             self.items_enqueued += len(items)
-            if items:
-                self._drain(items)
+            self._m_enq.inc(len(items))
+            # a failed epoch's re-queued items retry ahead of this batch
+            # (empty unless a previous inline/flush drain raised)
+            pending = self._take() + items
+            if pending:
+                self._staleness_at_take = 1
+                self._drain(pending)
             return
         with self._cv:
             self._items.extend(items)
             self.items_enqueued += len(items)
+            self._m_enq.inc(len(items))
             self._batches += 1
+            self._retry_holdback = False      # new data: retry is fair game
             due = self.flush_every > 0 and self._batches >= self.flush_every
+            self._sync_gauges_locked()
             if self.mode == "async":
                 if due:
                     self._ensure_worker()
                     self._cv.notify_all()
                 return
-        if due:                       # deferred: drain on caller thread
+        if self.mode == "adaptive":
+            # the cadence cap OR the cost model; a shared policy makes
+            # the decision global and the flush group-wide
+            if due or self.drain_policy.due():
+                self._drain_group()
+        elif due:                     # deferred: drain on caller thread
             self.flush()
 
     # -- barriers -------------------------------------------------------
@@ -175,6 +410,7 @@ class ShadowQueue:
                 and self._worker.is_alive():
             with self._cv:
                 self._flush_requested = True
+                self._retry_holdback = False
                 self._cv.notify_all()
                 done = self._cv.wait_for(
                     lambda: (not self._items and not self._draining)
@@ -190,6 +426,13 @@ class ShadowQueue:
         if items:
             self._drain(items)
 
+    def _drain_group(self) -> None:
+        """Flush every queue in the drain policy's group (adaptive mode:
+        a global drain decision empties all replicas' staleness, funneled
+        through the shared learn-replica drain)."""
+        for q in self.drain_policy.queues:
+            q.flush()
+
     def drain_now(self, items: list[ShadowItem]) -> None:
         """Run one drain epoch synchronously over externally-held items —
         the deferred-probe *replay* path (items parked during a
@@ -200,6 +443,9 @@ class ShadowQueue:
             return
         self._reraise()
         self.items_enqueued += len(items)
+        self._m_enq.inc(len(items))
+        self.newest_now = max(self.newest_now, self._max_now(items))
+        self._staleness_at_take = 1
         self._drain(items)
 
     def close(self, timeout: float | None = 60) -> None:
@@ -227,24 +473,75 @@ class ShadowQueue:
             self._worker = None
             self._stop = False
 
+    # -- drain-cost reporting (runner-side hooks) -----------------------
+    def note_probe_calls(self, n: int) -> None:
+        """Called by the drain runner with the FM calls one epoch spent
+        (weak probes + strong guide generations) — feeds the
+        ``drain_probe_calls`` histogram the cost model estimates from."""
+        self._probe_calls_last += n
+
     # -- internals ------------------------------------------------------
+    @staticmethod
+    def _max_now(items) -> int:
+        """Newest logical time in a batch (tolerates bare test stubs
+        without a ``now``)."""
+        return max((getattr(it, "now", 0) or 0 for it in items),
+                   default=0)
+
     def _take(self) -> list[ShadowItem]:
         with self._cv:
             items, self._items = self._items, []
+            self._staleness_at_take = self._batches
             self._batches = 0
+            self._sync_gauges_locked()
             return items
 
+    def _requeue(self, items: list[ShadowItem]) -> None:
+        """A drain epoch failed: put its items back AT THE HEAD (they
+        precede anything enqueued since the take, and they are already in
+        seq order), restore a pending-batch count so cadence-based drains
+        still trigger, and let the exception propagate — the next barrier
+        retries."""
+        with self._cv:
+            self._items = list(items) + self._items
+            self._batches += 1
+            self.items_requeued += len(items)
+            self._m_requeued.inc(len(items))
+            self.drain_failures += 1
+            self._m_failures.inc()
+            self._sync_gauges_locked()
+
     def _drain(self, items: list[ShadowItem]) -> None:
-        if self.fault_plan is not None:
-            # injected drainer fault: propagates like a real drain
-            # exception (inline → caller; async → surfaced at barrier)
-            self.fault_plan.fire("drain")
-        if self.drain_delay:
-            import time
-            time.sleep(self.drain_delay)
-        self.runner(items)
+        stale_batches = max(1, self._staleness_at_take)
+        self._probe_calls_last = 0
+        t0 = time.perf_counter()
+        try:
+            if self.fault_plan is not None:
+                # injected drainer fault: propagates like a real drain
+                # exception (inline → caller; async → surfaced at
+                # barrier) — and, like one, re-queues the epoch's items
+                self.fault_plan.fire("drain")
+            if self.drain_delay:
+                time.sleep(self.drain_delay)
+            self.runner(items)
+        except BaseException:
+            self._requeue(items)
+            raise
+        dt = time.perf_counter() - t0
         self.items_drained += len(items)
         self.drains += 1
+        self.last_drain_now = max(self.last_drain_now,
+                                  self._max_now(items))
+        with self.metrics.lock:
+            self._m_drained.inc(len(items))
+            self._m_drains.inc()
+            self._m_h_items.observe(len(items))
+            self._m_h_secs.observe(dt)
+            self._m_h_probes.observe(self._probe_calls_last)
+            self._m_h_stale.observe(stale_batches)
+            self._m_stale_t.set(self.staleness_logical)
+        if self.drain_policy is not None:
+            self.drain_policy.note_drain(len(items), dt)
 
     def _reraise(self) -> None:
         if self._error is not None:
@@ -261,6 +558,16 @@ class ShadowQueue:
     def _due_locked(self) -> bool:
         if not self._items:
             return False
+        if self._error is not None:
+            # a failed epoch's error has not been consumed by a barrier
+            # yet: hold its re-queued items — re-draining now would
+            # retry in a hot loop behind the barrier's back (and tear
+            # the one-failure-one-requeue accounting)
+            return False
+        if self._retry_holdback and not self._flush_requested:
+            # error consumed, but no fresh traffic/barrier since the
+            # failure: wait instead of spinning on a persistent fault
+            return False
         return self._flush_requested or (
             self.flush_every > 0 and self._batches >= self.flush_every)
 
@@ -271,13 +578,17 @@ class ShadowQueue:
                 if self._stop and not self._items:
                     return
                 items, self._items = self._items, []
+                self._staleness_at_take = self._batches
                 self._batches = 0
                 self._draining = True
+                self._sync_gauges_locked()
             try:
                 if items:
                     self._drain(items)
-            except BaseException as e:   # surfaced at the next barrier
-                self._error = e
+            except BaseException as e:   # surfaced at the next barrier;
+                self._error = e          # _drain already re-queued items
+                with self._cv:
+                    self._retry_holdback = True
             finally:
                 with self._cv:
                     self._draining = False

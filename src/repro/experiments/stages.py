@@ -111,7 +111,8 @@ def run_rar_experiment(system: TrainedSystem, pool: list[Sample], *,
                        shadow_dedup_sim: float | None = None,
                        fault_plan=None,
                        verbose: bool = False,
-                       progress_every: int = 0
+                       progress_every: int = 0,
+                       metrics_every: int = 0
                        ) -> tuple[list[StageResult], RAR]:
     """One experiment (one shuffle). Returns per-stage results + the RAR
     instance (memory inspectable).
@@ -172,6 +173,11 @@ def run_rar_experiment(system: TrainedSystem, pool: list[Sample], *,
     served requests (0 = off). The occupancy read is the controller's
     host-side commit counter (``rar.memory_occupancy``), so progress
     logging never syncs a device scalar into the serve loop.
+
+    ``metrics_every``: print a one-line metrics summary (commit epoch,
+    shadow pending/staleness, drain counts) every N served requests
+    (0 = off). Reads the controller's host-side ``metrics()`` snapshot —
+    like ``progress_every``, never a device sync.
     """
     suite = system.suite
     strong = strong_tier or system.strong
@@ -289,6 +295,31 @@ def run_rar_experiment(system: TrainedSystem, pool: list[Sample], *,
                   f"memory {rar.memory_occupancy}/"
                   f"{rar.cfg.memory.capacity}")
 
+    def metrics_line(batch: int) -> None:
+        """Periodic one-line metrics summary off the controller's
+        host-side snapshot (no device syncs, same contract as
+        ``progress``). Called with the same served-counter cadence."""
+        if not metrics_every or not hasattr(rar, "metrics"):
+            return
+        if served // metrics_every <= (served - batch) // metrics_every:
+            return
+        met = rar.metrics()
+        commit = met.get("commit", {})
+        line = (f"      [metrics] epoch {commit.get('epoch', 0)}, "
+                f"entries {commit.get('entries_applied', 0)}")
+        reps = met.get("replicas")
+        if reps:
+            pending = sum(r["shadow_pending"] for r in reps)
+            stale = max(r["shadow_staleness_batches"] for r in reps)
+            drains = sum(r["drains"] for r in reps)
+            line += (f", shadow pending {pending} "
+                     f"(staleness {stale} batches), drains {drains}")
+        pol = met.get("drain_policy")
+        if pol:
+            line += (f", policy drains {pol.get('cost_drains', 0)}cost"
+                     f"+{pol.get('coldstart_drains', 0)}cold")
+        print(line)
+
     results = []
     for stage in range(n_stages):
         aligned = strong_calls = gmem = gfresh = 0
@@ -325,6 +356,7 @@ def run_rar_experiment(system: TrainedSystem, pool: list[Sample], *,
                 for i, out in zip(chunk, t.wait()):
                     tally(i, out)
                 progress(len(chunk))
+                metrics_line(len(chunk))
         elif microbatch > 1:
             stage_outs: list[tuple[int, object]] = []
             for start in range(0, len(order), microbatch):
@@ -335,6 +367,7 @@ def run_rar_experiment(system: TrainedSystem, pool: list[Sample], *,
                     keys=chunk, embs=embs[chunk])
                 stage_outs += zip(chunk, outs)
                 progress(len(chunk))
+                metrics_line(len(chunk))
             # stage-end barrier: deferred/async shadow outcomes are
             # provisional until their drain; flush before tallying so
             # StageResults are exact in every shadow mode (no-op inline)
@@ -347,6 +380,7 @@ def run_rar_experiment(system: TrainedSystem, pool: list[Sample], *,
                 out = rar.process(prompts[int(i)], greqs[int(i)], key=int(i))
                 tally(int(i), out)
                 progress(1)
+                metrics_line(1)
         results.append(StageResult(
             n=len(pool), aligned=aligned, strong_calls=strong_calls,
             guides_from_memory=gmem, guides_fresh=gfresh, cases=cases))

@@ -81,7 +81,7 @@ def main() -> None:
                     help="retrieved guides spliced into the weak FM's "
                          "prompt (default: --retrieval-k)")
     ap.add_argument("--shadow-mode", default="inline",
-                    choices=["inline", "deferred", "async"],
+                    choices=["inline", "deferred", "async", "adaptive"],
                     help="where shadow inference (weak probes, guide "
                          "generation, memory commits) runs relative to "
                          "the serve sweep: 'inline' = inside every "
@@ -89,7 +89,13 @@ def main() -> None:
                          "'deferred' = queued and drained synchronously "
                          "every --shadow-flush-every batches; 'async' = "
                          "drained by a background thread so user-facing "
-                         "latency pays for the serve sweep alone. "
+                         "latency pays for the serve sweep alone; "
+                         "'adaptive' = a cost model fitted online from "
+                         "drain-cost observations drains exactly when "
+                         "estimated staleness cost (pending re-shadow "
+                         "probability x probe cost) exceeds the "
+                         "amortized drain overhead — with replicas, one "
+                         "shared policy sees every replica's staleness. "
                          "Requires --microbatch > 1.")
     ap.add_argument("--shadow-flush-every", type=int, default=1,
                     help="drain the shadow queue every N batches "
@@ -97,7 +103,8 @@ def main() -> None:
                          "barriers). Larger values amortize drains at "
                          "the cost of memory staleness: a request cannot "
                          "hit a skill whose shadow pass has not drained "
-                         "yet")
+                         "yet. In adaptive mode this is a hard staleness "
+                         "cap on top of the cost model (0 = uncapped)")
     ap.add_argument("--shadow-dedup-sim", type=float, default=None,
                     help="coalesce queued shadow items whose embedding "
                          "cosine reaches this threshold: one probe pass "
@@ -156,6 +163,18 @@ def main() -> None:
                          "throttled because the memory-occupancy read "
                          "syncs a device scalar — per-request logging "
                          "would stall the pipeline on every request")
+    ap.add_argument("--metrics-every", type=int, default=0,
+                    help="print a one-line metrics summary (commit "
+                         "epoch, queue depth, shadow staleness, drain "
+                         "counts) every N served requests (0 = off). "
+                         "Reads the controller's host-side metrics "
+                         "snapshot — zero device syncs")
+    ap.add_argument("--metrics-json", default=None,
+                    help="write the final metrics snapshot "
+                         "(per-replica queue depth / shadow staleness / "
+                         "drain cost / commit lag, engine + breaker "
+                         "counters, supervision events, drain-policy "
+                         "cost model, raw registry) to this JSON file")
     ap.add_argument("--json-out", default=None)
     args = ap.parse_args()
 
@@ -199,8 +218,13 @@ def main() -> None:
         system, pool, n_stages=args.stages, rar_cfg=cfg,
         router_kind=args.router, microbatch=args.microbatch,
         replicas=args.replicas, transport=args.transport, verbose=True,
-        progress_every=args.log_every)
+        progress_every=args.log_every,
+        metrics_every=args.metrics_every)
     rar.close_shadow()
+    # snapshot AFTER the final flush so drain counters are complete and
+    # nothing is pending; metrics() stays valid on a closed fabric (all
+    # counters are plain host-side state)
+    final_metrics = rar.metrics() if hasattr(rar, "metrics") else None
     dt = time.time() - t0
 
     total = args.stages * len(pool)
@@ -211,6 +235,10 @@ def main() -> None:
     print(f"[serve] aligned {aligned}/{total} ({100 * aligned / total:.1f}%)"
           f", strong-FM calls {strong} ({100 * strong / total:.1f}% of "
           f"requests), memory size {rar.memory.size_fast}")
+    if args.metrics_json and final_metrics is not None:
+        with open(args.metrics_json, "w") as f:
+            json.dump(final_metrics, f, indent=1, default=str)
+        print(f"[serve] metrics snapshot -> {args.metrics_json}")
     if args.json_out:
         with open(args.json_out, "w") as f:
             json.dump([r.__dict__ for r in results], f, indent=1,

@@ -4,11 +4,13 @@ __all__ = ["ServingEngine", "greedy_generate", "ServingFabric", "Ticket",
            "ProcessServingFabric", "WorkerDied", "FramedChannel",
            "ChannelClosed", "FrameCorruption",
            "FaultPlan", "FaultSpec", "InjectedFault", "ReplicaCrash",
-           "random_plan"]
+           "random_plan",
+           "MetricsRegistry", "Counter", "Gauge", "Histogram"]
 
 _FAULTS = ("FaultPlan", "FaultSpec", "InjectedFault", "ReplicaCrash",
            "random_plan")
 _TRANSPORT = ("FramedChannel", "ChannelClosed", "FrameCorruption")
+_METRICS = ("MetricsRegistry", "Counter", "Gauge", "Histogram")
 
 
 def __getattr__(name):
@@ -28,4 +30,7 @@ def __getattr__(name):
     if name in _FAULTS:
         from repro.serving import faults
         return getattr(faults, name)
+    if name in _METRICS:
+        from repro.serving import metrics
+        return getattr(metrics, name)
     raise AttributeError(name)

@@ -71,6 +71,8 @@ class ServingEngine:
         self._jitted: dict[tuple, Any] = {}
         self.calls = 0          # inference calls served (RAR cost metric)
         self.tokens_processed = 0
+        self.jit_hits = 0       # generate() reused a compiled variant
+        self.jit_misses = 0     # generate() traced + compiled a new one
         # the async shadow drainer serves sweeps on its own thread while
         # the serve plane keeps generating — the jit-cache dict and the
         # cost counters (non-atomic read-modify-writes) need a lock to
@@ -89,8 +91,11 @@ class ServingEngine:
         with self._lock:
             fn = self._jitted.get(key)
             if fn is None:
+                self.jit_misses += 1
                 fn = self._jitted[key] = jax.jit(
                     partial(greedy_generate, self.cfg, max_new=max_new))
+            else:
+                self.jit_hits += 1
         out = fn(params=self.params, batch=batch)
         self._bill(tokens.shape[0], tokens.size + out.size)
         return out
@@ -134,7 +139,9 @@ class ServingEngine:
             return {"calls": self.calls,
                     "tokens_processed": self.tokens_processed,
                     "flops_spent": self.flops_spent,
-                    "jit_variants": len(self._jitted)}
+                    "jit_variants": len(self._jitted),
+                    "jit_hits": self.jit_hits,
+                    "jit_misses": self.jit_misses}
 
     # -- crash-recovery manifest hooks ----------------------------------
     def export_counters(self) -> dict:

@@ -72,6 +72,7 @@ from __future__ import annotations
 
 import dataclasses
 import queue as _queue
+import sys
 import threading
 import time
 
@@ -80,10 +81,14 @@ from repro.core import memory as mem
 from repro.core.fm import ResilientTier
 from repro.core.pipeline import MicrobatchRAR
 from repro.core.rar import Outcome, RARConfig, retry_policy
+from repro.core.shadow import AdaptiveDrainPolicy
 from repro.serving.faults import ReplicaCrash
+from repro.serving.metrics import MetricsRegistry
 
-#: replica health states (supervision)
-HEALTH = ("healthy", "suspect", "dead")
+#: replica health states (supervision). ``retired`` is terminal for a
+#: slot: an autoscale-down drained its queue and stopped its worker;
+#: dispatch skips it and its health is never overwritten.
+HEALTH = ("healthy", "suspect", "dead", "retired")
 
 
 class _SharedClock:
@@ -130,6 +135,21 @@ class _FabricReplica(MicrobatchRAR):
         # funnels into the fabric so the single learn replica executes
         # every drain against the shared commit stream
         return self._fabric._drain
+
+    def _metrics_registry(self):
+        # ONE fabric-wide registry: every replica's queue mirrors into
+        # it under a per-replica prefix, so a single snapshot covers the
+        # whole fabric consistently
+        return self._fabric.metrics_registry
+
+    def _metrics_prefix(self) -> str:
+        return f"replica{self.index}/shadow/"
+
+    def _drain_policy(self):
+        # in adaptive mode the fabric shares ONE policy across all
+        # replicas' queues — a drain decision sees the global pending
+        # set and flushes the whole group (None for the other modes)
+        return self._fabric.drain_policy
 
 
 @dataclasses.dataclass
@@ -196,6 +216,16 @@ class ServingFabric:
                                        fault_plan=fault_plan, seed=2)
         self.clock = _SharedClock()
         self._drain_lock = threading.Lock()
+        # metrics plane: one registry for the whole fabric — replicas'
+        # shadow queues mirror into it (per-replica prefixes), the
+        # commit stream bumps its epoch counters, and ``metrics()``
+        # snapshots everything consistently
+        self.metrics_registry = MetricsRegistry()
+        self.commit_stream.metrics = self.metrics_registry
+        # global adaptive cadence: one shared policy across every
+        # replica's queue (None unless shadow_mode == "adaptive")
+        self.drain_policy = (AdaptiveDrainPolicy()
+                             if cfg.shadow_mode == "adaptive" else None)
         # one store, N views: the functional MemoryState is shared by
         # reference and re-broadcast on every commit apply; a mutable
         # ShardedMemory is the same object in every view, made
@@ -206,6 +236,11 @@ class ServingFabric:
             store = recovered
         else:
             store = mem.init_memory(cfg.memory)
+        # construction args kept (post-ResilientTier-wrap) so the
+        # autoscaler can spawn additional replicas sharing the exact
+        # same tiers/breaker/commit stream
+        self._replica_args = (weak, strong, embed_fn, route_weak_fn)
+        self._aligned_fn = aligned_fn
         self.replicas = [
             _FabricReplica(self, i, weak, strong, embed_fn, route_weak_fn,
                            cfg, aligned_fn=aligned_fn, memory=store,
@@ -227,6 +262,12 @@ class ServingFabric:
         self.deaths = 0        # worker threads lost to a ReplicaCrash
         self.restarts = 0      # supervisor restarts
         self.redispatches = 0  # microbatches re-run on a survivor
+        # autoscaling (policy callable, no-op default): maps a metrics
+        # snapshot to a target active-replica count; ``autoscale()``
+        # applies it behind a health gate
+        self.autoscale_policy = None
+        self.spawned = 0       # replicas added by scale-up
+        self.retired = 0       # replicas retired by scale-down
         # full-state crash consistency: the fabric-wide engine state
         # (shared clock, learn-plane counters, parked deferred probes,
         # shared breaker/engine counters) rides inside every journaled
@@ -297,9 +338,12 @@ class ServingFabric:
         if replica is not None:
             return self.replicas[replica]
         with self._dispatch_lock:
-            r = self.replicas[self._rr % len(self.replicas)]
-            self._rr += 1
-        return r
+            for _ in range(len(self.replicas)):
+                i = self._rr % len(self.replicas)
+                self._rr += 1
+                if self.health[i] != "retired":
+                    return self.replicas[i]
+            return self.learn        # replica 0 never retires
 
     def process_batch(self, prompts, guide_requests, keys=None, embs=None,
                       replica: int | None = None) -> list[Outcome]:
@@ -358,10 +402,13 @@ class ServingFabric:
                 continue
             # supervision bookkeeping: a batch served entirely weak-only
             # because the strong tier shed marks the replica suspect
-            # (strong plane impaired), a clean serve clears it
+            # (strong plane impaired), a clean serve clears it. A slot
+            # retired mid-flight keeps its terminal state while it
+            # drains the rest of its FIFO.
             degraded = any(o.case in decisions.DEGRADED_CASES
                            for o in ticket.outcomes)
-            self.health[i] = "suspect" if degraded else "healthy"
+            if self.health[i] != "retired":
+                self.health[i] = "suspect" if degraded else "healthy"
             ticket._done.set()
 
     # -- supervision -----------------------------------------------------
@@ -405,9 +452,38 @@ class ServingFabric:
         n = len(self.replicas)
         for off in range(1, n):
             j = (exclude + off) % n
-            if self.health[j] != "dead":
+            if self.health[j] not in ("dead", "retired"):
                 return j
         return exclude
+
+    def _route_locked(self) -> int:
+        """Round-robin over live (non-dead, non-retired) replicas. When
+        every active slot is transiently marked dead — the crash window
+        between a death and its supervisor restart — do NOT enqueue onto
+        a dead slot (the old fall-through bug: the batch could land on a
+        queue whose worker is gone and never serve). Instead pick the
+        next active slot and revive it under the dispatch lock we
+        already hold: if its worker thread is live the "dead" mark is
+        stale (supervision already restarted it) and just clears; if the
+        worker is really gone, restart it here — by the time the put
+        happens the slot has a live worker either way."""
+        for _ in range(len(self.replicas)):
+            i = self._rr % len(self.replicas)
+            self._rr += 1
+            if self.health[i] not in ("dead", "retired"):
+                return i
+        for _ in range(len(self.replicas)):
+            i = self._rr % len(self.replicas)
+            self._rr += 1
+            if self.health[i] == "retired":
+                continue
+            t = self._threads[i] if i < len(self._threads) else None
+            if t is None or not t.is_alive():
+                self._restart_locked(i)
+            else:
+                self.health[i] = "healthy"
+            return i
+        raise RuntimeError("no active replicas (all retired)")
 
     def submit(self, prompts, guide_requests, keys=None, embs=None,
                replica: int | None = None) -> Ticket:
@@ -424,14 +500,7 @@ class ServingFabric:
         # guarantee above)
         with self._dispatch_lock:
             if replica is None:
-                # round-robin over non-dead replicas (a dead slot is
-                # mid-restart; every slot dead only happens transiently,
-                # then fall through to plain round-robin)
-                for _ in range(len(self.replicas)):
-                    replica = self._rr % len(self.replicas)
-                    self._rr += 1
-                    if self.health[replica] != "dead":
-                        break
+                replica = self._route_locked()
             ticket = Ticket(replica=replica)
             self._tickets.append(ticket)
             self._queues[replica].put((ticket, prompts, guide_requests,
@@ -486,20 +555,179 @@ class ServingFabric:
     def close_shadow(self) -> None:
         """Flush, then stop the replica workers and the replicas' shadow
         worker threads. A journaled fabric also checkpoints its manifest
-        so a clean shutdown recovers byte-identically. Idempotent."""
-        self.flush_shadow()
-        self.commit_stream.checkpoint()
-        if self._queues is not None:
-            for q in self._queues:
-                q.put(None)
-            for t in self._threads:
-                if t is not None:
-                    t.join(timeout=60)
-            self._queues, self._threads = None, []
-        for r in self.replicas:
-            r.close_shadow()
+        so a clean shutdown recovers byte-identically. Idempotent.
+
+        Teardown runs in a ``finally``: a flush that raises (drainer
+        error, barrier timeout) must still sentinel/join every worker
+        thread and close every replica's drainer — otherwise the threads
+        leak and a retried close would double-spawn. The flush error
+        stays the primary exception; teardown errors surface only when
+        the flush itself succeeded."""
+        try:
+            self.flush_shadow()
+            self.commit_stream.checkpoint()
+        finally:
+            teardown_err: BaseException | None = None
+            if self._queues is not None:
+                for q in self._queues:
+                    q.put(None)
+                for t in self._threads:
+                    if t is not None:
+                        t.join(timeout=60)
+                self._queues, self._threads = None, []
+            for r in self.replicas:
+                try:
+                    r.close_shadow()
+                except BaseException as e:
+                    if teardown_err is None:
+                        teardown_err = e
+            if teardown_err is not None and sys.exc_info()[0] is None:
+                raise teardown_err
 
     close = close_shadow
+
+    # -- autoscaling ----------------------------------------------------
+    def set_autoscaler(self, policy) -> None:
+        """Install the autoscaling policy: a callable mapping one
+        ``metrics()`` snapshot to a target active-replica count (int).
+        ``None`` (the default) makes :meth:`autoscale` a no-op."""
+        self.autoscale_policy = policy
+
+    @property
+    def active_replicas(self) -> int:
+        return sum(1 for h in self.health if h != "retired")
+
+    def autoscale(self) -> int:
+        """One autoscaling step: ask the policy for a target count from
+        the current metrics and apply it behind a **health gate** — no
+        resize while any slot is dead/mid-restart (supervision first,
+        capacity second; a crash storm must not race fresh spawns).
+        Returns the applied delta (+spawned / -retired / 0)."""
+        if self.autoscale_policy is None:
+            return 0
+        target = int(self.autoscale_policy(self.metrics()))
+        with self._dispatch_lock:
+            if any(h == "dead" for h in self.health):
+                return 0
+            return self._scale_to_locked(target)
+
+    def scale_to(self, n: int) -> int:
+        """Resize to ``n`` active replicas (spawn or retire); returns
+        the applied delta."""
+        with self._dispatch_lock:
+            return self._scale_to_locked(n)
+
+    def _scale_to_locked(self, n: int) -> int:
+        if n < 1:
+            raise ValueError(f"target replicas={n} must be >= 1 "
+                             f"(the learn replica always serves)")
+        delta = 0
+        while self.active_replicas < n:
+            self._spawn_replica_locked()
+            delta += 1
+        while self.active_replicas > n:
+            self._retire_replica_locked()
+            delta -= 1
+        return delta
+
+    def _spawn_replica_locked(self) -> None:
+        """Append a fresh replica sharing the fabric's tiers (and
+        breaker), commit stream, clock and metrics registry. Its store
+        view starts at the stream's current broadcast; if the threaded
+        workers are up, the slot gets its own queue + worker
+        immediately, otherwise it joins the synchronous round-robin."""
+        weak, strong, embed_fn, route_weak_fn = self._replica_args
+        i = len(self.replicas)
+        r = _FabricReplica(self, i, weak, strong, embed_fn,
+                           route_weak_fn, self.cfg,
+                           aligned_fn=self._aligned_fn,
+                           memory=self.learn.memory,
+                           commit_stream=self.commit_stream,
+                           fault_plan=self.fault_plan)
+        self.replicas.append(r)
+        self.health.append("healthy")
+        self.spawned += 1
+        if self._queues is not None:
+            self._queues.append(_queue.Queue())
+            self._threads.append(None)
+            self._spawn_worker_locked(i)
+
+    def _retire_replica_locked(self) -> None:
+        """Retire the highest-index active slot (never the learn
+        replica at index 0 — it owns every drain). The mark is terminal:
+        dispatch skips the slot immediately; its worker finishes the
+        FIFO already queued, then exits on the sentinel — queued work is
+        never dropped."""
+        for i in range(len(self.replicas) - 1, 0, -1):
+            if self.health[i] != "retired":
+                self.health[i] = "retired"
+                self.retired += 1
+                if self._queues is not None:
+                    self._queues[i].put(None)
+                return
+        raise RuntimeError("only the learn replica remains; "
+                           "cannot retire it")
+
+    # -- metrics plane ---------------------------------------------------
+    def metrics(self) -> dict:
+        """One host-side observability snapshot (zero device syncs —
+        every number is a Python int/float already on the host):
+        per-replica queue depth / health / shadow staleness + drain
+        counters + commit-stream lag, commit progress, engine and
+        breaker counters, supervision + autoscaling events, the adaptive
+        drain policy's fitted cost model, and the raw registry snapshot
+        (drain-cost histograms live there, under
+        ``replica{i}/shadow/...`` names)."""
+        with self._dispatch_lock:
+            queues = self._queues
+            health = list(self.health)
+        epoch = self.commit_stream.buffer.epoch
+        per = []
+        for i, r in enumerate(self.replicas):
+            sq = r.shadow
+            per.append({
+                "replica": i,
+                "health": health[i] if i < len(health) else "healthy",
+                "queue_depth": (queues[i].qsize()
+                                if queues is not None and i < len(queues)
+                                else 0),
+                "shadow_pending": len(sq._items),
+                "shadow_staleness_batches": sq._batches,
+                "shadow_staleness_logical": sq.staleness_logical,
+                "items_enqueued": sq.items_enqueued,
+                "items_drained": sq.items_drained,
+                "items_requeued": sq.items_requeued,
+                "drain_failures": sq.drain_failures,
+                "drains": sq.drains,
+                # epochs applied fabric-wide vs seen by this replica's
+                # store view (0 in the thread fabric's atomic broadcast;
+                # the process fabric's worker mirrors can lag)
+                "commit_epoch_lag":
+                    epoch - getattr(r, "commit_epoch_seen", epoch),
+            })
+        out = {
+            "replicas": per,
+            "commit": {"epoch": epoch,
+                       "entries_applied":
+                           self.commit_stream.buffer.entries_applied,
+                       "commits": self.commit_stream.commits},
+            "engines": {"weak": _engine_stats(self.learn.weak),
+                        "strong": _engine_stats(self.learn.strong)},
+            "resilience": {"weak": _tier_stats(self.learn.weak),
+                           "strong": _tier_stats(self.learn.strong)},
+            "supervision": {"health": health,
+                            "deaths": self.deaths,
+                            "restarts": self.restarts,
+                            "redispatches": self.redispatches,
+                            "spawned": self.spawned,
+                            "retired": self.retired,
+                            "active_replicas":
+                                sum(1 for h in health if h != "retired")},
+            "drain_policy": (self.drain_policy.stats()
+                             if self.drain_policy is not None else None),
+            "registry": self.metrics_registry.snapshot(),
+        }
+        return out
 
     # -- views / accounting ---------------------------------------------
     @property
@@ -553,6 +781,8 @@ class ServingFabric:
             "deaths": self.deaths,
             "restarts": self.restarts,
             "redispatches": self.redispatches,
+            "spawned": self.spawned,
+            "retired": self.retired,
             "probes_deferred": sum(r.probes_deferred
                                    for r in self.replicas),
             "probes_replayed": sum(r.probes_replayed

@@ -22,7 +22,9 @@ guarantees below hold):
   out-of-process analog of the in-process view update),
   ``("ack", dispatch_id)`` (the drain for that batch's "done" has run —
   see below), ``("stop",)``.
-* worker → parent: ``("ready", pid)``, ``("hb", seq)`` (heartbeat),
+* worker → parent: ``("ready", pid)``, ``("hb", seq, epoch)``
+  (heartbeat; ``epoch`` is the worker mirror's last applied commit
+  epoch, which gives the parent its per-worker commit-lag gauge),
   ``("done", dispatch_id, outcomes, shadow_items, deferred_items,
   engine_delta)``, ``("err", dispatch_id, exc)``.
 
@@ -197,7 +199,9 @@ def _worker_loop(channel: FramedChannel, init: dict) -> None:
                     return
             seq += 1
             try:
-                channel.send(("hb", seq))
+                # epoch rides along: a plain int read of the mirror's
+                # counter — staleness-tolerant (it is a gauge), no lock
+                channel.send(("hb", seq, stream.buffer.epoch))
             except ChannelClosed:
                 return
             stop_beat.wait(init["lease_interval"])
@@ -342,6 +346,8 @@ class _WorkerHandle:
         self.ready = threading.Event()
         self.alive = False
         self.pid: int | None = None
+        self.epoch: int | None = None  # last commit epoch the worker
+        #                                reported (via heartbeat)
 
 
 class ProcessServingFabric(ServingFabric):
@@ -429,6 +435,7 @@ class ProcessServingFabric(ServingFabric):
         handle.proc.start()
         worker_conn.close()           # parent drops its copy: EOF works
         handle.alive = True
+        handle.epoch = init["epoch"]  # mirror starts at the snapshot
         handle.last_beat = time.monotonic()
         handle.reader = threading.Thread(
             target=self._reader, args=(handle,),
@@ -473,6 +480,24 @@ class ProcessServingFabric(ServingFabric):
                     self._rr += 1
                     if self.health[replica] != "dead":
                         break
+                if self.health[replica] == "dead":
+                    # every slot is transiently marked dead: the old
+                    # fall-through dispatched to whichever dead slot the
+                    # pointer stopped on, orphaning the ticket on a
+                    # handle the death path had already drained. Prefer
+                    # a slot whose handle is live (just respawned);
+                    # revive the chosen slot under the held dispatch
+                    # lock if none is.
+                    for off in range(self.n_workers):
+                        j = (replica + off) % self.n_workers
+                        if self._handles[j].alive:
+                            replica = j
+                            break
+                    if not self._handles[replica].alive:
+                        self._handles[replica] = self._spawn_locked(
+                            replica, None)
+                        self.restarts += 1
+                    self.health[replica] = "healthy"
             ticket = Ticket(replica=replica)
             self._tickets.append(ticket)
             payload = (nows, prompts, guide_requests, keys, embs)
@@ -504,6 +529,8 @@ class ProcessServingFabric(ServingFabric):
                 handle.ready.set()
             elif kind == "hb":
                 handle.last_beat = time.monotonic()
+                if len(msg) > 2:      # epoch-carrying heartbeat
+                    handle.epoch = msg[2]
             elif kind == "done":
                 handle.last_beat = time.monotonic()
                 self._on_done(handle, *msg[1:])
@@ -734,6 +761,34 @@ class ProcessServingFabric(ServingFabric):
         engine = getattr(tier, "engine", None)
         local = getattr(engine, "calls", 0) if engine is not None else 0
         return local + self._remote_engine.get(name, {}).get("calls", 0)
+
+    def metrics(self) -> dict:
+        """Parent-plane metrics plus the worker plane: per-worker health,
+        in-flight depth and commit-epoch lag (authoritative epoch minus
+        the worker mirror's last heartbeat-reported epoch), transport
+        frame counters, stale drops and lease expiries. Host-side
+        counters only — no device syncs."""
+        m = super().metrics()
+        epoch = self.commit_stream.buffer.epoch
+        with self._dispatch_lock:
+            m["workers"] = [{
+                "worker": h.index,
+                "health": self.health[h.index],
+                "alive": h.alive,
+                "inflight": len(h.inflight),
+                "commit_epoch_seen": h.epoch,
+                "commit_epoch_lag": (max(0, epoch - h.epoch)
+                                     if h.epoch is not None else None),
+            } for h in self._handles]
+            m["transport"] = {
+                "frames_sent": sum(h.channel.sent
+                                   for h in self._handles),
+                "frames_received": sum(h.channel.received
+                                       for h in self._handles),
+            }
+            m["stale_drops"] = self.stale_drops
+            m["lease_expiries"] = self.lease_expiries
+        return m
 
     def stats(self) -> dict:
         s = super().stats()

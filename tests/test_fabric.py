@@ -225,3 +225,118 @@ def test_worker_error_surfaces_at_wait_and_join():
 def test_fabric_validation():
     with pytest.raises(ValueError):
         build_fabric(0)
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle + routing robustness (PR 8 satellite pins)
+# ---------------------------------------------------------------------------
+
+
+def test_close_shadow_joins_workers_when_flush_raises():
+    """A flush failure inside close_shadow must not leak the replica
+    worker threads: teardown runs in a finally (threads sentineled and
+    joined, queues torn down), the flush error stays the primary
+    exception, and a retried close with the fault cleared drains and
+    succeeds."""
+    fab = build_fabric(2, weak_known=set(), shadow_mode="deferred",
+                       shadow_flush_every=0)
+    stream = make_stream()[:6]
+    tickets = [fab.submit([prompt(s, x)], [greq(s)],
+                          embs=skill_emb(s)[None], replica=0)
+               for s, x in stream]
+    for t in tickets:
+        t.wait(timeout=30)
+    assert len(fab.learn.shadow._items) == len(stream)   # undrained
+    threads = [t for t in fab._threads if t is not None]
+    assert threads and all(t.is_alive() for t in threads)
+
+    real_runner = fab.learn.shadow.runner
+    boom = RuntimeError("drain broken")
+
+    def dying(items):
+        raise boom
+
+    fab.learn.shadow.runner = dying
+    with pytest.raises(RuntimeError, match="drain broken"):
+        fab.close_shadow()
+    # the finally ran: every worker thread joined, dispatch plane gone
+    assert all(not t.is_alive() for t in threads)
+    assert fab._queues is None
+    # failed epoch retained (the drain-loss bugfix), not dropped: the
+    # flush AND the learn replica's own close retry each failed once,
+    # re-queuing the same 6 items both times — nothing lost either way
+    assert fab.learn.shadow.drain_failures == 2
+    assert fab.learn.shadow.items_requeued == 2 * len(stream)
+    assert len(fab.learn.shadow._items) == len(stream)
+    # fault cleared: the retried close drains everything and succeeds
+    fab.learn.shadow.runner = real_runner
+    fab.close_shadow()
+    assert fab.learn.shadow.items_enqueued == \
+        fab.learn.shadow.items_drained
+    assert all(o.case != PENDING for t in tickets for o in t.wait())
+
+
+def test_submit_serves_when_all_replicas_marked_dead():
+    """The round-robin fall-through bug: with every slot transiently
+    marked dead, submit used to enqueue onto a dead slot's queue and the
+    ticket never served. Now the chosen slot is revived under the
+    dispatch lock — a stale mark clears, a really-dead worker restarts —
+    and the ticket serves."""
+    fab = build_fabric(2, weak_known={0, 1})
+    first = fab.submit([prompt(0, 1)], [greq(0)], embs=skill_emb(0)[None])
+    assert first.wait(timeout=30)[0].response == 1
+    # stale-mark case: workers are alive, every slot says dead
+    fab.health = ["dead", "dead"]
+    t = fab.submit([prompt(1, 2)], [greq(1)], embs=skill_emb(1)[None])
+    assert t.wait(timeout=30)[0].response == 3
+    assert fab.health[t.replica] == "healthy"         # mark self-healed
+    # really-dead case: kill both workers, mark dead, submit again
+    with fab._dispatch_lock:
+        for q in fab._queues:
+            q.put(None)
+    for th in fab._threads:
+        th.join(timeout=30)
+    assert all(not th.is_alive() for th in fab._threads)
+    fab.health = ["dead", "dead"]
+    restarts = fab.restarts
+    t2 = fab.submit([prompt(0, 3)], [greq(0)], embs=skill_emb(0)[None])
+    assert t2.wait(timeout=30)[0].response == 3
+    assert fab.restarts == restarts + 1               # slot restarted
+    fab.close_shadow()
+
+
+def test_autoscale_spawn_and_retire():
+    """scale_to grows the fleet with live workers immediately in the
+    round-robin, retire is terminal (skipped by dispatch, queued work
+    still drains), the learn replica can never retire, and the
+    policy-driven autoscale() is health-gated."""
+    fab = build_fabric(1, weak_known={0, 1})
+    fab.submit([prompt(0, 1)], [greq(0)],
+               embs=skill_emb(0)[None]).wait(timeout=30)
+    assert fab.scale_to(3) == 2
+    assert fab.active_replicas == 3 and len(fab.replicas) == 3
+    stream = make_stream()
+    outs = serve_fabric(fab, stream, 2, submit=True)
+    assert len(outs) == len(stream)
+    assert all(o.case != PENDING for o in outs)
+    # scale back down: highest slots retire, learn replica survives
+    assert fab.scale_to(1) == -2
+    assert fab.active_replicas == 1
+    assert fab.health[1] == fab.health[2] == "retired"
+    t = fab.submit([prompt(1, 1)], [greq(1)], embs=skill_emb(1)[None])
+    assert t.replica == 0                             # retired slots skipped
+    t.wait(timeout=30)
+    with pytest.raises(ValueError):
+        fab.scale_to(0)                               # learn always serves
+    # policy-driven step: target from a metrics snapshot, health-gated
+    fab.set_autoscaler(lambda m: 2)
+    assert fab.autoscale() == 1
+    assert fab.active_replicas == 2
+    fab.health[0] = "dead"
+    assert fab.autoscale() == 0                       # gate: no resize
+    fab.health[0] = "healthy"
+    m = fab.metrics()
+    assert m["supervision"]["spawned"] == 3
+    assert m["supervision"]["retired"] == 2
+    assert m["supervision"]["active_replicas"] == 2
+    fab.close_shadow()

@@ -1,0 +1,305 @@
+"""Metrics plane + adaptive drain cadence: registry semantics (typed
+instruments, bounded-reservoir histograms, atomic snapshots), snapshot
+consistency under the async drainer and N-replica threaded stress
+(counters monotone, drained <= enqueued, no torn snapshots), the
+adaptive-mode equivalence anchor (a forced always-drain cost model makes
+``shadow_mode="adaptive"`` byte-identical to deferred/flush-every-1),
+and the fabric's ``metrics()`` contract — per-replica queue depth,
+shadow staleness, drain cost and commit lag, all host-side.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+from test_fabric import build_fabric, serve_fabric
+from test_pipeline import SCENARIOS, build, make_stream
+from test_rar_controller import greq, prompt, skill_emb
+from test_shadow import assert_equivalent, serve_stream
+
+from repro.core.pipeline import MicrobatchRAR
+from repro.core.shadow import AdaptiveDrainPolicy, DrainPolicy
+from repro.serving.metrics import MetricsRegistry
+
+
+# ---------------------------------------------------------------------------
+# Registry semantics
+# ---------------------------------------------------------------------------
+
+
+def test_registry_instruments_and_snapshot():
+    reg = MetricsRegistry()
+    reg.counter("a/n").inc()
+    reg.counter("a/n").inc(4)
+    reg.gauge("a/depth").set(7)
+    for v in (1.0, 2.0, 3.0, 4.0):
+        reg.histogram("a/cost").observe(v)
+    snap = reg.snapshot()
+    assert snap["a/n"] == 5
+    assert snap["a/depth"] == 7
+    h = snap["a/cost"]
+    assert h["count"] == 4 and h["total"] == 10.0 and h["mean"] == 2.5
+    assert h["p50"] in (2.0, 3.0) and h["p99"] == 4.0
+    # same name, different kind: a registration bug, not a new instrument
+    with pytest.raises(TypeError):
+        reg.gauge("a/n")
+    with pytest.raises(TypeError):
+        reg.histogram("a/depth")
+
+
+def test_histogram_reservoir_bounded_but_counts_exact():
+    reg = MetricsRegistry()
+    h = reg.histogram("h")
+    n = 10_000
+    for v in range(n):
+        h.observe(float(v))
+    assert h.count == n                      # exact, not sampled
+    assert h.total == float(sum(range(n)))   # exact, not sampled
+    assert len(h._samples) <= 2048           # reservoir stays bounded
+    s = h.summary()
+    assert s["count"] == n
+    # decimated reservoir still tracks the distribution's bulk
+    assert 0.2 * n < s["p50"] < 0.8 * n
+
+
+# ---------------------------------------------------------------------------
+# Adaptive-mode equivalence anchor
+# ---------------------------------------------------------------------------
+
+
+def _force_policy(ctrl, policy):
+    """Swap the queue's drain policy post-build (the queue consults
+    ``drain_policy.due()`` per submit, so a swapped-in policy governs
+    every subsequent cadence decision)."""
+    policy.register(ctrl.shadow)
+    ctrl.shadow.drain_policy = policy
+    return policy
+
+
+@pytest.mark.parametrize("kw", SCENARIOS[:3])
+@pytest.mark.parametrize("batch", [1, 4])
+def test_adaptive_always_drain_policy_identical_to_deferred(kw, batch):
+    """The acceptance anchor for adaptive mode: with the cost model
+    replaced by the always-drain base policy (and the cadence cap
+    disabled), adaptive runs the identical drain schedule as
+    deferred/flush-every-1 — outcomes, memory, FM calls, RQ2 counters
+    byte-identical."""
+    stream = make_stream()
+    ref, _ = build(MicrobatchRAR, shadow_mode="deferred",
+                   shadow_flush_every=1, **kw)
+    ada, _ = build(MicrobatchRAR, shadow_mode="adaptive",
+                   shadow_flush_every=0, **kw)
+    pol = _force_policy(ada, DrainPolicy())
+    a_outs = serve_stream(ref, stream, batch)
+    b_outs = serve_stream(ada, stream, batch)
+    assert_equivalent(ref, a_outs, ada, b_outs)
+    assert pol.decisions > 0          # the policy really was consulted
+
+
+def test_adaptive_cold_start_drains_like_deferred():
+    """Before the regression has two observations the private adaptive
+    policy must always drain (cold start) — so a short stream is
+    byte-identical to deferred/1 even with the real cost model."""
+    kw = dict(weak_known=set())
+    stream = make_stream()[:4]
+    ref, _ = build(MicrobatchRAR, shadow_mode="deferred",
+                   shadow_flush_every=1, **kw)
+    ada, _ = build(MicrobatchRAR, shadow_mode="adaptive",
+                   shadow_flush_every=0, **kw)
+    a_outs = serve_stream(ref, stream, 2)
+    b_outs = serve_stream(ada, stream, 2)
+    assert_equivalent(ref, a_outs, ada, b_outs)
+    st = ada.shadow.drain_policy.stats()
+    assert st["coldstart_drains"] >= 1
+
+
+def test_adaptive_flush_every_is_a_hard_staleness_cap():
+    """In adaptive mode ``flush_every`` is demoted to a cap: even a
+    never-drain cost model cannot hold items past N batches."""
+
+    class NeverDrain(DrainPolicy):
+        def due(self):
+            self.decisions += 1
+            return False
+
+    ada, _ = build(MicrobatchRAR, shadow_mode="adaptive",
+                   shadow_flush_every=2, weak_known=set())
+    _force_policy(ada, NeverDrain())
+    stream = make_stream()[:6]
+    serve_stream(ada, stream, 1)      # final flush_shadow drains the rest
+    # with the cap at 2 batches, drains happened mid-stream, not only at
+    # the stage-end barrier
+    assert ada.shadow.drains >= 3
+    assert ada.shadow.items_enqueued == ada.shadow.items_drained
+
+
+def test_adaptive_policy_learns_cost_model():
+    """After enough drains the decayed regression yields a usable
+    (overhead, per-item) model and the policy starts making real
+    cost-based decisions."""
+    pol = AdaptiveDrainPolicy(decay=1.0)
+    for n, secs in ((1, 1.0), (2, 1.5), (4, 2.5), (8, 4.5)):
+        pol.note_drain(n, secs)
+    a, b = pol.model()
+    assert a == pytest.approx(0.5, abs=1e-6)   # fixed overhead
+    assert b == pytest.approx(0.5, abs=1e-6)   # per-item cost
+    st = pol.stats()
+    assert st["overhead_secs"] == pytest.approx(0.5, abs=1e-6)
+    assert st["per_item_secs"] == pytest.approx(0.5, abs=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Snapshot consistency under concurrency
+# ---------------------------------------------------------------------------
+
+_COUNTERS = ("items_enqueued", "items_drained", "drains",
+             "drain_failures", "items_requeued", "epochs_applied",
+             "entries_applied")
+
+
+def _check_snapshot(snap, prev):
+    """One registry snapshot: counters (and histogram counts) monotone
+    vs ``prev``, drained <= enqueued within the same snapshot (a torn
+    snapshot would break this — drains bump both under one lock hold)."""
+    for name, val in snap.items():
+        v = val["count"] if isinstance(val, dict) else val
+        if isinstance(val, dict) or name.endswith(_COUNTERS):
+            assert v >= prev.get(name, 0), f"{name} went backwards"
+            prev[name] = v
+    by_prefix = {}
+    for name, val in snap.items():
+        for suffix in ("items_enqueued", "items_drained"):
+            if name.endswith(suffix):
+                by_prefix.setdefault(name[: -len(suffix)], {})[suffix] = val
+    for prefix, d in by_prefix.items():
+        assert d["items_drained"] <= d["items_enqueued"], prefix
+
+
+def test_metrics_consistent_under_async_drainer():
+    """The background drainer updates drain counters while the serve
+    thread enqueues: every snapshot taken mid-flight must still be
+    internally consistent and monotone."""
+    ctrl, _ = build(MicrobatchRAR, weak_known=set(), shadow_mode="async",
+                    shadow_flush_every=2)
+    stop, failures, prev = threading.Event(), [], {}
+
+    def sampler():
+        while not stop.is_set():
+            try:
+                _check_snapshot(ctrl.metrics_registry.snapshot(), prev)
+            except AssertionError as e:
+                failures.append(e)
+                return
+            time.sleep(0.0005)
+
+    t = threading.Thread(target=sampler)
+    t.start()
+    try:
+        serve_stream(ctrl, make_stream() * 2, 4)
+    finally:
+        stop.set()
+        t.join()
+        ctrl.close_shadow()
+    assert not failures, failures[0]
+    snap = ctrl.metrics_registry.snapshot()
+    assert snap["shadow/items_enqueued"] == snap["shadow/items_drained"]
+    assert snap["shadow/depth_items"] == 0
+
+
+def test_fabric_metrics_consistent_under_threaded_stress():
+    """3 replica workers serving submitted microbatches concurrently, a
+    sampler thread hammering ``fabric.metrics()`` the whole time: no
+    torn snapshots, counters monotone, per-replica invariants hold."""
+    fab = build_fabric(3, weak_known=set(), shadow_mode="async",
+                       shadow_flush_every=2)
+    stop, failures, prev = threading.Event(), [], {}
+
+    def sampler():
+        while not stop.is_set():
+            try:
+                m = fab.metrics()
+                for rep in m["replicas"]:
+                    assert 0 <= rep["items_drained"] <= rep["items_enqueued"]
+                    assert rep["commit_epoch_lag"] >= 0
+                    assert rep["shadow_pending"] >= 0
+                _check_snapshot(m["registry"], prev)
+                assert m["commit"]["epoch"] >= prev.get("__epoch", 0)
+                prev["__epoch"] = m["commit"]["epoch"]
+            except AssertionError as e:
+                failures.append(e)
+                return
+            time.sleep(0.0005)
+
+    t = threading.Thread(target=sampler)
+    t.start()
+    try:
+        outs = serve_fabric(fab, make_stream() * 3, 4, submit=True)
+    finally:
+        stop.set()
+        t.join()
+    assert not failures, failures[0]
+    assert len(outs) == len(make_stream()) * 3
+    m = fab.metrics()
+    learn = m["replicas"][0]
+    assert learn["items_enqueued"] == learn["items_drained"]
+    assert learn["shadow_pending"] == 0
+    fab.close_shadow()
+
+
+# ---------------------------------------------------------------------------
+# Fabric metrics contract
+# ---------------------------------------------------------------------------
+
+
+def test_fabric_metrics_shape():
+    """``fabric.metrics()`` carries the observability surface the serve
+    CLI and the bench read: per-replica queue depth / staleness / drain
+    counters / commit lag, commit progress, engine + breaker counters,
+    supervision events, and the raw registry (drain-cost histograms)."""
+    fab = build_fabric(2, weak_known={0, 1})
+    outs = serve_fabric(fab, make_stream(), 4, submit=True)
+    assert all(o.case != "shadow_pending" for o in outs)
+    m = fab.metrics()
+    assert len(m["replicas"]) == 2
+    for rep in m["replicas"]:
+        for k in ("replica", "health", "queue_depth", "shadow_pending",
+                  "shadow_staleness_batches", "shadow_staleness_logical",
+                  "items_enqueued", "items_drained", "items_requeued",
+                  "drain_failures", "drains", "commit_epoch_lag"):
+            assert k in rep, k
+        assert rep["queue_depth"] == 0        # all tickets resolved
+        assert rep["shadow_pending"] == 0     # post-flush
+        assert rep["commit_epoch_lag"] == 0   # atomic in-process broadcast
+    assert m["commit"]["epoch"] >= 1
+    assert m["commit"]["entries_applied"] >= 1
+    # FakeTier has no ServingEngine stats — the slots still exist (real
+    # engines fill them with calls/jit_hits/jit_misses, see test_serving)
+    assert set(m["engines"]) == {"weak", "strong"}
+    assert m["supervision"]["deaths"] == 0
+    assert m["supervision"]["active_replicas"] == 2
+    # the learn replica's drain histograms live in the registry under
+    # its per-replica prefix
+    assert m["registry"]["replica0/shadow/drain_items"]["count"] >= 1
+    assert m["registry"]["replica0/shadow/drain_staleness_batches"][
+        "count"] >= 1
+    fab.close_shadow()
+
+
+def test_fabric_adaptive_shares_one_policy_across_replicas():
+    """``shadow_mode="adaptive"`` on the fabric installs ONE policy that
+    every replica queue registers with — the global view the cadence
+    decision needs — and serving still resolves everything at the
+    barrier."""
+    fab = build_fabric(2, weak_known=set(), shadow_mode="adaptive",
+                       shadow_flush_every=0)
+    assert isinstance(fab.drain_policy, AdaptiveDrainPolicy)
+    for r in fab.replicas:
+        assert r.shadow.drain_policy is fab.drain_policy
+    assert fab.metrics()["drain_policy"] is not None
+    outs = serve_fabric(fab, make_stream(), 4, submit=True)
+    assert all(o.case != "shadow_pending" for o in outs)
+    m = fab.metrics()
+    assert m["drain_policy"]["decisions"] > 0
+    learn = m["replicas"][0]
+    assert learn["items_enqueued"] == learn["items_drained"]
+    fab.close_shadow()

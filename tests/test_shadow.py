@@ -215,18 +215,99 @@ def test_shadow_config_validation():
 
 def test_async_drainer_error_surfaces_at_barrier():
     """An exception on the drainer thread must not vanish: the next
-    flush barrier re-raises it on the caller."""
+    flush barrier re-raises it on the caller — and the failed epoch's
+    items stay queued (not lost), so once the fault clears a retry
+    barrier resolves every pending Outcome."""
     ctrl, _ = build(MicrobatchRAR, weak_known=set(), shadow_mode="async",
                     shadow_flush_every=1)
 
     def boom(items):
         raise RuntimeError("drain failed")
 
+    real_runner = ctrl.shadow.runner
     ctrl.shadow.runner = boom
-    ctrl.process_batch([prompt(2, 1)], [greq(2)], embs=skill_emb(2)[None])
+    out = ctrl.process_batch([prompt(2, 1)], [greq(2)],
+                             embs=skill_emb(2)[None])[0]
     with pytest.raises(RuntimeError):
         ctrl.flush_shadow()
+    # the failed epoch was re-queued, not dropped
+    assert out.case == PENDING
+    assert ctrl.shadow.items_requeued == 1
+    assert ctrl.shadow.items_drained == 0
+    # fault clears: the retry barrier drains the retained items
+    ctrl.shadow.runner = real_runner
+    ctrl.flush_shadow()
+    assert out.case != PENDING
+    assert ctrl.shadow.items_enqueued == ctrl.shadow.items_drained == 1
     ctrl.close_shadow()
+
+
+@pytest.mark.parametrize("mode", ["inline", "deferred", "async",
+                                  "adaptive"])
+def test_injected_drain_fault_does_not_lose_items(mode):
+    """The lost-failed-epoch bugfix, pinned at the issue's fault site: a
+    ``drain``-site fault kills the first drain epoch mid-flight. The
+    epoch's items must be re-queued (head, seq order) — after the fault
+    clears one ``flush_shadow()`` barrier resolves every
+    ``shadow_pending`` Outcome, ``items_enqueued == items_drained``
+    holds, and the shadow pass's store write lands exactly once."""
+    from repro.serving.faults import FaultPlan
+    plan = FaultPlan([FaultPlan.drain_error(at=1)])
+    ctrl = MicrobatchRAR(
+        FakeTier(known=set(), name="weak"),
+        FakeTier(known=range(10_000), can_guide=True, name="strong"),
+        lambda p: None, lambda e, k: False,
+        make_cfg(shadow_mode=mode, shadow_flush_every=1),
+        fault_plan=plan)
+    with pytest.raises(RuntimeError):
+        # inline/deferred/adaptive drain on the serve call and raise
+        # there; async raises at the barrier
+        ctrl.process_batch([prompt(2, 1)], [greq(2)],
+                           embs=skill_emb(2)[None])
+        ctrl.flush_shadow()
+    # the failed epoch is retained, provisional outcome unresolved
+    assert [it.seq for it in ctrl.shadow._items] == [1]
+    out = ctrl.shadow._items[0].outcome
+    assert out.case == PENDING
+    assert ctrl.shadow.items_requeued == 1
+    assert ctrl.shadow.items_drained == 0
+    assert ctrl.shadow.drain_failures == 1
+    assert ctrl.shadow.buffer.pending == 0      # no partial staging left
+    # fault cleared (at=1 is one-shot): the next barrier retries
+    ctrl.flush_shadow()
+    assert out.case == "case2" and out.guide_source == "fresh"
+    assert ctrl.shadow.items_enqueued == ctrl.shadow.items_drained == 1
+    assert not ctrl.shadow._items
+    assert ctrl.memory.size_fast == 1           # landed exactly once
+    assert ctrl.guides_generated == 1           # counters not doubled
+    ctrl.close_shadow()
+
+
+def test_requeued_epoch_retries_ahead_of_new_items():
+    """Items from a failed epoch retry AT THE HEAD: a batch enqueued
+    after the failure drains behind them, preserving global seq order
+    across the retry."""
+    drained: list[int] = []
+
+    class Flaky:
+        fail = True
+
+        def __call__(self, items):
+            if self.fail:
+                self.fail = False
+                raise RuntimeError("transient")
+            drained.extend(it.seq for it in items)
+
+    q = ShadowQueue(Flaky(), mode="deferred", flush_every=0)
+    mk = lambda seq: type("It", (), {"seq": seq, "now": seq})()
+    q.submit([mk(1), mk(2)])
+    with pytest.raises(RuntimeError):
+        q.flush()
+    q.submit([mk(3)])
+    q.flush()
+    assert drained == [1, 2, 3]
+    assert q.items_enqueued == q.items_drained == 3
+    assert q.items_requeued == 2 and q.drain_failures == 1
 
 
 # ---------------------------------------------------------------------------
