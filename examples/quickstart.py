@@ -41,6 +41,6 @@ for repeat in range(2):
 
 print(f"\nweak-FM calls: {system.weak.calls}, strong-FM calls: "
       f"{system.strong.calls}")
-print(f"guide memory entries: {rar.memory.size}")
+print(f"guide memory entries: {rar.memory.size_fast}")
 print("Pass 2 should show memory_guide / memory_skill cases with zero "
       "strong calls — that's RAR's continual cost reduction.")

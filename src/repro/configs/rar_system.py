@@ -76,6 +76,8 @@ def make_rar_config(*, sim_threshold: float = 0.6,
                     shadow_mode: str = "inline",
                     shadow_flush_every: int | None = None,
                     shadow_dedup_sim: float | None = None,
+                    retrieval_clusters: int = 0,
+                    retrieval_probes: int = 4,
                     **kw) -> RARConfig:
     """The system's RARConfig defaults in one place (thresholds calibrated
     to ``EMBEDDER``, see :class:`repro.core.rar.RARConfig`). The
@@ -87,7 +89,10 @@ def make_rar_config(*, sim_threshold: float = 0.6,
     deferred at barriers, or on a background drainer thread, with
     optional near-duplicate coalescing before each drain —
     :mod:`repro.core.shadow`); the flush cadence defaults to every batch
-    and coalescing defaults to off. Used by ``launch.serve`` and the
+    and coalescing defaults to off. ``retrieval_clusters``/
+    ``retrieval_probes`` turn on the two-level (IVF) retrieval plane —
+    0 clusters (the default) keeps the exact store scan
+    (:mod:`repro.core.memory_ivf`). Used by ``launch.serve`` and the
     experiment stages so the serving CLI and the evaluation suite can't
     drift apart."""
     if guide_sim_threshold is None:
@@ -102,4 +107,6 @@ def make_rar_config(*, sim_threshold: float = 0.6,
                      shadow_mode=shadow_mode,
                      shadow_flush_every=shadow_flush_every,
                      shadow_dedup_sim=shadow_dedup_sim,
+                     retrieval_clusters=retrieval_clusters,
+                     retrieval_probes=retrieval_probes,
                      **kw)

@@ -18,6 +18,37 @@ Architecture (decision core / serve plane / learn plane):
   sweep per FM tier through the bucketed serving engine);
   :class:`repro.serving.fabric.ServingFabric` replicates it (N
   controllers behind a round-robin dispatcher, thread-per-replica).
+* **Two-level retrieval plane** (:mod:`repro.core.memory_ivf`,
+  default-off) — sub-linear memory reads for large stores.
+  ``RARConfig.retrieval_clusters > 0`` wraps the store (single-device or
+  sharded, wrapped exactly once even when shared across fabric replicas)
+  in an :class:`~repro.core.memory_ivf.IVFMemory`: level 1 routes the
+  query against P online-k-means centroids (the
+  :mod:`repro.kernels.memory_ivf` kernel; centroid plane in the same
+  zero-copy padded layout as the store), level 2 scans only the probed
+  clusters' member rows through the **existing** top-k kernel, with the
+  candidates slot-sorted so both levels and the scan share THE
+  (sim desc, row asc) total order. Centroid maintenance is incremental
+  on the learn path (round-robin seeding, minibatch-k-means assignment,
+  running-mean update, FIFO bucket eviction with stale-entry
+  neutralization on the query path); ``reindex()`` rebuilds from the
+  store at attach/grow time. Cluster c lives with shard ``c % S`` — the
+  per-shard centroid-subset routes merge bit-identically into the
+  global route. ``retrieval_probes`` is the recall-vs-latency knob
+  (CLI ``--retrieval-clusters``/``--retrieval-probes``): probing all
+  clusters reproduces the exact scan's valid entries, and the exhaustive
+  scan stays both the default (``retrieval_clusters = 0`` constructs no
+  wrapper — byte-identical serving, pinned in
+  ``tests/test_memory_ivf.py``) and the recall oracle
+  (``benchmarks/memory_bench.py`` measures recall@k against it).
+  Optional host-offload tiering keeps cold clusters' rows in a host
+  mirror (bit-identical results, one extra sync per query) — the HBM
+  tier model for stores larger than device memory. Capacity grow
+  (:func:`repro.core.memory.grow_memory` /
+  :meth:`~repro.core.memory.CommitStream.grow`) re-lays-out the ring in
+  place — unwrapped histories keep slots/eviction guards exactly,
+  wrapped histories linearize oldest-first with a slot remap — and the
+  IVF plane re-buckets against the new layout.
 * **Learn plane** — shadow inference + memory commits, scheduled off the
   serve path by the :class:`repro.core.shadow.ShadowQueue`
   (inline/deferred/async drains, optional near-duplicate coalescing) and

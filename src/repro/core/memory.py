@@ -91,17 +91,32 @@ class MemoryState:
         """(C,) bool view decoded from the mask bit plane."""
         return (self.mask[:self.capacity, 0] & MASK_GUIDE) != 0
 
-    @property
-    def size(self) -> int:
-        """Debugging-only: blocking device sync (full reduction over
-        ``valid``). Hot paths must use :attr:`size_fast` instead."""
+    def debug_size(self) -> int:
+        """Debugging-only occupancy: a *blocking device sync* (full
+        reduction over ``valid``). Deliberately a method, not a property,
+        so the sync is loud at call sites — hot paths must use
+        :attr:`size_fast` or the commit-stream counters instead.
+
+        Query-path sync audit (the PR-4 host-counter contract): the serve
+        path performs exactly **one** device transfer per controller
+        phase — the packed :meth:`QueryResult.device_get` /
+        :meth:`TopKResult.device_get`. Every other host-visible number is
+        a host counter: occupancy via ``CommitStream.commits`` +
+        ``RAR._ptr_base`` (one ``int(ptr)`` at construction, never per
+        request), epoch progress via ``CommitBuffer.epoch``/
+        ``entries_applied``. The remaining ``device_get(state.ptr)`` in
+        :meth:`CommitBuffer.apply_ops` sits on the drain path (per epoch,
+        off the serve sweep), and :attr:`size_fast` transfers one scalar
+        for shutdown/CLI reporting only."""
         return int(jnp.sum(self.valid))
 
     @property
     def size_fast(self) -> int:
         """O(1) occupancy from the ring pointer: entries are only ever
         added (``valid`` is monotone), so size == min(ptr, capacity).
-        Transfers one scalar instead of reducing the (C,) mask."""
+        Transfers one scalar instead of reducing the (C,) mask — still a
+        device sync; keep it off per-request paths (see
+        :meth:`debug_size` for the full audit)."""
         return min(int(self.ptr), self.capacity)
 
 
@@ -282,6 +297,61 @@ def _query_topk_batch_jit(state: MemoryState, embs: jax.Array, k: int,
     sims, idx = kops.memory_topk_batch_padded(state.emb, embs, state.mask,
                                               k, required_bits(guides_only))
     return TopKResult(sim=sims, meta=pack_meta(state, idx))
+
+
+def grow_memory(state: MemoryState, new_capacity: int
+                ) -> tuple[MemoryState, "jax.Array"]:
+    """Grow-in-place capacity re-layout: returns ``(grown_state, remap)``
+    where ``remap[s]`` is the new logical slot of old slot ``s``.
+
+    Two regimes, chosen by whether the ring has wrapped:
+
+    * **Not yet wrapped** (``ptr <= C``) — rows copy straight across:
+      slot indices, the ring pointer, and therefore every outstanding
+      ``ptr_snapshot`` eviction guard in :class:`CommitBuffer` stay
+      *exactly* valid (the guard's modulo moves from C to newC, but with
+      ``snap <= ptr <= C`` the covered-interval test is unchanged for
+      every slot). ``remap`` is the identity.
+    * **Wrapped** (``ptr > C``) — the ring is linearized oldest-first
+      (old slot ``ptr % C`` becomes row 0) and the new pointer is C, so
+      future inserts land after the newest entry and FIFO eviction order
+      is preserved. Old slot indices *move* (by ``remap``), so callers
+      must quiesce first: :meth:`CommitStream.grow` refuses while ops
+      are staged, and rebases each subscribed view's ``_ptr_base`` so
+      post-grow pointer snapshots are exact. Flag ops captured before a
+      wrapped grow are the caller's to remap (or drop — the guard's
+      snapshot clamp makes a stale op at worst a conservatively dropped
+      flag update, never a corrupted entry).
+
+    Runs off the serve path (one ``device_get`` of the scalar pointer);
+    the copy is O(C·E) once, like ``to_padded_layout``.
+    """
+    C = state.capacity
+    if new_capacity < C:
+        raise ValueError(f"cannot shrink memory: {new_capacity} < {C}")
+    G = state.guide.shape[1]
+    ptr = int(jax.device_get(state.ptr))
+    fresh = init_memory(MemoryConfig(capacity=new_capacity,
+                                     embed_dim=state.emb.shape[1],
+                                     guide_len=G))
+    if ptr <= C:
+        order = jnp.arange(C, dtype=jnp.int32)
+        new_ptr = state.ptr
+        remap = jnp.arange(C, dtype=jnp.int32)
+    else:
+        shift = ptr % C
+        order = (jnp.arange(C, dtype=jnp.int32) + shift) % C
+        new_ptr = jnp.asarray(C, jnp.int32)
+        remap = (jnp.arange(C, dtype=jnp.int32) - shift) % C
+    grown = MemoryState(
+        emb=fresh.emb.at[:C].set(state.emb[order]),
+        mask=fresh.mask.at[:C].set(state.mask[order]),
+        guide=fresh.guide.at[:C].set(state.guide[order]),
+        hard=fresh.hard.at[:C].set(state.hard[order]),
+        added_at=fresh.added_at.at[:C].set(state.added_at[order]),
+        ptr=new_ptr,
+    )
+    return grown, remap
 
 
 @jax.jit
@@ -865,6 +935,31 @@ class CommitStream:
             if self.journal is not None:
                 self.journal.maybe_snapshot(state, self.buffer, manifest)
         return state
+
+    def grow(self, state, new_capacity: int):
+        """Grow the stream's store in place (capacity re-layout) and
+        re-broadcast it to every subscribed view atomically. Refuses
+        while commit ops are staged — a wrapped-ring grow moves slot
+        indices, so staged flag ops (which carry old indices) must drain
+        first; see :func:`grow_memory`. Each view's ``_ptr_base`` is
+        rebased to the grown pointer so the serve path's host-side
+        ``ptr_snapshot`` arithmetic (``_ptr_base + commits``) stays exact
+        across the grow. Returns ``(new_state, remap)``."""
+        with self.lock:
+            if self.buffer.pending:
+                raise RuntimeError(
+                    f"grow with {self.buffer.pending} staged commit ops; "
+                    f"drain (apply) the epoch first")
+            if isinstance(state, MemoryState):
+                state, remap = grow_memory(state, new_capacity)
+            else:
+                state, remap = state.grow(new_capacity)
+            new_ptr = int(jax.device_get(state.ptr))
+            for v in self._views:
+                v.memory = state
+                if hasattr(v, "_ptr_base"):
+                    v._ptr_base = new_ptr - self.commits
+            return state, remap
 
     def checkpoint(self) -> None:
         """Journal a manifest-only record at the current epoch — called

@@ -344,8 +344,11 @@ class ShardedMemory:
         self.added_at = self.added_at.at[index].set(now)
 
     # -- debug / parity -------------------------------------------------
-    @property
-    def size(self) -> int:
+    def debug_size(self) -> int:
+        """Debugging-only occupancy — a blocking cross-shard reduction
+        (device sync); a method, not a property, so the sync is loud at
+        call sites. Hot paths use :attr:`size_fast` / host counters (see
+        :meth:`repro.core.memory.MemoryState.debug_size`)."""
         return int(jnp.sum((jnp.asarray(self.mask)[:, 0] & MASK_VALID)
                            != 0))
 

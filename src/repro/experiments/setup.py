@@ -74,7 +74,7 @@ def _train_lm(cfg, batch_fn, steps: int, batch_size: int, seed: int,
     opt_state = init_opt_state(params)
     step_fn = jax.jit(make_train_step(cfg, opt_cfg))
     rng = np.random.default_rng(seed)
-    t0 = time.time()
+    t0 = time.perf_counter()
     for i in range(steps):
         batch = batch_fn(rng, batch_size)
         batch = {k: jnp.asarray(v) for k, v in batch.items()}
@@ -83,7 +83,7 @@ def _train_lm(cfg, batch_fn, steps: int, batch_size: int, seed: int,
             print(f"  [{cfg.name}] step {i + 1}/{steps} "
                   f"loss={float(metrics['loss']):.4f} "
                   f"acc={float(metrics['accuracy']):.3f} "
-                  f"({time.time() - t0:.0f}s)")
+                  f"({time.perf_counter() - t0:.0f}s)")
     return params
 
 

@@ -275,7 +275,7 @@ def run_rar_experiment(system: TrainedSystem, pool: list[Sample], *,
     order = rng.permutation(len(pool))
 
     served = 0
-    t_serve = time.time()
+    t_serve = time.perf_counter()
 
     def progress(batch: int) -> None:
         """Throttled serve-loop reporting. The occupancy figure comes
@@ -289,7 +289,7 @@ def run_rar_experiment(system: TrainedSystem, pool: list[Sample], *,
         if not progress_every:
             return
         if served // progress_every > before // progress_every:
-            dt = time.time() - t_serve
+            dt = time.perf_counter() - t_serve
             print(f"      [{served}/{n_stages * len(pool)}] "
                   f"{1e3 * dt / served:.1f} ms/request, "
                   f"memory {rar.memory_occupancy}/"

@@ -1,0 +1,132 @@
+"""Pallas TPU kernel: centroid routing for the IVF two-level memory plane.
+
+Level 1 of the sub-linear retrieval path (``core.memory_ivf``): score the
+query against the P cluster centroids and pick the top-P' clusters to
+probe. Level 2 then gathers only the probed clusters' member rows and
+reuses the existing zero-copy top-k kernel (``kernels.memory_topk``) over
+the gathered buffer — the store pass shrinks from O(C) to
+O(P + P'·bucket) rows.
+
+Centroid-plane layout — the same zero-copy contract as the store
+----------------------------------------------------------------
+The centroid plane mirrors the store's padded kernel layout exactly:
+
+* ``cent`` is (Pp, Ep) f32 — one L2-normalized centroid per row, rows
+  padded to a multiple of 8 (f32 sublane tile) and lanes to a multiple of
+  128; padding/unseeded rows are zero.
+* ``cmask`` is a (Pp, 1) int32 bit plane: bit 0 (:data:`MASK_VALID`) set
+  iff the cluster has been seeded. Padding rows are 0, never routed to.
+
+``core.memory_ivf.IVFMemory`` maintains this plane persistently
+(incremental online-k-means updates scatter single centroid rows), so the
+route never re-pads anything per query.
+
+The routing selection is THE top-k total order — (score descending,
+centroid row ascending), via the shared :func:`_select_topk` rounds — so
+a route over per-shard centroid *subsets* merged under the same order is
+bit-identical to the direct global route (``core.memory_ivf`` composes
+cluster→shard placement this way, pinned in ``tests/test_memory_ivf.py``).
+Sentinel semantics match the store kernels: unseeded/padding centroids
+enter at -2.0, unfilled accumulator slots at (-3.0, 2**30) — so asking
+for more probes than seeded clusters degrades exactly like an
+under-populated store view.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.memory_topk import (DEFAULT_BLOCK_C, MASK_VALID,
+                                       _pick_block, _round_up, _select_topk)
+
+
+def _route_batch_kernel(q_ref, cent_ref, cmask_ref, score_ref, cid_ref, *,
+                        block_p: int, n_probe: int, required: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        score_ref[...] = jnp.full(score_ref.shape, -3.0, jnp.float32)
+        cid_ref[...] = jnp.full(cid_ref.shape, 2 ** 30, jnp.int32)
+
+    block = cent_ref[...].astype(jnp.float32)         # (BP, Ep)
+    qs = q_ref[...].astype(jnp.float32)               # (B, Ep)
+    scores = jax.lax.dot_general(block, qs, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    seeded = (cmask_ref[...] & required) == required  # (BP, 1)
+    scores = jnp.where(seeded, scores, -2.0)
+    cids = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0) + i * block_p
+
+    # merge the block into the (n_probe, B) running-best accumulator with
+    # the shared (score desc, row asc) selection rounds
+    cand_s = jnp.concatenate([score_ref[...], scores], axis=0)
+    cand_c = jnp.concatenate([cid_ref[...], cids], axis=0)
+    new_s, new_c = _select_topk(cand_s, cand_c, n_probe)
+    score_ref[...] = new_s
+    cid_ref[...] = new_c
+
+
+@functools.partial(jax.jit, static_argnames=("n_probe", "required",
+                                             "block_p", "interpret"))
+def ivf_route_batch_padded_pallas(cent: jax.Array, qs: jax.Array,
+                                  cmask: jax.Array, *, n_probe: int,
+                                  required: int = MASK_VALID,
+                                  block_p: int = DEFAULT_BLOCK_C,
+                                  interpret: bool = False
+                                  ) -> tuple[jax.Array, jax.Array]:
+    """cent: (Pp, Ep) padded centroid plane; qs: (B, E); cmask: (Pp, 1)
+    int32 bit plane → (scores (B, n_probe), cids (B, n_probe)) sorted by
+    (score desc, centroid row asc). Zero-copy: only the query block is
+    padded. One centroid-plane pass, (n_probe, B) VMEM accumulator — the
+    exact structure of ``memory_topk_batch_padded_pallas`` with the store
+    swapped for the centroid plane."""
+    Pp, Ep = cent.shape
+    B, E = qs.shape
+    if n_probe < 1:
+        raise ValueError(f"n_probe must be >= 1, got {n_probe}")
+    bp = _pick_block(Pp, block_p)
+    if n_probe > bp:
+        raise ValueError(f"n_probe={n_probe} exceeds the kernel block of "
+                         f"{bp} centroid rows; raise block_p")
+    Bp = _round_up(B, 128)
+    qp = jnp.zeros((Bp, Ep), jnp.float32).at[:B, :E].set(
+        qs.astype(jnp.float32))
+
+    grid = (Pp // bp,)
+    scores, cids = pl.pallas_call(
+        functools.partial(_route_batch_kernel, block_p=bp, n_probe=n_probe,
+                          required=required),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((Bp, Ep), lambda i: (0, 0)),
+            pl.BlockSpec((bp, Ep), lambda i: (i, 0)),
+            pl.BlockSpec((bp, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n_probe, Bp), lambda i: (0, 0)),
+            pl.BlockSpec((n_probe, Bp), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_probe, Bp), jnp.float32),
+            jax.ShapeDtypeStruct((n_probe, Bp), jnp.int32),
+        ],
+        interpret=interpret,
+    )(qp, cent, cmask)
+    return scores[:, :B].T, cids[:, :B].T
+
+
+def ivf_route_padded_pallas(cent: jax.Array, q: jax.Array, cmask: jax.Array,
+                            *, n_probe: int, required: int = MASK_VALID,
+                            block_p: int = DEFAULT_BLOCK_C,
+                            interpret: bool = False
+                            ) -> tuple[jax.Array, jax.Array]:
+    """Single-query route: cent (Pp, Ep); q (E,); cmask (Pp, 1) →
+    (scores (n_probe,), cids (n_probe,)). Shares the batch kernel body
+    (and its jit cache), like the store top-k single wrapper."""
+    scores, cids = ivf_route_batch_padded_pallas(
+        cent, q[None, :], cmask, n_probe=n_probe, required=required,
+        block_p=block_p, interpret=interpret)
+    return scores[0], cids[0]

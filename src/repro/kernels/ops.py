@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.memory_ivf import (ivf_route_batch_padded_pallas,
+                                      ivf_route_padded_pallas)
 from repro.kernels.memory_topk import (MASK_VALID,
                                        memory_top1_batch_padded_pallas,
                                        memory_top1_batch_pallas,
@@ -136,6 +138,35 @@ def memory_topk_batch_padded(mem: jax.Array, qs: jax.Array, mask: jax.Array,
     return memory_topk_batch_padded_pallas(mem, qs, mask, k=k,
                                            required=required,
                                            interpret=(impl == "interpret"))
+
+
+def ivf_route_padded(cent: jax.Array, q: jax.Array, cmask: jax.Array,
+                     n_probe: int, required: int = MASK_VALID,
+                     impl: str | None = None
+                     ) -> tuple[jax.Array, jax.Array]:
+    """Level-1 centroid route over the padded centroid plane:
+    (scores (n_probe,), cids (n_probe,)) sorted by (score desc, row asc).
+    The IVF dispatch path (``core.memory_ivf``)."""
+    impl = impl or _default_impl()
+    if impl == "ref":
+        return ref.ivf_route_padded(cent, q, cmask, n_probe, required)
+    return ivf_route_padded_pallas(cent, q, cmask, n_probe=n_probe,
+                                   required=required,
+                                   interpret=(impl == "interpret"))
+
+
+def ivf_route_batch_padded(cent: jax.Array, qs: jax.Array, cmask: jax.Array,
+                           n_probe: int, required: int = MASK_VALID,
+                           impl: str | None = None
+                           ) -> tuple[jax.Array, jax.Array]:
+    """Multi-query level-1 centroid route: (scores (B, n_probe),
+    cids (B, n_probe))."""
+    impl = impl or _default_impl()
+    if impl == "ref":
+        return ref.ivf_route_batch_padded(cent, qs, cmask, n_probe, required)
+    return ivf_route_batch_padded_pallas(cent, qs, cmask, n_probe=n_probe,
+                                         required=required,
+                                         interpret=(impl == "interpret"))
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, scale=None,

@@ -143,6 +143,31 @@ def memory_topk_batch_padded(mem: jax.Array, qs: jax.Array, mask: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# ivf_route: centroid routing for the two-level (IVF) retrieval plane
+# ---------------------------------------------------------------------------
+
+
+def ivf_route_padded(cent: jax.Array, q: jax.Array, cmask: jax.Array,
+                     n_probe: int, required: int = 1
+                     ) -> tuple[jax.Array, jax.Array]:
+    """Centroid-routing oracle: cent (Pp, Ep) padded centroid plane;
+    q (E,); cmask (Pp, 1) int32 bit plane → (scores (n_probe,),
+    cids (n_probe,)) sorted by (score desc, centroid row asc). The
+    routing selection is the *same* top-k total order as the store scan
+    (:func:`_topk_select`), which is what makes per-shard centroid-subset
+    routes merge bit-identically into the global route."""
+    return memory_topk_padded(cent, q, cmask, n_probe, required)
+
+
+def ivf_route_batch_padded(cent: jax.Array, qs: jax.Array, cmask: jax.Array,
+                           n_probe: int, required: int = 1
+                           ) -> tuple[jax.Array, jax.Array]:
+    """Multi-query centroid-routing oracle: qs (B, E) →
+    (scores (B, n_probe), cids (B, n_probe))."""
+    return memory_topk_batch_padded(cent, qs, cmask, n_probe, required)
+
+
+# ---------------------------------------------------------------------------
 # flash attention (causal, optional sliding window, GQA)
 # ---------------------------------------------------------------------------
 

@@ -131,7 +131,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool,
         return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
                 "variant": variant, "status": "skipped",
                 "reason": "architectural (see DESIGN.md §7)"}
-    t0 = time.time()
+    t0 = time.perf_counter()
     try:
         compiled, lowered, spec, mesh = lower_pair(
             arch, shape_name, multi_pod=multi_pod, overrides=overrides)
@@ -140,7 +140,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool,
                 "variant": variant,
                 "status": "FAILED", "error": f"{type(e).__name__}: {e}",
                 "traceback": traceback.format_exc()[-2000:]}
-    compile_s = time.time() - t0
+    compile_s = time.perf_counter() - t0
 
     mem = compiled.memory_analysis()
     roof = analyze(compiled)

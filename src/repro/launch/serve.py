@@ -80,6 +80,17 @@ def main() -> None:
     ap.add_argument("--max-guides", type=int, default=None,
                     help="retrieved guides spliced into the weak FM's "
                          "prompt (default: --retrieval-k)")
+    ap.add_argument("--retrieval-clusters", type=int, default=0,
+                    help="two-level (IVF) retrieval plane: cluster the "
+                         "memory into this many online-k-means centroids "
+                         "and scan only the probed clusters' rows per "
+                         "query (sub-linear in capacity). 0 (default) = "
+                         "the exact full scan")
+    ap.add_argument("--retrieval-probes", type=int, default=4,
+                    help="clusters probed per query when "
+                         "--retrieval-clusters is on: the recall-vs-"
+                         "latency knob (probing all clusters reproduces "
+                         "the exact scan)")
     ap.add_argument("--shadow-mode", default="inline",
                     choices=["inline", "deferred", "async", "adaptive"],
                     help="where shadow inference (weak probes, guide "
@@ -200,6 +211,8 @@ def main() -> None:
     cfg = make_rar_config(sim_threshold=args.sim_threshold,
                           retrieval_k=args.retrieval_k,
                           max_guides=args.max_guides,
+                          retrieval_clusters=args.retrieval_clusters,
+                          retrieval_probes=args.retrieval_probes,
                           shadow_mode=args.shadow_mode,
                           shadow_flush_every=args.shadow_flush_every,
                           shadow_dedup_sim=args.shadow_dedup_sim,
@@ -213,7 +226,9 @@ def main() -> None:
                           max_redispatch=args.max_redispatch,
                           journal_path=args.journal_path,
                           snapshot_every=args.snapshot_every)
-    t0 = time.time()
+    # perf_counter, not time.time(): wall-clock steps (NTP slew, DST)
+    # must not corrupt the reported interval
+    t0 = time.perf_counter()
     results, rar = run_rar_experiment(
         system, pool, n_stages=args.stages, rar_cfg=cfg,
         router_kind=args.router, microbatch=args.microbatch,
@@ -225,7 +240,7 @@ def main() -> None:
     # nothing is pending; metrics() stays valid on a closed fabric (all
     # counters are plain host-side state)
     final_metrics = rar.metrics() if hasattr(rar, "metrics") else None
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
 
     total = args.stages * len(pool)
     aligned = sum(r.aligned for r in results)

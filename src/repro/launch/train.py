@@ -58,7 +58,7 @@ def train(arch: str, *, smoke: bool, steps: int, batch: int, seq: int,
     step_fn = jax.jit(make_train_step(cfg, opt_cfg), donate_argnums=(0, 1))
 
     rng = np.random.default_rng(0)
-    t0 = time.time()
+    t0 = time.perf_counter()
     metrics = {}
     for i in range(steps):
         b = synthetic_lm_batch(rng, cfg.vocab_size, batch, seq, cfg)
@@ -68,7 +68,7 @@ def train(arch: str, *, smoke: bool, steps: int, batch: int, seq: int,
             print(f"  step {i + 1}/{steps} loss={float(metrics['loss']):.4f}"
                   f" acc={float(metrics['accuracy']):.3f}"
                   f" lr={float(metrics['lr']):.2e}"
-                  f" ({(time.time() - t0) / (i + 1) * 1e3:.0f} ms/step)")
+                  f" ({(time.perf_counter() - t0) / (i + 1) * 1e3:.0f} ms/step)")
     if ckpt:
         save_checkpoint(ckpt, {"params": params, "cfg_name": cfg.name})
         print(f"[train] checkpoint → {ckpt}")

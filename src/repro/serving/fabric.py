@@ -236,6 +236,13 @@ class ServingFabric:
             store = recovered
         else:
             store = mem.init_memory(cfg.memory)
+        # two-level retrieval: wrap the shared store in the IVF plane
+        # ONCE, before the replicas are built — every replica's
+        # controller then shares the same index (``wrap_store`` is
+        # idempotent, so the per-replica RAR wrap is a no-op)
+        if cfg.retrieval_clusters:
+            from repro.core.memory_ivf import wrap_store
+            store = wrap_store(store, cfg)
         # construction args kept (post-ResilientTier-wrap) so the
         # autoscaler can spawn additional replicas sharing the exact
         # same tiers/breaker/commit stream

@@ -419,11 +419,18 @@ class ProcessServingFabric(ServingFabric):
                                        fault_plan=self.fault_plan,
                                        end="parent", replica=index)
         with self.commit_stream.lock:
+            # ship the raw backing store across the process boundary —
+            # an IVF-wrapped store unwraps here and the worker's
+            # controller re-wraps (and re-indexes) from its cfg
+            from repro.core.memory_ivf import IVFMemory
+            snap = self.learn.memory
+            if isinstance(snap, IVFMemory):
+                snap = snap.store
             init = {
                 "index": index,
                 "factory": self.replica_factory,
                 "cfg": self._worker_cfg,
-                "store": jax.device_get(self.learn.memory),
+                "store": jax.device_get(snap),
                 "epoch": self.commit_stream.buffer.epoch,
                 "entries": self.commit_stream.buffer.entries_applied,
                 "fault_plan": fault_plan,

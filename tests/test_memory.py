@@ -127,7 +127,7 @@ def test_add_batch_ring_wraparound(rng):
     np.testing.assert_array_equal(np.asarray(state.added_at)[slots], now)
     assert int(state.ptr) == CFG.capacity + 3
     assert state.size_fast == CFG.capacity       # full ring
-    assert state.size == CFG.capacity            # slow path agrees
+    assert state.debug_size() == CFG.capacity    # slow path agrees
 
 
 def test_add_batch_rejects_overflow(rng):
@@ -141,12 +141,12 @@ def test_add_batch_rejects_overflow(rng):
 def test_size_fast_matches_size(rng):
     state = mem.init_memory(CFG)
     zero_g = jnp.zeros(4, jnp.int32)
-    assert state.size_fast == state.size == 0
+    assert state.size_fast == state.debug_size() == 0
     for i in range(CFG.capacity + 5):
         state = mem.add(state, jnp.asarray(rand_unit(rng)), zero_g,
                         jnp.asarray(False), jnp.asarray(False),
                         jnp.int32(i))
-        assert state.size_fast == state.size
+        assert state.size_fast == state.debug_size()
 
 
 def test_query_batch_matches_query(rng):

@@ -87,8 +87,8 @@ def test_rar_beats_weak_baselines(system, pool, rar_run):
 
 def test_guide_memory_populates(rar_run):
     _, rar = rar_run
-    assert rar.memory.size > 0
-    assert rar.memory.size_fast == rar.memory.size
+    assert rar.memory.debug_size() > 0
+    assert rar.memory.size_fast == rar.memory.debug_size()
     assert bool(np.asarray(rar.memory.has_guide)[
         np.asarray(rar.memory.valid)].any())
 
