@@ -46,6 +46,17 @@ multiple passes so the memory warms up) through:
   which requests see a warm memory — that staleness/cost trade is the
   thing being measured, and
 
+* the 4-replica fabric under **open-loop admission** (``openloop_*``
+  rows): the same per-stream sequences arrive on a seeded Poisson or
+  bursty clock at two offered loads (anchored to the machine's own
+  closed-loop r4 rate) and the :class:`ContinuousBatcher` forms
+  microbatches under the size-or-deadline close rule. Each row reports
+  queueing-delay and end-to-end p50/p99 (aggregate and per stream) and
+  the close-reason breakdown; strong calls are asserted identical to
+  the closed-loop fabric run (formation changes, routing doesn't), and
+  a size-only-close baseline at the same offered load shows the SLO
+  deadline cutting the queueing p99, and
+
 * the 4-replica fabric under injected faults (``fabric_r4_faulty`` row):
   one replica crash early in the run (supervised restart + redispatch)
   plus a strong-tier error burst behind retries and a circuit breaker
@@ -96,6 +107,10 @@ PROC_MB = 16        # process-row dispatch quantum: a framed-pickle
 PROC_REPS = 3       # timeit-style min-of-N for the process row
 ADAPTIVE_CAP = 8    # adaptive row: hard staleness cap (batches) on top
 #                     of the cost model
+OPENLOOP_SLO_MS = 60.0  # open-loop rows: priority-0 queueing budget
+#                         for the size-or-deadline close rule
+OPENLOOP_SEED = 13      # arrival-clock seed (formation is a pure
+#                         function of the trace, so rows reproduce)
 
 
 def _make_tiers():
@@ -382,6 +397,91 @@ def _run_fabric_proc(n_replicas: int, prompts, greqs, embs,
     return calls[0], min(times), times, stats
 
 
+def _run_openloop(pattern: str, rate: float, weak, strong, prompts,
+                  greqs, embs, cfg: RARConfig, *, slo_ms,
+                  pace: bool = True) -> dict:
+    """One open-loop serve through a fresh 4-replica fabric.
+
+    The same per-stream request sequences as the closed-loop fabric
+    rows (stream j = pool indices ≡ j mod ``FABRIC_STREAMS``, repeated
+    ``N_PASSES`` times) arrive on a seeded Poisson or bursty clock at
+    ``rate`` requests/sec aggregate; the :class:`ContinuousBatcher`
+    forms microbatches under the size-or-deadline close rule
+    (``slo_ms=None`` disables the deadline — size-only close, the
+    baseline the SLO rule is measured against). Stream j pins to
+    replica ``j % 4`` exactly like the closed-loop rows, so per-stream
+    FIFO — and therefore routing and strong calls — match the
+    ``fabric_rN`` runs; only batch *formation* differs. ``pace=True``
+    replays arrivals in wall time so the end-to-end latencies are
+    honest; formation itself runs in virtual trace time, so the batch
+    partition (and routing) is independent of host speed. Returns the
+    row dict (latency percentiles from the fabric's own metrics
+    registry, aggregate and per stream)."""
+    from repro.serving.loadgen import bursty_trace, poisson_trace
+    from repro.serving.scheduler import serve_trace
+
+    fabric = ServingFabric(weak, strong, lambda p: None,
+                           lambda e, k: False, cfg, replicas=4)
+    n = len(prompts)
+    seqs = [[i for i in range(n) if i % FABRIC_STREAMS == j] * N_PASSES
+            for j in range(FABRIC_STREAMS)]
+    gen = poisson_trace if pattern == "poisson" else bursty_trace
+    trace = gen([len(s) for s in seqs], rate, seed=OPENLOOP_SEED,
+                streams=FABRIC_STREAMS)
+    cursors = [0] * FABRIC_STREAMS
+
+    def make_request(ev):
+        i = seqs[ev.stream][cursors[ev.stream]]
+        cursors[ev.stream] += 1
+        return prompts[i], greqs[i], i, embs[i]
+
+    t0 = time.perf_counter()
+    outcomes, batcher = serve_trace(
+        fabric, trace, make_request, microbatch=FABRIC_MB,
+        slo_ms=slo_ms, replica_fn=lambda s: s % 4, pace=pace)
+    fabric.flush_shadow()
+    dt = time.perf_counter() - t0
+    strong_calls = sum(o.strong_calls for o in outcomes)
+    reg = fabric.metrics_registry
+
+    def _summ(name):
+        s = reg.histogram(name).summary()
+        return {"count": s["count"], "mean": round(s["mean"], 3),
+                "p50": round(s["p50"], 3), "p99": round(s["p99"], 3)}
+
+    queue = _summ("sched/queue_delay_ms")
+    e2e = _summ("sched/e2e_ms")
+    per_stream = {
+        str(j): {"queue_delay_ms":
+                 _summ(f"sched/stream{j}/queue_delay_ms"),
+                 "e2e_ms": _summ(f"sched/stream{j}/e2e_ms")}
+        for j in range(FABRIC_STREAMS)}
+    stats = batcher.stats()
+    fabric.close_shadow()
+    total = sum(len(s) for s in seqs)
+    return {"replicas": 4,
+            "microbatch": FABRIC_MB,
+            "streams": FABRIC_STREAMS,
+            "pattern": pattern,
+            "offered_rps": round(rate, 2),
+            "slo_ms": slo_ms,
+            "requests": total,
+            "seconds": round(dt, 4),
+            "requests_per_sec": round(total / dt, 2),
+            "strong_calls": strong_calls,
+            "strong_call_ratio": round(strong_calls / total, 4),
+            "batches": stats["batches"],
+            "close_size": stats["closes"]["size"],
+            "close_slo": stats["closes"]["slo"],
+            "close_stream": stats["closes"]["stream"],
+            "close_flush": stats["closes"]["flush"],
+            "queue_delay_p50_ms": queue["p50"],
+            "queue_delay_p99_ms": queue["p99"],
+            "e2e_p50_ms": e2e["p50"],
+            "e2e_p99_ms": e2e["p99"],
+            "per_stream": per_stream}
+
+
 def _faulty_plan():
     """The ``fabric_r4_faulty`` schedule: replica 1 crashes on its 2nd
     microbatch, and the strong tier throws a 3-error burst that trips
@@ -535,6 +635,40 @@ def main() -> None:
               "probes_replayed": fstats["probes_replayed"],
               "faults_fired": fstats["faults"]["fired"]}
     rows.append({"mode": "fabric_r4_faulty", **faulty})
+
+    # open-loop rows: the same r4 workload arriving on a seeded clock
+    # instead of being submitted up front — the ContinuousBatcher forms
+    # microbatches under the size-or-deadline close rule and the rows
+    # report queueing-delay / end-to-end p50+p99 per stream. Offered
+    # loads are anchored to the machine's own closed-loop r4 rate so
+    # "lo" is comfortably below saturation and "hi" approaches it; the
+    # size-only row (slo_ms=None) at the lo rate is the baseline the
+    # SLO close rule's p99 is measured against.
+    r4_rps = fabric[4]["requests_per_sec"]
+    rate_lo = max(4.0, min(0.25 * r4_rps, 200.0))
+    rate_hi = max(8.0, min(0.9 * r4_rps, 800.0))
+    openloop = {}
+    for name, pattern, rate, slo in (
+            ("openloop_poisson_r4_lo", "poisson", rate_lo,
+             OPENLOOP_SLO_MS),
+            ("openloop_poisson_r4_hi", "poisson", rate_hi,
+             OPENLOOP_SLO_MS),
+            ("openloop_bursty_r4_lo", "bursty", rate_lo,
+             OPENLOOP_SLO_MS),
+            ("openloop_bursty_r4_hi", "bursty", rate_hi,
+             OPENLOOP_SLO_MS),
+            ("openloop_poisson_r4_lo_sizeonly", "poisson", rate_lo,
+             None)):
+        # unpaced warm run of the same trace: formation is a pure
+        # function of the trace, so this compiles exactly the
+        # partial-batch jit shapes the deadline close will produce —
+        # the paced run's percentiles then measure scheduling, not jit
+        _run_openloop(pattern, rate, weak, strong, prompts, greqs,
+                      embs, cfg, slo_ms=slo, pace=False)
+        openloop[name] = _run_openloop(pattern, rate, weak, strong,
+                                       prompts, greqs, embs, cfg,
+                                       slo_ms=slo)
+        rows.append({"mode": name, **openloop[name]})
     emit(rows)
 
     seq, mb32 = results[1], results[32]
@@ -594,6 +728,25 @@ def main() -> None:
         "fabric_faulty_all_deferred_replayed":
             faulty["probes_deferred"] == faulty["probes_replayed"],
         "fabric_faulty_recovered": faulty["deaths"] == faulty["restarts"],
+        # open-loop admission: batch formation changes with the arrival
+        # process and close rule, but per-stream FIFO on a pinned
+        # replica keeps routing — and therefore strong calls — exactly
+        # the closed-loop fabric run's, at every offered load
+        "openloop_offered_rps": {"lo": round(rate_lo, 2),
+                                 "hi": round(rate_hi, 2)},
+        "openloop_slo_ms": OPENLOOP_SLO_MS,
+        "openloop_strong_calls_match_closed_loop": all(
+            r["strong_calls"] == results[FABRIC_MB]["strong_calls"]
+            for r in openloop.values()),
+        # the SLO close rule's value: queueing-delay p99 at the lo rate
+        # under size-only close (a stream's last stragglers wait out
+        # the whole fill) over p99 with the 60 ms deadline — >1 means
+        # the deadline demonstrably cut the tail at identical load
+        "openloop_slo_close_p99_reduction": round(
+            openloop["openloop_poisson_r4_lo_sizeonly"]
+            ["queue_delay_p99_ms"]
+            / max(openloop["openloop_poisson_r4_lo"]
+                  ["queue_delay_p99_ms"], 1e-9), 2),
     }
     out = os.environ.get("REPRO_BENCH_OUT", "BENCH_rar_throughput.json")
     with open(out, "w") as f:
@@ -618,7 +771,13 @@ def main() -> None:
           f"{report['fabric_faulty_throughput_vs_clean_r4']:.2f}x clean "
           f"throughput, {faulty['deaths']} crash(es) ridden through, "
           f"{faulty['probes_replayed']}/{faulty['probes_deferred']} "
-          f"deferred probes replayed → {out}")
+          f"deferred probes replayed; open-loop r4 at "
+          f"{rate_lo:.0f}/{rate_hi:.0f} rps offered (strong calls "
+          f"match closed loop: "
+          f"{report['openloop_strong_calls_match_closed_loop']}), "
+          f"SLO close cuts queue p99 "
+          f"{report['openloop_slo_close_p99_reduction']:.1f}x vs "
+          f"size-only → {out}")
 
 
 if __name__ == "__main__":

@@ -49,6 +49,38 @@ Architecture (decision core / serve plane / learn plane):
   place — unwrapped histories keep slots/eviction guards exactly,
   wrapped histories linearize oldest-first with a slot remap — and the
   IVF plane re-buckets against the new layout.
+* **Admission / scheduling plane** (:mod:`repro.serving.scheduler` +
+  :mod:`repro.serving.loadgen`) — the open-loop front door above the
+  serve plane, default-off (closed-loop callers keep submitting
+  pre-formed microbatches unchanged). A
+  :class:`~repro.serving.scheduler.ContinuousBatcher` admits *single*
+  requests stamped with arrival time, stream id, priority, and an
+  optional deadline, and forms microbatches under a **size-or-deadline
+  close rule**: a batch closes when it fills to ``microbatch``, or when
+  the *oldest* member's queueing budget — ``deadline_ms`` if stamped,
+  else ``slo_ms / (1 + priority)`` — is about to breach. Formation is
+  **bucket-aware** (one prompt-length bucket per open batch, so a
+  closed batch hits ``ServingEngine.generate_bucketed`` as a single
+  already-grouped bucket instead of fragmenting the jit cache) and
+  **stream-ordered** (a stream switching buckets closes its previous
+  open batch first; each stream pins to one replica), so per-stream
+  FIFO — and therefore routing and strong-call counts — is exactly the
+  closed-loop run's: the arrival clock and close rule move *batch
+  boundaries*, never decisions (pinned in ``tests/test_scheduler.py``
+  for thread and process fabrics alike). The lifecycle is
+  ``arrival → admit → close → dispatch → resolve``: closed batches
+  dispatch into the same ``Ticket``/``submit``/``join`` boundary both
+  fabrics already expose, and per-request latency — admission→dispatch
+  queueing delay and admission→resolve end-to-end — lands in the
+  fabric's :class:`~repro.serving.metrics.MetricsRegistry` histograms
+  (aggregate and per stream, p50/p99 via ``fabric.metrics()``, the
+  serve CLI's ``--metrics-json``/``--metrics-prom``, and the open-loop
+  bench rows). Formation runs in *virtual trace time* — a pure
+  function of the (seedable) arrival trace from
+  :mod:`repro.serving.loadgen` (Poisson, bursty on/off, replayed
+  traces; per-stream rates/priorities) — so every open-loop run is
+  deterministic; wall-clock pacing is a replay option, not an input to
+  formation.
 * **Learn plane** — shadow inference + memory commits, scheduled off the
   serve path by the :class:`repro.core.shadow.ShadowQueue`
   (inline/deferred/async drains, optional near-duplicate coalescing) and

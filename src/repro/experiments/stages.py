@@ -110,6 +110,10 @@ def run_rar_experiment(system: TrainedSystem, pool: list[Sample], *,
                        shadow_flush_every: int | None = None,
                        shadow_dedup_sim: float | None = None,
                        fault_plan=None,
+                       arrival_pattern: str | None = None,
+                       arrival_rate: float = 64.0,
+                       slo_ms: float | None = None,
+                       priorities=None,
                        verbose: bool = False,
                        progress_every: int = 0,
                        metrics_every: int = 0
@@ -168,6 +172,26 @@ def run_rar_experiment(system: TrainedSystem, pool: list[Sample], *,
     crashes, tier outages, drain/WAL faults) for soak and recovery
     experiments. ``None`` (default) is a strict no-op. The resilience
     *response* knobs (retries, breaker, journal) live on ``rar_cfg``.
+
+    ``arrival_pattern``: traffic shape for the serve loop. ``None`` /
+    ``"closed"`` (default) is the closed-loop protocol above:
+    pre-partitioned microbatches, the next one offered when the fabric
+    accepts it. ``"poisson"`` / ``"bursty"`` switch to **open-loop**
+    admission (replicas > 1 only): each stage's requests become a
+    seeded arrival trace (:mod:`repro.serving.loadgen`) with one stream
+    per replica, admitted one by one through a
+    :class:`repro.serving.scheduler.ContinuousBatcher` that forms
+    microbatches with the size-or-deadline close rule. ``arrival_rate``
+    is the aggregate offered load in requests/second (virtual time —
+    batch formation and routing are a pure function of the trace);
+    ``slo_ms`` is the per-request queueing budget driving early closes
+    (``None`` = size-only closes); ``priorities`` is an optional
+    per-stream priority list (cycled across streams; priority ``p``
+    tightens the budget to ``slo_ms / (1 + p)``). Queueing-delay and
+    end-to-end p50/p99 per stream land in the fabric's metrics registry
+    (``sched/...`` names), so ``metrics()`` and ``--metrics-json``
+    surface them. Stage results remain exact: the same stage-end
+    flush barrier runs before tallying.
 
     ``progress_every``: print a throughput/memory-occupancy line every N
     served requests (0 = off). The occupancy read is the controller's
@@ -228,6 +252,18 @@ def run_rar_experiment(system: TrainedSystem, pool: list[Sample], *,
     if transport not in ("thread", "process"):
         raise ValueError(f"unknown transport {transport!r} "
                          "(expected 'thread' or 'process')")
+    open_loop = arrival_pattern not in (None, "closed")
+    if open_loop:
+        if arrival_pattern not in ("poisson", "bursty"):
+            raise ValueError(f"unknown arrival_pattern "
+                             f"{arrival_pattern!r} (expected 'closed', "
+                             f"'poisson' or 'bursty')")
+        if replicas <= 1:
+            raise ValueError("open-loop arrivals admit through the "
+                             "serving fabric; use replicas > 1")
+        if arrival_rate <= 0:
+            raise ValueError(f"arrival_rate={arrival_rate} must be "
+                             f"positive")
     if replicas > 1:
         if prepopulate_from is not None:
             raise ValueError("replicas > 1 is not combinable with "
@@ -337,7 +373,52 @@ def run_rar_experiment(system: TrainedSystem, pool: list[Sample], *,
             elif ok and out.guide_source == "fresh":
                 gfresh += 1
 
-        if replicas > 1:
+        if open_loop:
+            # open-loop admission: this stage's shuffled pool becomes a
+            # seeded arrival trace (one stream per replica, round-robin
+            # shard of the stage order — same shard rule as closed-loop
+            # replica scaling), admitted request-by-request through the
+            # continuous batcher. Formation runs in virtual time, so
+            # routing is a pure function of (order, trace seed).
+            from repro.serving import loadgen
+            from repro.serving.scheduler import serve_trace
+            streams = replicas
+            seqs = [[int(order[p]) for p in range(len(order))
+                     if p % streams == j] for j in range(streams)]
+            counts = [len(s) for s in seqs]
+            gen = (loadgen.poisson_trace if arrival_pattern == "poisson"
+                   else loadgen.bursty_trace)
+            trace = gen(counts, arrival_rate, seed=seed * 10007 + stage,
+                        streams=streams, priorities=priorities)
+            cursors = [0] * streams
+            admitted_keys: list[int] = []
+
+            def make_request(ev):
+                i = seqs[ev.stream][cursors[ev.stream]]
+                cursors[ev.stream] += 1
+                admitted_keys.append(i)
+                return prompts[i], greqs[i], i, embs[i]
+
+            outcomes, batcher = serve_trace(
+                rar, trace, make_request, microbatch=microbatch,
+                slo_ms=slo_ms, replica_fn=lambda s: s % replicas,
+                registry=rar.metrics_registry)
+            # stage-end barrier before tallying, as in every other mode
+            rar.flush_shadow()
+            for i, out in zip(admitted_keys, outcomes):
+                tally(i, out)
+                progress(1)
+                metrics_line(1)
+            if verbose:
+                bs = batcher.stats()
+                reg = rar.metrics_registry.snapshot()
+                qd = reg.get("sched/queue_delay_ms", {})
+                print(f"      [open-loop] {arrival_pattern} "
+                      f"@{arrival_rate:g} req/s, batches {bs['batches']} "
+                      f"(closes {bs['closes']}), queue-delay "
+                      f"p50 {qd.get('p50', 0):.1f} ms / "
+                      f"p99 {qd.get('p99', 0):.1f} ms")
+        elif replicas > 1:
             # dispatch every microbatch to the fabric's replica workers
             # (round-robin, concurrent serving), then one stage-end
             # barrier: all microbatches served, all shadow work drained

@@ -72,6 +72,35 @@ def main() -> None:
                          "identically (requires --router oracle)")
     ap.add_argument("--router", default="oracle",
                     choices=["oracle", "learned"])
+    ap.add_argument("--arrival-pattern", default="closed",
+                    choices=["closed", "poisson", "bursty"],
+                    help="traffic shape: 'closed' (default) offers pre-"
+                         "partitioned microbatches back-to-back; "
+                         "'poisson'/'bursty' switch to open-loop "
+                         "admission (--replicas > 1): each stage's "
+                         "requests become a seeded arrival trace (one "
+                         "stream per replica) admitted one by one "
+                         "through the continuous batcher, which forms "
+                         "microbatches with the size-or-deadline close "
+                         "rule and reports queueing-delay / end-to-end "
+                         "p50/p99 per stream in the metrics registry")
+    ap.add_argument("--arrival-rate", type=float, default=64.0,
+                    help="aggregate offered load in requests/second for "
+                         "open-loop --arrival-pattern (virtual time: "
+                         "the rate shapes batch formation and queueing "
+                         "delay, not wall-clock pacing)")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="per-request queueing-delay budget in ms for "
+                         "open-loop admission: a forming batch closes "
+                         "early when its oldest member's budget is "
+                         "about to breach (priority p tightens the "
+                         "budget to slo/(1+p)); default: size-only "
+                         "closes")
+    ap.add_argument("--priorities", default=None,
+                    help="comma-separated per-stream priorities for "
+                         "open-loop admission, cycled across streams "
+                         "(e.g. '0,1,2'); higher priority = tighter "
+                         "SLO budget. Default: all zero")
     ap.add_argument("--sim-threshold", type=float, default=0.2)
     ap.add_argument("--retrieval-k", type=int, default=1,
                     help="memory entries retrieved per query (one store "
@@ -186,6 +215,11 @@ def main() -> None:
                          "drain cost / commit lag, engine + breaker "
                          "counters, supervision events, drain-policy "
                          "cost model, raw registry) to this JSON file")
+    ap.add_argument("--metrics-prom", default=None,
+                    help="write the final metrics-registry snapshot in "
+                         "Prometheus/OpenMetrics text exposition format "
+                         "to this file (counters/gauges plus summary "
+                         "quantiles for every histogram — scrape-ready)")
     ap.add_argument("--json-out", default=None)
     args = ap.parse_args()
 
@@ -208,6 +242,24 @@ def main() -> None:
         if args.router != "oracle":
             ap.error("--transport process requires --router oracle (the "
                      "learned router is not shipped to worker processes)")
+    priorities = None
+    if args.arrival_pattern != "closed":
+        if args.replicas <= 1:
+            ap.error("--arrival-pattern poisson/bursty admits through "
+                     "the serving fabric; use --replicas > 1")
+        if args.arrival_rate <= 0:
+            ap.error("--arrival-rate must be positive")
+        if args.slo_ms is not None and args.slo_ms <= 0:
+            ap.error("--slo-ms must be positive")
+        if args.priorities:
+            try:
+                priorities = [int(p) for p in args.priorities.split(",")]
+            except ValueError:
+                ap.error(f"--priorities must be comma-separated ints, "
+                         f"got {args.priorities!r}")
+    elif args.priorities or args.slo_ms is not None:
+        ap.error("--priorities/--slo-ms only apply to open-loop "
+                 "--arrival-pattern poisson/bursty")
     cfg = make_rar_config(sim_threshold=args.sim_threshold,
                           retrieval_k=args.retrieval_k,
                           max_guides=args.max_guides,
@@ -232,7 +284,10 @@ def main() -> None:
     results, rar = run_rar_experiment(
         system, pool, n_stages=args.stages, rar_cfg=cfg,
         router_kind=args.router, microbatch=args.microbatch,
-        replicas=args.replicas, transport=args.transport, verbose=True,
+        replicas=args.replicas, transport=args.transport,
+        arrival_pattern=args.arrival_pattern,
+        arrival_rate=args.arrival_rate, slo_ms=args.slo_ms,
+        priorities=priorities, verbose=True,
         progress_every=args.log_every,
         metrics_every=args.metrics_every)
     rar.close_shadow()
@@ -254,6 +309,18 @@ def main() -> None:
         with open(args.metrics_json, "w") as f:
             json.dump(final_metrics, f, indent=1, default=str)
         print(f"[serve] metrics snapshot -> {args.metrics_json}")
+    if args.metrics_prom:
+        registry = getattr(rar, "metrics_registry", None)
+        if registry is None:
+            registry = getattr(getattr(rar, "shadow", None),
+                               "metrics", None)
+        if registry is not None:
+            with open(args.metrics_prom, "w") as f:
+                f.write(registry.to_openmetrics())
+            print(f"[serve] OpenMetrics exposition -> {args.metrics_prom}")
+        else:
+            print("[serve] --metrics-prom skipped: controller exposes "
+                  "no metrics registry")
     if args.json_out:
         with open(args.json_out, "w") as f:
             json.dump([r.__dict__ for r in results], f, indent=1,

@@ -1,16 +1,22 @@
 from repro.serving.engine import ServingEngine, greedy_generate
 
 __all__ = ["ServingEngine", "greedy_generate", "ServingFabric", "Ticket",
-           "ProcessServingFabric", "WorkerDied", "FramedChannel",
-           "ChannelClosed", "FrameCorruption",
+           "QueueLatencyAutoscaler",
+           "ProcessServingFabric", "WorkerDied", "EpochLagDrainPolicy",
+           "FramedChannel", "ChannelClosed", "FrameCorruption",
            "FaultPlan", "FaultSpec", "InjectedFault", "ReplicaCrash",
            "random_plan",
-           "MetricsRegistry", "Counter", "Gauge", "Histogram"]
+           "MetricsRegistry", "Counter", "Gauge", "Histogram",
+           "ContinuousBatcher", "Request", "serve_trace",
+           "ArrivalEvent", "poisson_trace", "bursty_trace", "trace_replay"]
 
 _FAULTS = ("FaultPlan", "FaultSpec", "InjectedFault", "ReplicaCrash",
            "random_plan")
 _TRANSPORT = ("FramedChannel", "ChannelClosed", "FrameCorruption")
 _METRICS = ("MetricsRegistry", "Counter", "Gauge", "Histogram")
+_SCHEDULER = ("ContinuousBatcher", "Request", "serve_trace")
+_LOADGEN = ("ArrivalEvent", "poisson_trace", "bursty_trace",
+            "trace_replay")
 
 
 def __getattr__(name):
@@ -18,10 +24,11 @@ def __getattr__(name):
     # which itself serves through this package's engine — importing them
     # eagerly here would close an import cycle during ``repro.core``'s
     # own initialization
-    if name in ("ServingFabric", "Ticket"):
+    if name in ("ServingFabric", "Ticket", "QueueLatencyAutoscaler"):
         from repro.serving import fabric
         return getattr(fabric, name)
-    if name in ("ProcessServingFabric", "WorkerDied"):
+    if name in ("ProcessServingFabric", "WorkerDied",
+                "EpochLagDrainPolicy"):
         from repro.serving import procfabric
         return getattr(procfabric, name)
     if name in _TRANSPORT:
@@ -33,4 +40,10 @@ def __getattr__(name):
     if name in _METRICS:
         from repro.serving import metrics
         return getattr(metrics, name)
+    if name in _SCHEDULER:
+        from repro.serving import scheduler
+        return getattr(scheduler, name)
+    if name in _LOADGEN:
+        from repro.serving import loadgen
+        return getattr(loadgen, name)
     raise AttributeError(name)

@@ -273,6 +273,9 @@ class ServingFabric:
         # snapshot to a target active-replica count; ``autoscale()``
         # applies it behind a health gate
         self.autoscale_policy = None
+        self.autoscale_ticks = 0   # supervisor ticks that ran autoscale()
+        self._autoscale_thread: threading.Thread | None = None
+        self._autoscale_stop = threading.Event()
         self.spawned = 0       # replicas added by scale-up
         self.retired = 0       # replicas retired by scale-down
         # full-state crash consistency: the fabric-wide engine state
@@ -570,6 +573,7 @@ class ServingFabric:
         leak and a retried close would double-spawn. The flush error
         stays the primary exception; teardown errors surface only when
         the flush itself succeeded."""
+        self.stop_autoscaler()
         try:
             self.flush_shadow()
             self.commit_stream.checkpoint()
@@ -617,6 +621,46 @@ class ServingFabric:
             if any(h == "dead" for h in self.health):
                 return 0
             return self._scale_to_locked(target)
+
+    def start_autoscaler(self, interval_s: float = 1.0,
+                         policy=None) -> None:
+        """Run :meth:`autoscale` on a supervisor tick (daemon thread)
+        every ``interval_s`` seconds until :meth:`stop_autoscaler` or
+        :meth:`close_shadow`. ``policy`` installs a specific policy;
+        with none given and none installed, the default
+        :class:`QueueLatencyAutoscaler` is used — the tick is what
+        turns the policy object into an actual control loop."""
+        if policy is not None:
+            self.set_autoscaler(policy)
+        elif self.autoscale_policy is None:
+            self.set_autoscaler(QueueLatencyAutoscaler())
+        if self._autoscale_thread is not None \
+                and self._autoscale_thread.is_alive():
+            return
+        self._autoscale_stop.clear()
+
+        def tick():
+            while not self._autoscale_stop.wait(interval_s):
+                try:
+                    self.autoscale()
+                except Exception:
+                    # supervision owns replica health; a racing resize
+                    # (e.g. mid-crash-storm) is skipped, not fatal
+                    pass
+                self.autoscale_ticks += 1
+
+        self._autoscale_thread = threading.Thread(
+            target=tick, name="fabric-autoscaler", daemon=True)
+        self._autoscale_thread.start()
+
+    def stop_autoscaler(self) -> None:
+        """Stop the supervisor tick (idempotent; keeps the policy
+        installed for manual :meth:`autoscale` calls)."""
+        self._autoscale_stop.set()
+        t = self._autoscale_thread
+        if t is not None:
+            t.join(timeout=10)
+        self._autoscale_thread = None
 
     def scale_to(self, n: int) -> int:
         """Resize to ``n`` active replicas (spawn or retire); returns
@@ -732,6 +776,12 @@ class ServingFabric:
                                 sum(1 for h in health if h != "retired")},
             "drain_policy": (self.drain_policy.stats()
                              if self.drain_policy is not None else None),
+            "autoscaler": {
+                "ticks": self.autoscale_ticks,
+                "policy": (self.autoscale_policy.stats()
+                           if hasattr(self.autoscale_policy, "stats")
+                           else None),
+            },
             "registry": self.metrics_registry.snapshot(),
         }
         return out
@@ -801,6 +851,93 @@ class ServingFabric:
                         else None),
             "faults": (self.fault_plan.stats()
                        if self.fault_plan is not None else None),
+        }
+
+
+class QueueLatencyAutoscaler:
+    """Default autoscaling policy: queue depth and latency SLO →
+    target active-replica count.
+
+    Consumes one ``fabric.metrics()`` snapshot per call (the contract
+    of :meth:`ServingFabric.set_autoscaler`). Scale **up** one replica
+    when the mean dispatch-queue depth per active replica exceeds
+    ``high_depth``, or — when an SLO is configured and the admission
+    scheduler's queueing-delay histogram has samples — its p99 breaches
+    ``slo_ms``. Scale **down** one replica when depth sits below
+    ``low_depth`` and the p99 (if observable) is comfortably inside the
+    SLO (≤ half). Targets clamp to ``[min_replicas, max_replicas]`` and
+    move one step per tick: resizes are serialized through the fabric's
+    dispatch lock, and a one-step policy cannot oscillate faster than
+    the supervisor tick that drives it.
+    """
+
+    def __init__(self, *, min_replicas: int = 1, max_replicas: int = 8,
+                 slo_ms: float | None = None, high_depth: float = 2.0,
+                 low_depth: float = 0.25,
+                 delay_metric: str = "sched/queue_delay_ms"):
+        if min_replicas < 1 or max_replicas < min_replicas:
+            raise ValueError(
+                f"need 1 <= min_replicas <= max_replicas, got "
+                f"[{min_replicas}, {max_replicas}]")
+        self.min_replicas = min_replicas
+        self.max_replicas = max_replicas
+        self.slo_ms = slo_ms
+        self.high_depth = high_depth
+        self.low_depth = low_depth
+        self.delay_metric = delay_metric
+        self.decisions = 0
+        self.scale_ups = 0
+        self.scale_downs = 0
+        self.last_target = None
+        self.last_depth = None
+        self.last_p99 = None
+
+    def _p99(self, metrics: dict) -> float | None:
+        hist = (metrics.get("registry") or {}).get(self.delay_metric)
+        if isinstance(hist, dict) and hist.get("count", 0) > 0:
+            return hist.get("p99")
+        return None
+
+    def __call__(self, metrics: dict) -> int:
+        sup = metrics.get("supervision", {})
+        active = max(1, sup.get("active_replicas", 1))
+        depth = sum(r.get("queue_depth", 0)
+                    for r in metrics.get("replicas", ())
+                    if r.get("health") != "retired")
+        mean_depth = depth / active
+        p99 = self._p99(metrics)
+        slo_breach = (self.slo_ms is not None and p99 is not None
+                      and p99 > self.slo_ms)
+        target = active
+        if mean_depth > self.high_depth or slo_breach:
+            target = active + 1
+        elif mean_depth < self.low_depth and (
+                self.slo_ms is None or p99 is None
+                or p99 <= self.slo_ms / 2):
+            target = active - 1
+        target = max(self.min_replicas, min(self.max_replicas, target))
+        self.decisions += 1
+        if target > active:
+            self.scale_ups += 1
+        elif target < active:
+            self.scale_downs += 1
+        self.last_target = target
+        self.last_depth = mean_depth
+        self.last_p99 = p99
+        return target
+
+    def stats(self) -> dict:
+        return {
+            "policy": type(self).__name__,
+            "min_replicas": self.min_replicas,
+            "max_replicas": self.max_replicas,
+            "slo_ms": self.slo_ms,
+            "decisions": self.decisions,
+            "scale_ups": self.scale_ups,
+            "scale_downs": self.scale_downs,
+            "last_target": self.last_target,
+            "last_depth": self.last_depth,
+            "last_p99": self.last_p99,
         }
 
 

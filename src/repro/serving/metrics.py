@@ -27,6 +27,7 @@ consumes: the learn replica reads every replica's staleness from here.
 """
 from __future__ import annotations
 
+import re
 import threading
 
 
@@ -180,3 +181,63 @@ class MetricsRegistry:
                 else:
                     out[name] = m.value
             return out
+
+    def to_openmetrics(self) -> str:
+        """Render one consistent snapshot in OpenMetrics / Prometheus
+        text exposition format, scrape-ready:
+
+        - counters → ``# TYPE name counter`` + ``name_total``
+        - gauges → ``# TYPE name gauge`` + ``name``
+        - histograms → ``# TYPE name summary`` with ``quantile="0.5"``
+          / ``quantile="0.99"`` series plus ``name_sum``/``name_count``
+          (the reservoir keeps exact count/total; quantiles are the
+          same nearest-rank values :meth:`Histogram.summary` reports)
+
+        Metric names are sanitized to the OpenMetrics charset (the
+        registry's ``/``-separated paths become ``_``-separated), and
+        the exposition ends with the mandatory ``# EOF`` marker.
+        Rendered under the registry lock — same no-torn-reads guarantee
+        as :meth:`snapshot`.
+        """
+        lines: list[str] = []
+        with self.lock:
+            for name in sorted(self._metrics):
+                m = self._metrics[name]
+                om = _openmetrics_name(name)
+                if isinstance(m, Counter):
+                    lines.append(f"# TYPE {om} counter")
+                    lines.append(f"{om}_total {_fmt(m.value)}")
+                elif isinstance(m, Gauge):
+                    lines.append(f"# TYPE {om} gauge")
+                    lines.append(f"{om} {_fmt(m.value)}")
+                else:
+                    s = m.summary()
+                    lines.append(f"# TYPE {om} summary")
+                    lines.append(
+                        f'{om}{{quantile="0.5"}} {_fmt(s["p50"])}')
+                    lines.append(
+                        f'{om}{{quantile="0.99"}} {_fmt(s["p99"])}')
+                    lines.append(f"{om}_sum {_fmt(s['total'])}")
+                    lines.append(f"{om}_count {s['count']}")
+        lines.append("# EOF")
+        return "\n".join(lines) + "\n"
+
+
+def _openmetrics_name(name: str) -> str:
+    """Map a registry path to the OpenMetrics name charset
+    (``[a-zA-Z_:][a-zA-Z0-9_:]*``)."""
+    om = re.sub(r"[^a-zA-Z0-9_:]", "_", name)
+    if not om or not re.match(r"[a-zA-Z_:]", om[0]):
+        om = "_" + om
+    return om
+
+
+def _fmt(v) -> str:
+    """Render a metric value: ints verbatim, floats via repr (full
+    precision, no scientific-notation surprises for typical ranges)."""
+    if isinstance(v, bool):
+        return str(int(v))
+    if isinstance(v, int):
+        return str(v)
+    f = float(v)
+    return str(int(f)) if f.is_integer() else repr(f)

@@ -101,6 +101,7 @@ import numpy as np
 from repro.core import decisions
 from repro.core import memory as mem
 from repro.core.pipeline import MicrobatchRAR
+from repro.core.shadow import AdaptiveDrainPolicy
 from repro.serving import transport
 from repro.serving.fabric import ServingFabric, Ticket
 from repro.serving.faults import InjectedFault, ReplicaCrash
@@ -350,6 +351,64 @@ class _WorkerHandle:
         #                                reported (via heartbeat)
 
 
+class EpochLagDrainPolicy(AdaptiveDrainPolicy):
+    """Adaptive drain cadence for the process fabric's parent learn
+    plane, driven by the per-worker **commit-epoch lag** the heartbeats
+    already ship (``("hb", seq, epoch)`` → ``_WorkerHandle.epoch``).
+
+    In the process fabric every drain's commits must rebroadcast to the
+    worker mirrors, so the broadcast plane's state is the signal that
+    matters — not just the global pending count the base policy sees:
+
+    - lag ``0`` (every live worker has applied the authoritative
+      epoch): the broadcast plane is idle, a drain ships its epoch at
+      minimum staleness — drain **eagerly**;
+    - lag ``>= defer_lag`` batches behind: workers are still chewing on
+      earlier broadcasts; piling another epoch on the wire only grows
+      the mirror gap — **defer** (the queue-level ``shadow_flush_every``
+      hard cap still bounds staleness independently of this policy);
+    - in between: fall through to the fitted drain-cost model.
+
+    The lag read is a lock-free heuristic over heartbeat state: a torn
+    read can only skew one cadence decision, never correctness — the
+    drain itself serializes on the parent's locks as always.
+    """
+
+    def __init__(self, lag_fn, *, defer_lag: int = 4, **kwargs):
+        super().__init__(**kwargs)
+        if defer_lag < 1:
+            raise ValueError(f"defer_lag must be >= 1, got {defer_lag}")
+        self._lag_fn = lag_fn
+        self.defer_lag = defer_lag
+        self.lag_eager_drains = 0
+        self.lag_deferrals = 0
+
+    def due(self) -> bool:
+        if self.pending_items() == 0:
+            self.decisions += 1
+            return False
+        lag = self._lag_fn()
+        if lag >= self.defer_lag:
+            self.decisions += 1
+            self.lag_deferrals += 1
+            return False
+        if lag == 0:
+            self.decisions += 1
+            self.lag_eager_drains += 1
+            return True
+        return super().due()
+
+    def stats(self) -> dict:
+        s = super().stats()
+        s.update({
+            "worker_epoch_lag": self._lag_fn(),
+            "defer_lag": self.defer_lag,
+            "lag_eager_drains": self.lag_eager_drains,
+            "lag_deferrals": self.lag_deferrals,
+        })
+        return s
+
+
 class ProcessServingFabric(ServingFabric):
     """Process-per-replica fabric (see module doc).
 
@@ -397,6 +456,16 @@ class ProcessServingFabric(ServingFabric):
             shadow_flush_every=1, shadow_dedup_sim=None)
         self.health = ["healthy"] * workers
         self._handles: list[_WorkerHandle] = []
+        if self.cfg.shadow_mode == "adaptive":
+            # the parent learn plane is the only drainer here, and every
+            # drain's commits must rebroadcast to the workers — so the
+            # cadence decision should see the broadcast plane's state
+            # (per-worker commit-epoch lag from heartbeats), not just
+            # the global pending count the thread fabric looks at
+            policy = EpochLagDrainPolicy(self._max_worker_epoch_lag)
+            policy.register(self.learn.shadow)
+            self.learn.shadow.drain_policy = policy
+            self.drain_policy = policy
         self._did = 0                 # dispatch-id allocator
         self._closed = False
         self.commit_stream.ops_listener = self._broadcast_ops
@@ -768,6 +837,18 @@ class ProcessServingFabric(ServingFabric):
         engine = getattr(tier, "engine", None)
         local = getattr(engine, "calls", 0) if engine is not None else 0
         return local + self._remote_engine.get(name, {}).get("calls", 0)
+
+    def _max_worker_epoch_lag(self) -> int:
+        """Worst-case commit-epoch lag across live workers (0 until the
+        first heartbeat reports an epoch). Lock-free: heartbeat state is
+        monotone per worker and a stale read only skews one drain-
+        cadence decision."""
+        epoch = self.commit_stream.buffer.epoch
+        lag = 0
+        for h in self._handles:
+            if h.alive and h.epoch is not None:
+                lag = max(lag, epoch - h.epoch)
+        return lag
 
     def metrics(self) -> dict:
         """Parent-plane metrics plus the worker plane: per-worker health,

@@ -303,3 +303,142 @@ def test_fabric_adaptive_shares_one_policy_across_replicas():
     learn = m["replicas"][0]
     assert learn["items_enqueued"] == learn["items_drained"]
     fab.close_shadow()
+
+
+# ---------------------------------------------------------------------------
+# OpenMetrics text exposition
+# ---------------------------------------------------------------------------
+
+
+def test_to_openmetrics_exposition_format():
+    """Counters render as ``_total``, gauges bare, histograms as
+    summaries with p50/p99 quantile series + ``_sum``/``_count``;
+    registry paths are sanitized to the OpenMetrics charset and the
+    exposition ends with ``# EOF``."""
+    reg = MetricsRegistry()
+    reg.counter("sched/admitted").inc(5)
+    reg.gauge("replica0/shadow/depth_items").set(3)
+    for v in (1.0, 2.0, 3.0, 4.0):
+        reg.histogram("sched/queue_delay_ms").observe(v)
+    text = reg.to_openmetrics()
+    lines = text.splitlines()
+    assert "# TYPE sched_admitted counter" in lines
+    assert "sched_admitted_total 5" in lines
+    assert "# TYPE replica0_shadow_depth_items gauge" in lines
+    assert "replica0_shadow_depth_items 3" in lines
+    assert "# TYPE sched_queue_delay_ms summary" in lines
+    assert 'sched_queue_delay_ms{quantile="0.99"} 4' in lines
+    assert "sched_queue_delay_ms_sum 10" in lines
+    assert "sched_queue_delay_ms_count 4" in lines
+    assert lines[-1] == "# EOF"
+    assert text.endswith("# EOF\n")
+    # every non-comment line is a valid sample of a declared family
+    declared = {ln.split()[2] for ln in lines if ln.startswith("# TYPE")}
+    for ln in lines:
+        if ln.startswith("#"):
+            continue
+        name = ln.split()[0].split("{")[0]
+        base = name
+        for suffix in ("_total", "_sum", "_count"):
+            if name.endswith(suffix):
+                base = name[: -len(suffix)]
+                break
+        assert base in declared, ln
+
+
+def test_to_openmetrics_empty_registry_is_just_eof():
+    assert MetricsRegistry().to_openmetrics() == "# EOF\n"
+
+
+def test_fabric_exports_openmetrics():
+    fab = build_fabric(2, weak_known={0, 1})
+    serve_fabric(fab, make_stream(), 4, submit=True)
+    text = fab.metrics_registry.to_openmetrics()
+    assert "replica0_shadow_items_enqueued_total" in text
+    assert text.endswith("# EOF\n")
+    fab.close_shadow()
+
+
+# ---------------------------------------------------------------------------
+# Default autoscaling policy + supervisor tick
+# ---------------------------------------------------------------------------
+
+
+def _synthetic_metrics(active, depths, p99=None, count=100):
+    m = {
+        "replicas": [{"replica": i, "health": "healthy",
+                      "queue_depth": d} for i, d in enumerate(depths)],
+        "supervision": {"active_replicas": active},
+        "registry": {},
+    }
+    if p99 is not None:
+        m["registry"]["sched/queue_delay_ms"] = {
+            "count": count, "total": p99 * count, "mean": p99,
+            "p50": p99 / 2, "p99": p99}
+    return m
+
+
+def test_queue_latency_autoscaler_policy_decisions():
+    from repro.serving.fabric import QueueLatencyAutoscaler
+    pol = QueueLatencyAutoscaler(min_replicas=1, max_replicas=4,
+                                 slo_ms=50.0)
+    # deep queues: one step up
+    assert pol(_synthetic_metrics(2, [5, 6])) == 3
+    # p99 breach scales up even with shallow queues
+    assert pol(_synthetic_metrics(2, [0, 1], p99=80.0)) == 3
+    # idle + comfortable latency: one step down
+    assert pol(_synthetic_metrics(3, [0, 0, 0], p99=5.0)) == 2
+    # in-band: hold
+    assert pol(_synthetic_metrics(2, [1, 1], p99=30.0)) == 2
+    # clamps
+    assert pol(_synthetic_metrics(1, [0])) == 1
+    assert pol(_synthetic_metrics(4, [9, 9, 9, 9])) == 4
+    # an SLO breach needs samples: an empty histogram never scales up
+    assert pol(_synthetic_metrics(2, [0, 0],
+                                  p99=999.0, count=0)) in (1, 2)
+    s = pol.stats()
+    assert s["decisions"] == 7
+    assert s["scale_ups"] >= 2 and s["scale_downs"] >= 1
+    with pytest.raises(ValueError):
+        QueueLatencyAutoscaler(min_replicas=3, max_replicas=2)
+
+
+def test_autoscaler_latency_signal_without_slo_ignored():
+    from repro.serving.fabric import QueueLatencyAutoscaler
+    pol = QueueLatencyAutoscaler(slo_ms=None)
+    # no SLO: latency can't trigger a scale-up, depth still can
+    assert pol(_synthetic_metrics(2, [0, 0], p99=1e9)) == 1
+    assert pol(_synthetic_metrics(2, [9, 9], p99=0.0)) == 3
+
+
+def test_supervisor_tick_drives_health_gated_autoscale():
+    """``start_autoscaler`` turns the policy object into a control
+    loop: the tick calls ``fabric.autoscale()`` until the target is
+    reached, and ``close_shadow`` stops the thread."""
+    fab = build_fabric(1, weak_known={0, 1})
+    serve_fabric(fab, make_stream(), 4, submit=True)
+    fab.start_autoscaler(interval_s=0.02, policy=lambda m: 3)
+    deadline = time.monotonic() + 10
+    while fab.active_replicas < 3 and time.monotonic() < deadline:
+        time.sleep(0.02)
+    assert fab.active_replicas == 3
+    assert fab.autoscale_ticks >= 1
+    assert fab.metrics()["autoscaler"]["ticks"] >= 1
+    fab.close_shadow()
+    assert fab._autoscale_thread is None
+    # the scaled-up fabric still serves correctly after the tick
+    ticks_at_close = fab.autoscale_ticks
+    time.sleep(0.1)
+    assert fab.autoscale_ticks == ticks_at_close      # really stopped
+
+
+def test_default_policy_installed_by_start_autoscaler():
+    from repro.serving.fabric import QueueLatencyAutoscaler
+    fab = build_fabric(2, weak_known={0, 1})
+    fab.start_autoscaler(interval_s=30.0)
+    assert isinstance(fab.autoscale_policy, QueueLatencyAutoscaler)
+    assert fab.metrics()["autoscaler"]["policy"]["policy"] == \
+        "QueueLatencyAutoscaler"
+    # idle fabric with the default watermarks: scale-down toward min
+    assert fab.autoscale() <= 0
+    fab.close_shadow()

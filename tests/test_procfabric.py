@@ -458,3 +458,83 @@ def test_constructor_validation():
     with pytest.raises(ValueError, match="lease_timeout"):
         ProcessServingFabric(factory, make_cfg(), workers=1,
                              lease_interval=1.0, lease_timeout=0.5)
+
+
+# ---------------------------------------------------------------------------
+# Parent learn-plane drain cadence driven by worker commit-epoch lag
+# ---------------------------------------------------------------------------
+
+
+def test_epoch_lag_drain_policy_decisions():
+    """Unit semantics of the lag-aware cadence: empty queue never
+    drains; lag 0 drains eagerly (broadcast plane idle); lag at/above
+    the defer threshold holds; in between it falls through to the
+    adaptive cost model (cold start: drain)."""
+    from types import SimpleNamespace
+
+    from repro.serving.procfabric import EpochLagDrainPolicy
+
+    lag = {"v": 0}
+    pol = EpochLagDrainPolicy(lambda: lag["v"], defer_lag=4)
+    q = SimpleNamespace(_items=[], _batches=0, items_coalesced=0,
+                        items_drained=0)
+    pol.register(q)
+    assert pol.due() is False                 # nothing pending
+    q._items = [1, 2]
+    assert pol.due() is True                  # lag 0: eager
+    assert pol.lag_eager_drains == 1
+    lag["v"] = 4
+    assert pol.due() is False                 # backed up: defer
+    assert pol.lag_deferrals == 1
+    lag["v"] = 2
+    assert pol.due() is True                  # mid lag: cost model,
+    assert pol.coldstart_drains == 1          # cold start drains
+    s = pol.stats()
+    assert s["worker_epoch_lag"] == 2
+    assert s["defer_lag"] == 4
+    assert s["lag_eager_drains"] == 1 and s["lag_deferrals"] == 1
+    with pytest.raises(ValueError):
+        EpochLagDrainPolicy(lambda: 0, defer_lag=0)
+
+
+def test_proc_adaptive_mode_installs_epoch_lag_policy():
+    """``shadow_mode="adaptive"`` on the process fabric wires the
+    parent learn queue to the lag-aware policy (heartbeat epochs, not
+    just pending count), serving stays exact, and the barrier leaves
+    nothing pending."""
+    from repro.serving.procfabric import EpochLagDrainPolicy
+
+    fab = build_proc(2, weak_known={0, 1}, shadow_mode="adaptive",
+                     shadow_flush_every=4)
+    try:
+        assert isinstance(fab.drain_policy, EpochLagDrainPolicy)
+        assert fab.learn.shadow.drain_policy is fab.drain_policy
+        stream = make_stream()
+        ref, ref_outs = None, None
+        outs = serve_proc(fab, stream, 4)
+        assert all(o.case for o in outs)
+        assert len(outs) == len(stream)
+        learn = fab.metrics()["replicas"][0]
+        assert learn["items_enqueued"] == learn["items_drained"]
+        pol = fab.metrics()["drain_policy"]
+        assert pol["decisions"] > 0
+        assert "worker_epoch_lag" in pol and "lag_eager_drains" in pol
+    finally:
+        fab.close_shadow()
+
+
+def test_proc_adaptive_identical_to_thread_adaptive_outcomes():
+    """The cadence signal changes *when* drains happen, never what they
+    produce: adaptive process fabric matches the threaded closed-loop
+    reference byte-for-byte at the barrier."""
+    stream = make_stream()
+    ref = build_fabric(1, weak_known={0, 1})
+    ref_outs = serve_fabric(ref, stream, 4, submit=True)
+    fab = build_proc(1, weak_known={0, 1}, shadow_mode="adaptive",
+                     shadow_flush_every=4)
+    try:
+        outs = serve_proc(fab, stream, 4)
+        assert_proc_equivalent(ref, ref_outs, fab, outs)
+    finally:
+        fab.close_shadow()
+        ref.close_shadow()
